@@ -1,0 +1,52 @@
+"""Figures 10 & 11: cosine similarity between replicas' outer gradients.
+
+Tracks the mean/std pairwise cosine of the k outer gradients per round
+for i.i.d. vs non-i.i.d. shards and for k=4 vs k=8. Expectations:
+i.i.d. similarity >> non-i.i.d. similarity (Fig 10) and similarity
+decreases with more non-i.i.d. shards (Fig 11)."""
+from __future__ import annotations
+
+import numpy as np
+
+from . import common as C
+
+
+def run(scale: int = 1):
+    p = dict(C.DEFAULTS)
+    rounds = 12 * scale
+    rows = []
+    for regime in ("iid", "non_iid"):
+        arch, loss_fn, base_sampler = C.make_setup(regime, k=8)
+        for k in (4, 8):
+            # fixed 8-shard process regrouped among k workers (k=4
+            # workers each hold a 2-shard mixture -> more similar
+            # outer grads than 8 single-shard workers, as in Fig 11)
+            sampler = base_sampler.regroup(k)
+            params0, pre = C.pretrain(
+                arch, loss_fn, sampler, p["pretrain"], batch=p["batch"],
+                seq=p["seq"], lr=p["inner_lr"], warmup=p["warmup"],
+                total=p["pretrain"] + rounds * p["H"])
+            h, _ = C.run_diloco(arch, loss_fn, sampler, params0, k=k,
+                                H=p["H"], rounds=rounds, step0=pre,
+                                cosine_stats=True, batch=p["batch"],
+                                seq=p["seq"])
+            cs = [r["cos_mean"] for r in h]
+            rows.append(dict(regime=regime, k=k,
+                             cos_mean=float(np.mean(cs)),
+                             cos_last=cs[-1], curve=h))
+    cm = {(r["regime"], r["k"]): r["cos_mean"] for r in rows}
+    payload = {"rows": rows,
+               "claims": {
+                   "iid_more_similar_than_noniid":
+                       cm[("iid", 8)] > cm[("non_iid", 8)],
+                   "more_noniid_shards_less_similar":
+                       cm[("non_iid", 8)] <= cm[("non_iid", 4)] + 0.02}}
+    C.save("fig10_cosine_similarity", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    out = run()
+    for r in out["rows"]:
+        print(f"{r['regime']:8s} k={r['k']} cos_mean={r['cos_mean']:.4f}")
+    print(out["claims"])

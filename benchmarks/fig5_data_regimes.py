@@ -1,0 +1,42 @@
+"""Figure 5: i.i.d. vs non-i.i.d. data regimes.
+
+Expectation: i.i.d. converges faster early, but final generalization is
+comparable — DiLoCo is robust to shard distribution."""
+from __future__ import annotations
+
+from . import common as C
+
+
+def run(scale: int = 1):
+    p = dict(C.DEFAULTS)
+    rounds = 25 * scale
+    rows = []
+    for regime in ("iid", "non_iid"):
+        arch, loss_fn, sampler = C.make_setup(regime, k=p["k"])
+        params0, pre = C.pretrain(
+            arch, loss_fn, sampler, p["pretrain"], batch=p["batch"],
+            seq=p["seq"], lr=p["inner_lr"], warmup=p["warmup"],
+            total=p["pretrain"] + rounds * p["H"])
+        h, _ = C.run_diloco(arch, loss_fn, sampler, params0, k=p["k"],
+                            H=p["H"], rounds=rounds, step0=pre,
+                            batch=p["batch"], seq=p["seq"])
+        rows.append(dict(regime=regime, ppl=C.final_ppl(h), curve=h))
+    ppl = {r["regime"]: r["ppl"] for r in rows}
+    early = {r["regime"]: r["curve"][max(len(r["curve"]) // 5, 1) - 1]
+             ["ppl"] for r in rows}
+    payload = {"rows": rows,
+               "claims": {
+                   "final_generalization_comparable":
+                       abs(ppl["iid"] - ppl["non_iid"])
+                       / ppl["iid"] < 0.08,
+                   "iid_faster_early": early["iid"]
+                       <= early["non_iid"] * 1.05}}
+    C.save("fig5_data_regimes", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    out = run()
+    for r in out["rows"]:
+        print(f"{r['regime']:8s} final ppl={r['ppl']:.3f}")
+    print(out["claims"])

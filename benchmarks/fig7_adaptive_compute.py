@@ -1,0 +1,51 @@
+"""Figure 7: adaptive compute pool.
+
+The number of active replicas varies over training per six schedules.
+Expectation: final quality tracks TOTAL compute, not its allocation in
+time — doubling ~= halving, ramp_up ~= ramp_down."""
+from __future__ import annotations
+
+from . import common as C
+
+SCHEDULES = ["constant_local", "constant_distributed", "doubling",
+             "halving", "ramp_up", "ramp_down"]
+
+
+def run(scale: int = 1):
+    p = dict(C.DEFAULTS)
+    rounds = 20 * scale
+    arch, loss_fn, sampler = C.make_setup("iid", k=p["k"])
+    params0, pre = C.pretrain(arch, loss_fn, sampler, p["pretrain"],
+                              batch=p["batch"], seq=p["seq"],
+                              lr=p["inner_lr"], warmup=p["warmup"],
+                              total=p["pretrain"] + rounds * p["H"])
+    rows = []
+    for sched in SCHEDULES:
+        h, _ = C.run_diloco(arch, loss_fn, sampler, params0, k=p["k"],
+                            H=p["H"], rounds=rounds, step0=pre,
+                            compute_schedule=sched, batch=p["batch"],
+                            seq=p["seq"])
+        rows.append(dict(schedule=sched, ppl=C.final_ppl(h),
+                         total_compute=h[-1]["compute_steps"], curve=h))
+    ppl = {r["schedule"]: r["ppl"] for r in rows}
+    payload = {"rows": rows,
+               "claims": {
+                   "doubling_equals_halving":
+                       abs(ppl["doubling"] - ppl["halving"])
+                       / ppl["halving"] < 0.08,
+                   "ramps_equal":
+                       abs(ppl["ramp_up"] - ppl["ramp_down"])
+                       / ppl["ramp_down"] < 0.08,
+                   "more_total_compute_better":
+                       ppl["constant_distributed"]
+                       < ppl["constant_local"]}}
+    C.save("fig7_adaptive_compute", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    out = run()
+    for r in out["rows"]:
+        print(f"{r['schedule']:22s} compute={r['total_compute']:7d} "
+              f"ppl={r['ppl']:.3f}")
+    print(out["claims"])

@@ -1,0 +1,48 @@
+"""Figure 8: asynchronous communication (dropped outer gradients).
+
+Each replica's outer gradient is dropped with probability p per round;
+a dropped replica continues from its own parameters. Expectation:
+graceful degradation — even 50% drop costs only a few percent PPL
+(paper: +2.1% in the non-i.i.d. setting)."""
+from __future__ import annotations
+
+from . import common as C
+
+DROPS = [0.0, 0.1, 0.3, 0.5]
+
+
+def run(scale: int = 1):
+    p = dict(C.DEFAULTS)
+    rounds = 20 * scale
+    rows = []
+    for regime in ("iid", "non_iid"):
+        arch, loss_fn, sampler = C.make_setup(regime, k=p["k"])
+        params0, pre = C.pretrain(
+            arch, loss_fn, sampler, p["pretrain"], batch=p["batch"],
+            seq=p["seq"], lr=p["inner_lr"], warmup=p["warmup"],
+            total=p["pretrain"] + rounds * p["H"])
+        for dp in DROPS:
+            h, _ = C.run_diloco(arch, loss_fn, sampler, params0,
+                                k=p["k"], H=p["H"], rounds=rounds,
+                                step0=pre, drop_prob=dp,
+                                batch=p["batch"], seq=p["seq"],
+                                eval_every=rounds)
+            rows.append(dict(regime=regime, drop=dp,
+                             ppl=C.final_ppl(h)))
+    ppl = {(r["regime"], r["drop"]): r["ppl"] for r in rows}
+    payload = {"rows": rows,
+               "claims": {
+                   "graceful_50pct_noniid":
+                       ppl[("non_iid", 0.5)] / ppl[("non_iid", 0.0)]
+                       < 1.10,
+                   "graceful_50pct_iid":
+                       ppl[("iid", 0.5)] / ppl[("iid", 0.0)] < 1.10}}
+    C.save("fig8_async_drop", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    out = run()
+    for r in out["rows"]:
+        print(f"{r['regime']:8s} drop={r['drop']:.1f} ppl={r['ppl']:.3f}")
+    print(out["claims"])

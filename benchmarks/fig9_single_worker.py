@@ -1,0 +1,48 @@
+"""Figure 9: accelerating a single worker.
+
+DiLoCo with k=1 (an outer step every H inner steps — a Lookahead-style
+optimizer) vs plain AdamW for the same number of sequential steps, at
+ZERO communication cost.
+
+Micro-scale deviation (measured, recorded): the paper's default outer
+Nesterov (lr=0.7, mu=0.9) amplifies the k=1 delta ~lr/(1-mu)=7x at
+steady state and overshoots on our short, low-noise runs (+11 % PPL);
+with (lr=1.0, mu=0.5) k=1 DiLoCo matches the baseline exactly. The
+paper's *acceleration* needs its long-horizon noisy-SGD regime; the
+claim validated here is the weaker "k=1 costs nothing"."""
+from __future__ import annotations
+
+from . import common as C
+
+
+def run(scale: int = 1):
+    p = dict(C.DEFAULTS)
+    rounds = 30 * scale
+    N = rounds * p["H"]
+    arch, loss_fn, sampler = C.make_setup("iid", k=1)
+    params0, pre = C.pretrain(arch, loss_fn, sampler, p["pretrain"],
+                              batch=p["batch"], seq=p["seq"],
+                              lr=p["inner_lr"], warmup=p["warmup"],
+                              total=p["pretrain"] + N)
+    base, _ = C.run_baseline(arch, loss_fn, sampler, params0, steps=N,
+                             batch=p["batch"], seq=p["seq"], step0=pre,
+                             total=pre + N, eval_every=p["H"])
+    dil, _ = C.run_diloco(arch, loss_fn, sampler, params0, k=1,
+                          H=p["H"], rounds=rounds, step0=pre,
+                          outer_lr=1.0, outer_momentum=0.5,
+                          batch=p["batch"], seq=p["seq"])
+    payload = {"baseline_curve": base, "diloco_k1_curve": dil,
+               "baseline_ppl": C.final_ppl(base),
+               "diloco_k1_ppl": C.final_ppl(dil),
+               "claims": {"k1_at_least_as_good":
+                          C.final_ppl(dil)
+                          <= C.final_ppl(base) * 1.03}}
+    C.save("fig9_single_worker", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    out = run()
+    print(f"baseline ppl={out['baseline_ppl']:.3f}  "
+          f"DiLoCo k=1 ppl={out['diloco_k1_ppl']:.3f}")
+    print(out["claims"])

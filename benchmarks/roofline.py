@@ -1,0 +1,115 @@
+"""Roofline report: aggregates the dry-run JSON records into the
+EXPERIMENTS.md §Roofline table.
+
+Per (arch × shape × mesh × fn): compute/memory/collective terms in
+seconds, the dominant term, MODEL_FLOPS = 6·N_active·D (2·N_active·D
+for inference) and the useful-compute ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "dryrun")
+
+
+def load_records(pattern: str = "*.json", include_opt: bool = True):
+    recs = []
+    dirs = [DRYRUN_DIR]
+    if include_opt:
+        dirs.append(DRYRUN_DIR + "_opt")
+    for d in dirs:
+        for path in sorted(glob.glob(os.path.join(d, pattern))):
+            try:
+                data = json.load(open(path))
+            except Exception:
+                continue
+            for r in data:
+                if "error" in r:
+                    continue
+                r["optimized"] = (d.endswith("_opt")
+                                  or bool(r.get("variant")))
+                recs.append(r)
+    # dedupe on (arch, shape, mesh, fn, variant), keeping the latest
+    seen = {}
+    for r in recs:
+        seen[(r["arch"], r["shape"], r.get("mesh"), r["fn"],
+              str(r.get("variant", {})))] = r
+    return list(seen.values())
+
+
+def one_sentence(rec) -> str:
+    b = rec["roofline"]["bound"]
+    if b == "collective_s":
+        cross = rec["collectives"]["cross_pod_bytes"]
+        if cross and cross > rec["collectives"]["intra_pod_bytes"]:
+            return ("cross-pod traffic dominates - raise H (DiLoCo) or "
+                    "overlap the outer all-reduce")
+        return ("intra-pod collectives dominate - fewer/larger FSDP "
+                "all-gathers (bigger microbatch) or 1D sharding")
+    if b == "memory_s":
+        return ("HBM-bound - fuse optimizer/elementwise passes, cast "
+                "activations to bf16, or raise arithmetic intensity")
+    return "MXU-bound - already near roofline; only algorithmic wins left"
+
+
+def table(recs, *, fns=None) -> str:
+    rows = []
+    head = ("| arch | shape | mesh | fn | cfg | compute_s | memory_s | "
+            "collective_s (x-pod) | bound | MF ratio | next lever |")
+    sep = "|" + "---|" * 11
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"],
+                                         str(r.get("mesh")), r["fn"],
+                                         r.get("optimized", False))):
+        if fns and r["fn"] not in fns:
+            continue
+        t = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('mesh')} | {r['fn']} "
+            f"| {'opt' if r.get('optimized') else 'base'} "
+            f"| {t['compute_s']:.2e} | {t['memory_s']:.2e} "
+            f"| {t['collective_s']:.2e} ({t['collective_cross_s']:.1e}) "
+            f"| {t['bound'].replace('_s', '')} "
+            f"| {t.get('model_flops_ratio', 0):.2f} "
+            f"| {one_sentence(r)} |")
+    return "\n".join([head, sep] + rows)
+
+
+def summary(recs) -> dict:
+    bounds = {}
+    for r in recs:
+        bounds[r["roofline"]["bound"]] = \
+            bounds.get(r["roofline"]["bound"], 0) + 1
+    worst = sorted(
+        (r for r in recs if r["fn"] in ("inner_train_step", "prefill",
+                                        "serve_step")),
+        key=lambda r: r["roofline"].get("model_flops_ratio", 0))
+    return {"n_records": len(recs), "bound_histogram": bounds,
+            "worst_useful_compute": [
+                (r["arch"], r["shape"], r["fn"],
+                 round(r["roofline"].get("model_flops_ratio", 0), 3))
+                for r in worst[:5]]}
+
+
+def run(scale: int = 1):
+    recs = load_records()
+    payload = {"summary": summary(recs),
+               "n_single_pod": sum(1 for r in recs if not r["multi_pod"]),
+               "n_multi_pod": sum(1 for r in recs if r["multi_pod"])}
+    md = table(recs)
+    os.makedirs(os.path.join(DRYRUN_DIR, ".."), exist_ok=True)
+    out_md = os.path.join(DRYRUN_DIR, "..", "roofline_table.md")
+    with open(out_md, "w") as f:
+        f.write(md + "\n")
+    payload["table_path"] = os.path.abspath(out_md)
+    from . import common as C
+    C.save("roofline", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    out = run()
+    print(json.dumps(out["summary"], indent=1))
+    print("table:", out["table_path"])

@@ -1,0 +1,79 @@
+"""Run the full benchmark suite: one module per paper table/figure,
+plus the roofline aggregation over the dry-run records.
+
+  PYTHONPATH=src python -m benchmarks.run [--only NAME] [--scale N]
+
+Each module writes results/bench/<name>.json with a ``claims`` dict of
+named booleans validating the paper's qualitative findings at micro
+scale; this driver prints a pass/fail summary and exits non-zero if a
+claim fails.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+MODULES = [
+    "table2_tradeoffs",       # main result (Fig 2 / Table 2)
+    "fig3_pretraining",
+    "fig4_comm_frequency",
+    "fig5_data_regimes",
+    "fig6_outer_optimizers",
+    "fig7_adaptive_compute",
+    "fig8_async_drop",
+    "fig9_single_worker",
+    "table3_replicas",
+    "table6_pruning",
+    "fig10_cosine_similarity",
+    "beyond_async",           # beyond-paper: async DiLoCo (paper §5)
+    "roofline",               # §Roofline aggregation over dry-run JSON
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default="")
+    ap.add_argument("--scale", type=int, default=1,
+                    help="round multiplier (bigger = closer to paper)")
+    args = ap.parse_args(argv)
+
+    mods = [m for m in MODULES if not args.only or args.only in m]
+    results, failed = {}, []
+    for name in mods:
+        t0 = time.time()
+        print(f"=== {name} ===", flush=True)
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            out = mod.run(args.scale)
+        except Exception:
+            traceback.print_exc()
+            failed.append((name, "exception"))
+            continue
+        claims = out.get("claims", {})
+        for cname, ok in claims.items():
+            if isinstance(ok, bool):
+                flag = "PASS" if ok else "FAIL"
+                if not ok:
+                    failed.append((name, cname))
+                print(f"  [{flag}] {cname}")
+            else:
+                print(f"  [info] {cname} = "
+                      + (f"{ok:.1f}" if isinstance(ok, float) else
+                         str(ok)))
+        results[name] = claims
+        print(f"  ({time.time() - t0:.1f}s)", flush=True)
+
+    print("\n=== SUMMARY ===")
+    n_claims = sum(len(c) for c in results.values())
+    print(f"{len(results)}/{len(mods)} benchmarks ran, "
+          f"{n_claims} claims checked, {len(failed)} failed")
+    for name, cname in failed:
+        print(f"  FAILED: {name} :: {cname}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,50 @@
+"""Continuous-batching serving demo (beyond-paper).
+
+Eight requests with different prompt/generation lengths stream through
+a 3-slot engine: finished slots refill immediately (vLLM-style), one
+batched decode per tick, and every request's tokens are bit-identical
+to running it alone (shared-clock RoPE alignment — see
+launch/batching.py).
+
+  PYTHONPATH=src python examples/continuous_batching.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.launch.batching import ContinuousBatcher
+from repro.models.registry import get_smoke_arch
+
+arch = get_smoke_arch("qwen3_32b")
+params, _ = arch.init(jax.random.PRNGKey(0), arch.cfg)
+eng = ContinuousBatcher(arch, params, slots=3, cache_len=128)
+
+rng = np.random.default_rng(0)
+reqs = []
+for i in range(8):
+    L = int(rng.integers(4, 24))
+    gen = int(rng.integers(4, 16))
+    rid = eng.submit(rng.integers(0, arch.cfg.vocab_size, L), gen)
+    reqs.append((rid, L, gen))
+    print(f"submitted rid={rid} prompt={L} gen={gen}")
+
+t0 = time.time()
+ticks = 0
+while eng.queue or any(r is not None for r in eng.active):
+    eng.tick()
+    ticks += 1
+    if ticks % 5 == 0:
+        print(f"tick {ticks:3d}: utilization {eng.utilization:.0%}, "
+              f"{len(eng.finished)}/8 done")
+out = eng.finished
+dt = time.time() - t0
+total = sum(len(v) for v in out.values())
+print(f"\n{len(out)} requests, {total} tokens in {ticks} ticks "
+      f"({dt:.1f}s incl. compiles)")
+serial_ticks = sum(g for _, _, g in reqs)
+print(f"serial decode would take {serial_ticks} ticks -> continuous "
+      f"batching gave {serial_ticks / ticks:.1f}x tick-level speedup "
+      f"on 3 slots")
+for rid, L, gen in reqs:
+    print(f"  rid={rid}: {out[rid][:8]}{'...' if gen > 8 else ''}")

@@ -1,0 +1,48 @@
+"""Quickstart: DiLoCo in ~40 lines with the public API.
+
+Trains a small transformer with 4 DiLoCo replicas on non-i.i.d. shards
+and compares against its starting point. Runs in ~1 minute on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DiLoCoConfig, TrainConfig
+from repro.core import diloco
+from repro.data.sharding import make_regime
+from repro.models.registry import get_smoke_arch
+
+# 1. a model (any of the 13 registered architectures; smoke = reduced)
+arch = get_smoke_arch("diloco_150m")
+loss_fn = lambda p, b: arch.loss(p, b)
+params, _ = arch.init(jax.random.PRNGKey(0), arch.cfg)
+
+# 2. data: k shards with distinct distributions (the hard, non-i.i.d.
+#    regime the paper defaults to)
+K, H, ROUNDS = 4, 10, 8
+sampler = make_regime("non_iid", k=K, vocab_size=arch.cfg.vocab_size)
+
+# 3. DiLoCo: inner AdamW, outer Nesterov (paper defaults)
+dcfg = DiLoCoConfig(k=K, H=H)           # outer: Nesterov lr=0.7 mu=0.9
+tcfg = TrainConfig(inner_lr=3e-3, warmup_steps=10,
+                   total_steps=ROUNDS * H, batch_size=8, seq_len=64)
+state = diloco.init_state(params, dcfg)
+round_fn = diloco.make_round(loss_fn, sampler.sample_all_shards, dcfg,
+                             tcfg, batch_size=8, seq_len=64)
+
+# 4. train: ONE cross-replica communication per round (every H steps)
+evaluate = diloco.make_eval(loss_fn)
+val = sampler.sample_validation(jax.random.PRNGKey(42), 64, 64)
+print(f"start: val ppl = {np.exp(float(evaluate(params, val))):.1f} "
+      f"(entropy floor {np.exp(sampler.entropy_floor()):.1f})")
+key = jax.random.PRNGKey(1)
+for t in range(ROUNDS):
+    key, sub = jax.random.split(key)
+    state, metrics = round_fn(state, sub)
+    ppl = np.exp(float(evaluate(state.global_params, val)))
+    print(f"round {t + 1}: inner loss {float(metrics['inner_loss']):.3f}"
+          f"  val ppl {ppl:.1f}")
+print("each round ran", K, "replicas x", H, "AdamW steps with a single",
+      "outer all-reduce - communication reduced", H, "x vs sync DDP")

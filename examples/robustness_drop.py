@@ -1,0 +1,51 @@
+"""Robustness scenario: unreliable workers + elastic compute pool.
+
+Simulates the paper's two operational studies together:
+  * every round, each island's outer gradient is dropped with 30%
+    probability (network failure / preemption — Fig 8);
+  * halfway through, the pool doubles from 4 to 8 islands (Fig 7).
+
+Shows training proceeds smoothly through both events.
+
+  PYTHONPATH=src python examples/robustness_drop.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DiLoCoConfig, TrainConfig
+from repro.core import diloco, schedules
+from repro.data.sharding import make_regime
+from repro.models.registry import get_smoke_arch
+
+K, H, ROUNDS, DROP = 8, 10, 12, 0.3
+arch = get_smoke_arch("diloco_60m")
+loss_fn = lambda p, b: arch.loss(p, b)
+params, _ = arch.init(jax.random.PRNGKey(0), arch.cfg)
+sampler = make_regime("non_iid", k=K, vocab_size=arch.cfg.vocab_size)
+
+dcfg = DiLoCoConfig(k=K, H=H, drop_prob=DROP)
+tcfg = TrainConfig(inner_lr=3e-3, warmup_steps=10,
+                   total_steps=ROUNDS * H, batch_size=8, seq_len=64)
+state = diloco.init_state(params, dcfg)
+round_fn = diloco.make_round(loss_fn, sampler.sample_all_shards, dcfg,
+                             tcfg, batch_size=8, seq_len=64)
+evaluate = diloco.make_eval(loss_fn)
+val = sampler.sample_validation(jax.random.PRNGKey(42), 64, 64)
+
+rng = np.random.default_rng(0)
+drops = schedules.drop_masks(rng, DROP, K, ROUNDS)
+key = jax.random.PRNGKey(1)
+for t in range(ROUNDS):
+    # elastic pool: 4 islands for the first half, 8 after
+    n_active = 4 if t < ROUNDS // 2 else 8
+    act = jnp.asarray(schedules.active_mask(n_active, K))
+    key, sub = jax.random.split(key)
+    state, m = round_fn(state, sub, jnp.asarray(drops[t]), act)
+    ppl = np.exp(float(evaluate(state.global_params, val)))
+    dropped = int(K - drops[t].sum())
+    print(f"round {t + 1:2d}: {n_active} islands active, "
+          f"{dropped} outer-grad(s) dropped -> val ppl {ppl:.1f}")
+print("\nno round failed: dropped islands kept training from their own "
+      "params;\nnew islands joined from the global copy (Fig 7+8 "
+      "semantics).")

@@ -1,0 +1,71 @@
+"""Serving scenario: batched generation from a DiLoCo-trained model.
+
+Trains briefly with DiLoCo, checkpoints the global params, restores
+them in a "server" and decodes a batch of prompts — demonstrating the
+paper's inference-time claim: the DiLoCo model is a perfectly ordinary
+checkpoint (same size/speed as synchronous training would produce).
+
+Works with any registered architecture (--arch zamba2_2_7b serves the
+hybrid SSM; --arch whisper_large_v3 the encoder-decoder, etc.).
+
+  PYTHONPATH=src python examples/serve_checkpoint.py [--arch ID]
+"""
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import DiLoCoConfig, TrainConfig
+from repro.core import diloco
+from repro.data.sharding import make_regime
+from repro.launch.serve import greedy_decode
+from repro.models.registry import get_smoke_arch
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="stablelm_1_6b")
+ap.add_argument("--rounds", type=int, default=4)
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--gen", type=int, default=16)
+args = ap.parse_args()
+
+arch = get_smoke_arch(args.arch)
+cfg = arch.cfg
+loss_fn = lambda p, b: arch.loss(p, b)
+params, _ = arch.init(jax.random.PRNGKey(0), cfg)
+sampler = make_regime("iid", k=4, vocab_size=cfg.vocab_size)
+
+# --- train a little with DiLoCo and checkpoint the global copy ---
+dcfg = DiLoCoConfig(k=4, H=10)
+tcfg = TrainConfig(inner_lr=3e-3, warmup_steps=10, total_steps=40,
+                   batch_size=8, seq_len=64)
+state = diloco.init_state(params, dcfg)
+rnd = diloco.make_round(loss_fn, sampler.sample_all_shards, dcfg, tcfg,
+                        batch_size=8, seq_len=64)
+key = jax.random.PRNGKey(1)
+for t in range(args.rounds):
+    key, sub = jax.random.split(key)
+    state, m = rnd(state, sub)
+    print(f"train round {t + 1}: inner {float(m['inner_loss']):.3f}")
+path = "/tmp/diloco_serve_ckpt.npz"
+ckpt.save(path, {"params": state.global_params})
+print("saved", path)
+
+# --- "server": restore and decode a batch ---
+like = {"params": jax.tree.map(jnp.zeros_like, state.global_params)}
+served = ckpt.restore(path, like)["params"]
+prompts = sampler.sample_validation(jax.random.PRNGKey(7), args.batch,
+                                    32)
+extra = {}
+if cfg.family == "vlm":
+    extra["patches"] = 0.1 * jax.random.normal(
+        jax.random.PRNGKey(8), (args.batch, cfg.n_patches, cfg.d_model))
+if cfg.family == "encdec":
+    extra["frames"] = 0.1 * jax.random.normal(
+        jax.random.PRNGKey(8), (args.batch, cfg.n_frames, cfg.d_model))
+toks = greedy_decode(arch, served, prompts, gen=args.gen, extra=extra)
+print(f"decoded {args.batch}x{args.gen} tokens from the restored "
+      f"checkpoint ({cfg.name}):")
+print(np.asarray(toks))

@@ -1,0 +1,79 @@
+"""Tree checkpointing: flat-key npz arrays + json metadata.
+
+Supports saving/restoring arbitrary pytrees of arrays (params, optimizer
+states, DiLoCo state) with structure recovered from a like-structured
+example tree. Writes are atomic (tmp + rename).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "//"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(_path_str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save(path: str, tree, metadata: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten(tree)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
+                               suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    if metadata is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(metadata, f, indent=2, default=str)
+
+
+def restore(path: str, example_tree):
+    """Restore into the structure of ``example_tree``."""
+    with np.load(path) as data:
+        flat_example, treedef = jax.tree_util.tree_flatten_with_path(
+            example_tree)
+        leaves = []
+        for p, ex in flat_example:
+            key = _SEP.join(_path_str(q) for q in p)
+            if key not in data:
+                raise KeyError(f"checkpoint missing key {key!r}")
+            arr = data[key]
+            if tuple(arr.shape) != tuple(np.shape(ex)):
+                raise ValueError(
+                    f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                    f"example {np.shape(ex)}")
+            leaves.append(jnp.asarray(arr, dtype=ex.dtype
+                                      if hasattr(ex, "dtype") else None))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_metadata(path: str) -> dict:
+    with open(path + ".meta.json") as f:
+        return json.load(f)

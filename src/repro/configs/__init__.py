@@ -1,0 +1,2 @@
+from .base import (ModelConfig, ShapeConfig, SHAPES, DiLoCoConfig,
+                   TrainConfig, LONG_CONTEXT_WINDOW)

@@ -1,0 +1,142 @@
+"""Config system: model architecture, input shapes, DiLoCo, training."""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | encdec | vlm | hybrid | ssm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0           # 0 -> d_model // n_heads
+
+    # --- attention ---
+    pos_emb: str = "rope"       # rope | learned | sincos | none
+    rope_theta: float = 10_000.0
+    rope_pct: float = 1.0       # fraction of head_dim rotated
+    qk_norm: bool = False
+    attn_bias: bool = False
+    mlp_bias: bool = False
+    parallel_block: bool = False  # command-r style (attn & mlp share input)
+    window: int = 0             # >0: sliding-window attention
+    norm: str = "rmsnorm"       # rmsnorm | layernorm
+    act: str = "silu"           # silu | gelu
+    mlp_gated: bool = True
+    tie_embeddings: bool = False
+    max_position: int = 1 << 20
+
+    # --- MoE ---
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0           # per-expert hidden dim
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+
+    # --- MLA (DeepSeek-V2) ---
+    mla: bool = False
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    rope_head_dim: int = 64
+    v_head_dim: int = 0         # 0 -> head_dim
+
+    # --- encoder-decoder (whisper) ---
+    n_enc_layers: int = 0
+    n_frames: int = 1500        # stubbed audio frontend output length
+
+    # --- VLM ---
+    cross_attn_every: int = 0   # every Nth layer is a cross-attn layer
+    n_patches: int = 0          # stubbed vision frontend output length
+    vision_dim: int = 0         # 0 -> d_model (projector stubbed)
+
+    # --- SSM / hybrid ---
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    ssm_conv: int = 4
+    shared_attn_every: int = 0  # zamba2: shared attn block every N layers
+    slstm_every: int = 0        # xlstm: every Nth block is sLSTM
+
+    # --- numerics / execution ---
+    act_batch_axes: tuple = ("data",)   # mesh axes carrying the batch
+    act_model_shard: bool = True        # residual d_model over "model"
+    act_seq_shard: bool = False         # Megatron SP: residual seq dim
+    decode_kv_shard: str = ""           # flash-decoding axis for caches
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    attn_chunk: int = 1024      # kv-chunk size of online-softmax attention
+    remat: bool = True
+    logit_softcap: float = 0.0
+    init_scale: float = 0.02
+    use_pallas: bool = False    # use Pallas kernels (TPU) instead of jnp ref
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def resolved_v_head_dim(self) -> int:
+        return self.v_head_dim or self.resolved_head_dim
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # train | prefill | decode
+
+
+# The four assigned input shapes.
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+# Sliding window used by full-attention archs for long_500k.
+LONG_CONTEXT_WINDOW = 4_096
+
+
+@dataclass(frozen=True)
+class DiLoCoConfig:
+    """Algorithm 1 hyper-parameters (paper defaults in comments)."""
+    k: int = 8                  # number of replicas / islands
+    H: int = 500                # inner steps per outer step
+    outer_opt: str = "nesterov"  # nesterov | sgd | sgdm | adam
+    outer_lr: float = 0.7       # paper: 0.7 for Nesterov
+    outer_momentum: float = 0.9
+    outer_adam_b2: float = 0.95
+    outer_adam_eps: float = 0.1  # paper: raised to 0.1 for stability
+    drop_prob: float = 0.0      # async-communication dropout (Fig 8)
+    prune_frac: float = 0.0     # sign-pruning of outer grads (Tab 6)
+    weighted_avg: bool = False  # weight outer grads by shard size
+    sync_inner_state: bool = False  # paper: False (3x comm for no gain)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    inner_lr: float = 4e-4      # paper Table 5
+    warmup_steps: int = 1_000
+    total_steps: int = 88_000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    batch_size: int = 512       # per-replica batch (paper)
+    seq_len: int = 1_024
+    pretrain_steps: int = 24_000
+    seed: int = 0

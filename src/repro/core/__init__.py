@@ -1,0 +1,8 @@
+"""DiLoCo — the paper's primary contribution.
+
+diloco.py       Algorithm 1 (inner AdamW phases + outer Nesterov step)
+outer_opt.py    outer optimizers (Nesterov / SGD / SGDM / Adam)
+compression.py  per-neuron sign pruning of outer gradients (Table 6)
+schedules.py    adaptive compute pool & communication-drop schedules
+"""
+from . import compression, diloco, outer_opt, schedules  # noqa: F401

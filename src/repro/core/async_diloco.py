@@ -1,0 +1,141 @@
+"""Asynchronous DiLoCo — the paper's stated future work (§5, third
+limitation): "extend DiLoCo to the asynchronous setting, whereby
+workers update the global parameter without ever waiting for any other
+worker."
+
+Design (beyond-paper, kept deliberately close to Algorithm 1):
+
+* Workers are heterogeneous: worker i takes ``speed_i`` rounds of
+  wall-clock to finish its H inner steps (speed 1 = fastest).
+* A parameter server holds the global copy θ and the outer-optimizer
+  state. Whenever ANY worker finishes, its outer gradient
+  Δ_i = θ^(dispatch) − θ_i is applied IMMEDIATELY — no barrier — at
+  weight λ^τ / k: the 1/k is each worker's share of a round's evidence
+  (synchronous DiLoCo averages k deltas; applying each at full weight
+  over-steps k-fold), and λ^τ (τ = outer steps since dispatch) is the
+  staleness discount for delay compensation.
+* With all speeds equal and λ=1 a tick applies the same total update
+  mass as one synchronous round (k deltas × 1/k), just sequentially
+  through the momentum buffer (tested).
+
+This module simulates the asynchrony on one host with a wall-clock
+tick loop; the collective structure matches the sharded deployment
+(each application is a single pod→global transfer of one outer
+gradient — even less coupled than synchronous DiLoCo's all-reduce).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DiLoCoConfig, TrainConfig
+from repro.optim import adamw
+from . import diloco, outer_opt
+
+
+@dataclass
+class AsyncConfig:
+    k: int = 8
+    H: int = 10
+    outer_lr: float = 0.7
+    outer_momentum: float = 0.9
+    staleness_lambda: float = 0.7   # discount per outer step of delay
+    speeds: tuple = ()              # rounds per phase, len k (default 1s)
+
+
+@dataclass
+class _Worker:
+    params: Any
+    opt: Any
+    dispatched_version: int         # outer step count at dispatch
+    finish_tick: int                # wall-clock tick when phase completes
+
+
+def run_async(loss_fn: Callable, sample_fn: Callable, params0,
+              acfg: AsyncConfig, tcfg: TrainConfig, *, ticks: int,
+              eval_fn=None, eval_tokens=None, seed: int = 0):
+    """Simulate ``ticks`` wall-clock units; one tick = the fastest
+    worker's phase time. Returns (global_params, history)."""
+    k = acfg.k
+    speeds = list(acfg.speeds) or [1] * k
+    assert len(speeds) == k
+    inner_step = diloco.make_inner_step(loss_fn, tcfg,
+                                        total_steps=tcfg.total_steps)
+
+    @jax.jit
+    def run_phase(params, opt, key, step0):
+        def body(carry, h):
+            p, o = carry
+            batch = {"tokens": sample_fn(jax.random.fold_in(key, h),
+                                         tcfg.batch_size, tcfg.seq_len)}
+            p, o, m = inner_step(p, o, batch, step0 + h)
+            return (p, o), m["loss"]
+
+        (params, opt), losses = jax.lax.scan(
+            body, (params, opt), jnp.arange(acfg.H))
+        return params, opt, losses.mean()
+
+    @jax.jit
+    def apply_outer(global_params, buf, worker_params, dispatch_theta,
+                    weight):
+        delta = jax.tree.map(lambda d0, wi: (d0 - wi) * weight,
+                             dispatch_theta, worker_params)
+        new_buf = jax.tree.map(
+            lambda b, d: acfg.outer_momentum * b + d, buf, delta)
+        new_global = jax.tree.map(
+            lambda p, b, d: p - acfg.outer_lr
+            * (acfg.outer_momentum * b + d),
+            global_params, new_buf, delta)
+        return new_global, new_buf
+
+    global_params = params0
+    buf = jax.tree.map(jnp.zeros_like, params0)
+    theta_at = {0: params0}            # dispatch-version -> θ snapshot
+    version = 0
+    inner_done = 0
+    key = jax.random.PRNGKey(seed)
+
+    workers = []
+    for i in range(k):
+        workers.append(_Worker(params=params0,
+                               opt=adamw.init(params0),
+                               dispatched_version=0,
+                               finish_tick=speeds[i]))
+
+    history = []
+    for tick in range(1, ticks + 1):
+        order = [i for i in range(k) if workers[i].finish_tick == tick]
+        for i in order:
+            w = workers[i]
+            key, sub = jax.random.split(key)
+            new_p, new_opt, mloss = run_phase(
+                w.params, w.opt, sub, jnp.asarray(inner_done))
+            inner_done += acfg.H
+            staleness = version - w.dispatched_version
+            weight = (acfg.staleness_lambda ** staleness) / k
+            global_params, buf = apply_outer(
+                global_params, buf, new_p,
+                theta_at[w.dispatched_version],
+                jnp.asarray(weight, jnp.float32))
+            version += 1
+            theta_at[version] = global_params
+            # prune old snapshots
+            live = {ww.dispatched_version for ww in workers} | {version}
+            theta_at = {v: t for v, t in theta_at.items() if v in live}
+            # re-dispatch from the fresh global copy
+            workers[i] = _Worker(params=global_params, opt=new_opt,
+                                 dispatched_version=version,
+                                 finish_tick=tick + speeds[i])
+            rec = {"tick": tick, "worker": i, "staleness": staleness,
+                   "weight": float(weight), "version": version,
+                   "inner_loss": float(mloss)}
+            if eval_fn is not None and eval_tokens is not None:
+                rec["val_loss"] = float(eval_fn(global_params,
+                                                eval_tokens))
+                rec["ppl"] = float(np.exp(rec["val_loss"]))
+            history.append(rec)
+    return global_params, history

@@ -1,0 +1,292 @@
+"""DiLoCo (Algorithm 1): Distributed Low-Communication training.
+
+Two optimization processes:
+  * inner — every replica independently runs H steps of AdamW on its own
+    data shard (no cross-replica communication);
+  * outer — every H steps the per-replica parameter deltas
+    Δ_i = θ^(t-1) − θ_i^(t) are averaged (the only cross-replica
+    collective) and applied by an outer optimizer (Nesterov by default)
+    to the global parameter copy, which is then re-dispatched.
+
+The k replicas are carried *stacked* on a leading (k, ...) axis of every
+parameter/optimizer leaf, and the inner step is ``vmap``-ed over that
+axis. This one formulation serves both execution modes:
+
+  * CPU / single host: vmap runs the k replicas as a batch dimension —
+    the benchmark path used to reproduce the paper's figures;
+  * TPU multi-pod: the leading axis is sharded over the mesh's "pod"
+    axis (one replica per pod). GSPMD partitions the vmap so the inner
+    step contains *zero* cross-pod collectives (verified structurally in
+    the dry-run) while the outer step's replica-mean lowers to exactly
+    one all-reduce over "pod" of model-size bytes — fired once every H
+    steps, the paper's communication reduction.
+
+Robustness features from the paper are first-class:
+  * ``drop_mask`` (Fig 8) — replicas whose outer gradient is dropped keep
+    training from their *own* parameters instead of the global copy;
+  * ``active_mask`` (Fig 7, adaptive compute) — inactive replicas are
+    parked on the global copy and excluded from the average;
+  * ``prune_frac`` (Tab 6) — sign-consistent magnitude pruning of outer
+    gradients before averaging (see ``core/compression.py``);
+  * ``weights`` — shard-size-weighted averaging for imbalanced
+    non-i.i.d. shards (paper §6.1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DiLoCoConfig, TrainConfig
+from repro.optim import adamw
+from repro.optim.schedule import make_warmup_cosine
+from . import outer_opt
+from .compression import sign_prune
+
+
+class DiLoCoState(NamedTuple):
+    """Carried across rounds. replica_* leaves have a leading (k,) axis."""
+    global_params: Any            # θ^(t-1), the shared copy
+    outer_state: outer_opt.OuterState
+    replica_params: Any           # (k, ...) per-replica θ_i
+    inner_state: adamw.AdamWState  # (k, ...) per-replica AdamW m/v/count
+    outer_t: jnp.ndarray          # outer step counter t
+    inner_steps_done: jnp.ndarray  # per-replica scalar (shared schedule)
+
+
+def broadcast_replicas(tree, k: int):
+    return jax.tree.map(
+        lambda p: jnp.broadcast_to(p, (k,) + p.shape).copy(), tree)
+
+
+def init_state(params, dcfg: DiLoCoConfig) -> DiLoCoState:
+    """Start DiLoCo from (possibly pretrained) ``params``."""
+    rep = broadcast_replicas(params, dcfg.k)
+    return DiLoCoState(
+        global_params=params,
+        outer_state=outer_opt.init(params),
+        replica_params=rep,
+        inner_state=jax.vmap(adamw.init)(rep),
+        outer_t=jnp.zeros((), jnp.int32),
+        inner_steps_done=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# inner optimization (lines 4-9)
+# ---------------------------------------------------------------------------
+
+def make_inner_step(loss_fn: Callable, tcfg: TrainConfig,
+                    total_steps: int | None = None):
+    """One AdamW step for ONE replica. loss_fn(params, batch) ->
+    (loss, metrics). Returns step(params, opt_state, batch, step_idx)."""
+    sched = make_warmup_cosine(tcfg.inner_lr, tcfg.warmup_steps,
+                               total_steps or tcfg.total_steps)
+
+    def step(params, opt_state, batch, step_idx):
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        grads, gnorm = adamw.clip_by_global_norm(grads, tcfg.grad_clip)
+        lr = sched(step_idx)
+        params, opt_state = adamw.update(
+            grads, opt_state, params, lr=lr, b1=tcfg.b1, b2=tcfg.b2,
+            eps=tcfg.eps, weight_decay=tcfg.weight_decay)
+        return params, opt_state, {"loss": loss, "gnorm": gnorm, "lr": lr}
+
+    return step
+
+
+def inner_phase(inner_step, replica_params, inner_state, batches,
+                step0, *, active_mask=None):
+    """H inner steps for all k replicas (vmap over k, scan over H).
+
+    batches: tokens (k, H, B, S) or a dict of such; step0: scalar global
+    inner-step index of the phase start (for the shared lr schedule).
+    ``active_mask`` (k,) float — inactive replicas keep params unchanged
+    (adaptive compute pool; they burn no "real" compute on hardware
+    because their island simply isn't there).
+    Returns (replica_params, inner_state, metrics (k, H) dict).
+    """
+    def one_replica(params, opt_state, batches_h, active):
+        def body(carry, xs):
+            p, s = carry
+            batch, h = xs
+            p2, s2, m = inner_step(p, s, batch, step0 + h)
+            p2 = jax.tree.map(lambda a, b: jnp.where(active > 0, a, b),
+                              p2, p)
+            s2 = jax.tree.map(lambda a, b: jnp.where(active > 0, a, b),
+                              s2, s)
+            return (p2, s2), m
+
+        H = jax.tree.leaves(batches_h)[0].shape[0]
+        (params, opt_state), ms = jax.lax.scan(
+            body, (params, opt_state), (batches_h, jnp.arange(H)))
+        return params, opt_state, ms
+
+    k = jax.tree.leaves(replica_params)[0].shape[0]
+    if active_mask is None:
+        active_mask = jnp.ones((k,), jnp.float32)
+    return jax.vmap(one_replica)(replica_params, inner_state, batches,
+                                 active_mask)
+
+
+# ---------------------------------------------------------------------------
+# outer optimization (lines 11-14)
+# ---------------------------------------------------------------------------
+
+def outer_step(state: DiLoCoState, dcfg: DiLoCoConfig, *,
+               drop_mask=None, active_mask=None, weights=None,
+               compute_cosine: bool = False):
+    """Average outer gradients and update the global copy.
+
+    drop_mask (k,) float: 1 = outer grad communicated, 0 = dropped
+    (replica keeps its own params for the next phase — Fig 8 semantics).
+    active_mask (k,) float: 0 = replica not part of the pool this round.
+    weights (k,) float: shard-size weights (uniform if None).
+    Returns (new_state, metrics).
+    """
+    k = dcfg.k
+    ones = jnp.ones((k,), jnp.float32)
+    drop_mask = ones if drop_mask is None else drop_mask
+    active_mask = ones if active_mask is None else active_mask
+    weights = ones if weights is None else weights
+    m = drop_mask * active_mask * weights                     # (k,)
+    denom = jnp.maximum(m.sum(), 1e-9)
+
+    # Δ_i = θ^(t-1) − θ_i^(t)   (line 12)
+    deltas = jax.tree.map(lambda g, r: g[None] - r,
+                          state.global_params, state.replica_params)
+    if dcfg.prune_frac > 0:
+        deltas = jax.vmap(lambda d: sign_prune(d, dcfg.prune_frac))(deltas)
+
+    # weighted average over communicating replicas. On the pod-sharded
+    # path this contraction is THE cross-pod all-reduce.
+    avg = jax.tree.map(
+        lambda d: jnp.tensordot(m, d, axes=(0, 0)) / denom, deltas)
+
+    new_global, new_outer = outer_opt.update(
+        avg, state.outer_state, state.global_params,
+        kind=dcfg.outer_opt, lr=dcfg.outer_lr,
+        momentum=dcfg.outer_momentum, b2=dcfg.outer_adam_b2,
+        eps=dcfg.outer_adam_eps)
+
+    # re-dispatch (line 3 of next phase): communicated & active replicas
+    # adopt θ^(t); dropped replicas continue from their own θ_i; inactive
+    # replicas park on θ^(t) (they'll be reset when re-activated anyway).
+    adopt = jnp.maximum(drop_mask, 1.0 - active_mask)         # (k,)
+    new_replicas = jax.tree.map(
+        lambda g, r: jnp.where(
+            adopt.reshape((k,) + (1,) * g.ndim) > 0, g[None], r),
+        new_global, state.replica_params)
+
+    metrics = {
+        "outer_gnorm": _tree_norm(avg),
+        "drop_frac": 1.0 - drop_mask.mean(),
+    }
+    if compute_cosine:
+        cos_mean, cos_std = _pairwise_cosine(deltas, m)
+        metrics["cos_mean"] = cos_mean
+        metrics["cos_std"] = cos_std
+
+    return DiLoCoState(
+        global_params=new_global,
+        outer_state=new_outer,
+        replica_params=new_replicas,
+        inner_state=state.inner_state,
+        outer_t=state.outer_t + 1,
+        inner_steps_done=state.inner_steps_done,
+    ), metrics
+
+
+def _tree_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def _pairwise_cosine(deltas, mask):
+    """Mean/std of pairwise cosine similarity between replicas' outer
+    gradients (Fig 10/11). deltas: tree of (k, ...) leaves."""
+    flat = jnp.concatenate(
+        [d.reshape(d.shape[0], -1).astype(jnp.float32)
+         for d in jax.tree.leaves(deltas)], axis=1)           # (k, P)
+    norm = jnp.linalg.norm(flat, axis=1, keepdims=True)
+    unit = flat / jnp.maximum(norm, 1e-12)
+    sim = unit @ unit.T                                        # (k, k)
+    k = flat.shape[0]
+    pair = mask[:, None] * mask[None, :] * (1 - jnp.eye(k))
+    denom = jnp.maximum(pair.sum(), 1e-9)
+    mean = (sim * pair).sum() / denom
+    var = (jnp.square(sim - mean) * pair).sum() / denom
+    return mean, jnp.sqrt(var)
+
+
+# ---------------------------------------------------------------------------
+# round driver (one outer iteration = H inner steps + outer step)
+# ---------------------------------------------------------------------------
+
+def make_round(loss_fn, sample_fn, dcfg: DiLoCoConfig, tcfg: TrainConfig,
+               *, total_steps: int | None = None,
+               compute_cosine: bool = False,
+               batch_size: int | None = None,
+               seq_len: int | None = None):
+    """Build the jitted DiLoCo round.
+
+    sample_fn(key, batch, seq_len) -> (k, B, S) int32 tokens, one batch
+    per shard. Returns round(state, key, drop_mask, active_mask, weights)
+    -> (state, metrics). Data for all H steps is sampled *inside* the
+    round via fold_in so the jitted function stays closed over the
+    sampler constants only.
+    """
+    inner_step_tok = make_inner_step(
+        lambda p, b: loss_fn(p, b), tcfg, total_steps)
+    B = batch_size or tcfg.batch_size
+    S = seq_len or tcfg.seq_len
+
+    def round_fn(state: DiLoCoState, key, drop_mask=None, active_mask=None,
+                 weights=None):
+        H = dcfg.H
+        keys = jax.random.split(key, H)
+        toks = jax.vmap(lambda kk: sample_fn(kk, B, S))(keys)  # (H,k',B,S)
+        toks = jnp.swapaxes(toks, 0, 1)[:dcfg.k]               # (k,H,B,S)
+        batches = {"tokens": toks}
+        rp, is_, ms = inner_phase(
+            inner_step_tok, state.replica_params, state.inner_state,
+            batches, state.inner_steps_done, active_mask=active_mask)
+        state = state._replace(
+            replica_params=rp, inner_state=is_,
+            inner_steps_done=state.inner_steps_done + H)
+        state, om = outer_step(state, dcfg, drop_mask=drop_mask,
+                               active_mask=active_mask, weights=weights,
+                               compute_cosine=compute_cosine)
+        om["inner_loss"] = ms["loss"].mean()
+        om["inner_loss_last"] = ms["loss"][:, -1].mean()
+        return state, om
+
+    return jax.jit(round_fn)
+
+
+def make_eval(loss_fn):
+    @jax.jit
+    def eval_fn(params, tokens):
+        loss, _ = loss_fn(params, {"tokens": tokens})
+        return loss
+    return eval_fn
+
+
+# ---------------------------------------------------------------------------
+# single-worker pretraining / baselines share the same inner step
+# ---------------------------------------------------------------------------
+
+def make_single_worker_step(loss_fn, tcfg: TrainConfig,
+                            total_steps: int | None = None):
+    """Plain (non-DiLoCo) training step — used for the paper's pretraining
+    stage and the single-worker baselines of Table 2 / Fig 2."""
+    inner = make_inner_step(lambda p, b: loss_fn(p, b), tcfg, total_steps)
+
+    @jax.jit
+    def step(params, opt_state, batch, idx):
+        return inner(params, opt_state, batch, idx)
+
+    return step

@@ -1,0 +1,64 @@
+"""Outer optimizers (Algorithm 1, line 14).
+
+The outer gradient Δ = θ^(t-1) − mean_i θ_i^(t) is treated as a gradient:
+θ^(t) = OuterOpt(θ^(t-1), Δ). Paper findings (Fig 6):
+  - Nesterov(lr=0.7, μ=0.9) is best — the default.
+  - SGD(lr=1) reduces exactly to FedAvg (θ^(t) = mean θ_i).
+  - Adam needs eps≈0.1 to be stable.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OuterState(NamedTuple):
+    buf: dict          # momentum buffer (or Adam m)
+    buf2: dict         # Adam v (zeros otherwise)
+    count: jnp.ndarray
+
+
+def init(params) -> OuterState:
+    z = lambda p: jnp.zeros_like(p)
+    return OuterState(jax.tree.map(z, params), jax.tree.map(z, params),
+                      jnp.zeros((), jnp.int32))
+
+
+def update(delta, state: OuterState, params, *, kind: str, lr: float,
+           momentum: float = 0.9, b2: float = 0.95, eps: float = 0.1):
+    """Returns (new_params, new_state)."""
+    count = state.count + 1
+
+    if kind == "sgd":
+        new_p = jax.tree.map(lambda p, d: p - lr * d, params, delta)
+        return new_p, OuterState(state.buf, state.buf2, count)
+
+    if kind == "sgdm":
+        new_buf = jax.tree.map(lambda b, d: momentum * b + d,
+                               state.buf, delta)
+        new_p = jax.tree.map(lambda p, b: p - lr * b, params, new_buf)
+        return new_p, OuterState(new_buf, state.buf2, count)
+
+    if kind == "nesterov":
+        new_buf = jax.tree.map(lambda b, d: momentum * b + d,
+                               state.buf, delta)
+        new_p = jax.tree.map(lambda p, b, d: p - lr * (momentum * b + d),
+                             params, new_buf, delta)
+        return new_p, OuterState(new_buf, state.buf2, count)
+
+    if kind == "adam":
+        b1 = momentum
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+        new_m = jax.tree.map(lambda m, d: b1 * m + (1 - b1) * d,
+                             state.buf, delta)
+        new_v = jax.tree.map(lambda v, d: b2 * v + (1 - b2) * d * d,
+                             state.buf2, delta)
+        new_p = jax.tree.map(
+            lambda p, m, v: p - lr * (m / c1) / (jnp.sqrt(v / c2) + eps),
+            params, new_m, new_v)
+        return new_p, OuterState(new_m, new_v, count)
+
+    raise ValueError(kind)

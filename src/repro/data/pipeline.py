@@ -1,0 +1,128 @@
+"""Deterministic synthetic LM data: per-shard Markov-mixture streams.
+
+The paper trains on C4 with i.i.d. (random) vs non-i.i.d. (k-Means
+clustered) shards. Offline we reproduce the *statistical structure* that
+matters to DiLoCo — shards with identical vs distinct distributions and a
+shared, learnable generative process — with first-order Markov chains:
+
+  - A base transition matrix T0 (seeded) shared by all shards.
+  - Per-shard perturbations P_i; shard i samples from
+    softmax(T0 + alpha * P_i). alpha=0 -> i.i.d.; alpha>0 -> non-i.i.d.
+  - The validation stream samples from the *mixture* over shards,
+    mirroring C4's global validation split.
+
+Models can genuinely reduce perplexity toward the chain entropy floor, so
+all of the paper's comparisons (DiLoCo vs baselines, i.i.d. vs non-i.i.d.,
+outer optimizers, ...) are measurable end-to-end on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class MarkovMixture:
+    """Deterministic, stateless batch sampler over k shard distributions."""
+
+    def __init__(self, vocab_size: int = 256, k: int = 8,
+                 alpha: float = 2.0, seed: int = 0,
+                 shard_sizes: np.ndarray | None = None):
+        self.vocab_size = vocab_size
+        self.k = k
+        self.alpha = float(alpha)
+        rng = np.random.default_rng(seed)
+        base = rng.normal(size=(vocab_size, vocab_size)).astype(np.float32)
+        pert = rng.normal(size=(k, vocab_size, vocab_size)).astype(np.float32)
+        # logits: (k, V, V); shard i transition logits
+        self._logits = jnp.asarray(base[None] + self.alpha * pert)
+        # mixture (validation) logits: average of per-shard *probabilities*
+        probs = jax.nn.softmax(self._logits, axis=-1)
+        self._mix_logits = jnp.log(jnp.mean(probs, axis=0) + 1e-9)
+        if shard_sizes is None:
+            shard_sizes = np.ones((k,), np.float32)
+        self.shard_sizes = np.asarray(shard_sizes, np.float32)
+
+    # ---- sampling ----
+    @functools.partial(jax.jit, static_argnums=(0, 3, 4))
+    def sample_shard(self, key, shard_id, batch: int, seq_len: int):
+        """tokens (batch, seq_len) int32 from shard ``shard_id``'s chain."""
+        logits = self._logits[shard_id]                       # (V, V)
+        return _sample_chain(key, logits, batch, seq_len)
+
+    @functools.partial(jax.jit, static_argnums=(0, 2, 3))
+    def sample_all_shards(self, key, batch: int, seq_len: int):
+        """tokens (k, batch, seq_len): one batch per shard (vmapped)."""
+        keys = jax.random.split(key, self.k)
+        return jax.vmap(lambda kk, lg: _sample_chain(kk, lg, batch, seq_len)
+                        )(keys, self._logits)
+
+    @functools.partial(jax.jit, static_argnums=(0, 2, 3))
+    def sample_validation(self, key, batch: int, seq_len: int):
+        return _sample_chain(key, self._mix_logits, batch, seq_len)
+
+    # ---- resharding ----
+    def regroup(self, k_workers: int) -> "MarkovMixture":
+        """Redistribute this mixture's k shards among ``k_workers``
+        (round-robin), holding the DATA-GENERATING PROCESS fixed: the
+        validation mixture is unchanged, each worker samples from the
+        probability-mixture of its assigned shards. This is how the
+        paper varies the replica count — the dataset (C4) stays the
+        same, only its partitioning changes."""
+        import copy
+        assert 1 <= k_workers <= self.k
+        probs = jax.nn.softmax(self._logits, axis=-1)         # (k,V,V)
+        groups = []
+        sizes = []
+        for i in range(k_workers):
+            idx = list(range(i, self.k, k_workers))
+            groups.append(jnp.log(jnp.mean(probs[jnp.asarray(idx)], 0)
+                                  + 1e-9))
+            sizes.append(float(self.shard_sizes[idx].sum()))
+        new = copy.copy(self)
+        new.k = k_workers
+        new._logits = jnp.stack(groups)
+        # _mix_logits (validation) intentionally unchanged
+        new.shard_sizes = np.asarray(sizes, np.float32)
+        return new
+
+    # ---- statistics ----
+    def entropy_floor(self) -> float:
+        """Per-token entropy (nats) of the mixture chain = best achievable
+        validation loss; exp() of it is the perplexity floor."""
+        p = jax.nn.softmax(self._mix_logits, axis=-1)
+        # stationary distribution via power iteration
+        pi = jnp.full((self.vocab_size,), 1.0 / self.vocab_size)
+        for _ in range(64):
+            pi = pi @ p
+        ent = -jnp.sum(pi[:, None] * p * jnp.log(p + 1e-12))
+        return float(ent)
+
+
+def _sample_chain(key, logits, batch: int, seq_len: int):
+    k0, k1 = jax.random.split(key)
+    first = jax.random.randint(k0, (batch,), 0, logits.shape[0])
+
+    def step(tok, kk):
+        nxt = jax.random.categorical(kk, logits[tok], axis=-1)
+        return nxt, nxt
+
+    keys = jax.random.split(k1, seq_len - 1)
+    _, rest = jax.lax.scan(step, first, keys)
+    return jnp.concatenate([first[None], rest], 0).T.astype(jnp.int32)
+
+
+def batch_iterator(sampler: MarkovMixture, batch: int, seq_len: int,
+                   seed: int = 0, mode: str = "shards"):
+    """Infinite deterministic iterator; mode: shards|validation."""
+    step = 0
+    key = jax.random.PRNGKey(seed)
+    while True:
+        sub = jax.random.fold_in(key, step)
+        if mode == "shards":
+            yield sampler.sample_all_shards(sub, batch, seq_len)
+        else:
+            yield sampler.sample_validation(sub, batch, seq_len)
+        step += 1

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for DiLoCo's compute hot-spots.
+
+flash_attention.py  blocked online-softmax attention (inner-loop compute)
+fused_adamw.py      one-VMEM-pass inner AdamW update (memory-bound)
+sign_prune.py       fused sign election + magnitude pruning (Table 6)
+outer_nesterov.py   fused outer Nesterov update
+ops.py              backend dispatch (kernel on TPU, jnp oracle elsewhere)
+ref.py              pure-jnp oracles for every kernel
+"""

@@ -1,0 +1,91 @@
+"""Fused AdamW update — Pallas TPU kernel.
+
+The inner optimizer is DiLoCo's per-step memory bill: each AdamW step
+reads (p, g, m, v) and writes (p, m, v) — 7 tensor-sized HBM transfers
+that XLA sometimes splits across fusions. This kernel performs the whole
+update in ONE VMEM pass per tile: a (block_r, 128)-tile of each operand
+streams in, the update math runs on the VPU in f32, and the three
+outputs stream out. Bandwidth-optimal: bytes moved = 4 reads + 3 writes,
+nothing else.
+
+Scalars (lr and the bias corrections c1 = 1-β1^t, c2 = 1-β2^t) arrive as
+a small SMEM-resident array so the same compiled kernel serves every
+step of the schedule.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _adamw_kernel(sc_ref, p_ref, g_ref, m_ref, v_ref,
+                  p_out, m_out, v_out, *, b1, b2, eps, weight_decay):
+    lr, c1, c2 = sc_ref[0], sc_ref[1], sc_ref[2]
+    p = p_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    m_new = b1 * m + (1.0 - b1) * g
+    v_new = b2 * v + (1.0 - b2) * g * g
+    step = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps) + weight_decay * p
+    p_out[...] = (p - lr * step).astype(p_out.dtype)
+    m_out[...] = m_new.astype(m_out.dtype)
+    v_out[...] = v_new.astype(v_out.dtype)
+
+
+def fused_adamw(p, g, m, v, *, lr, c1, c2, b1=0.9, b2=0.95, eps=1e-8,
+                weight_decay=0.1, block_rows: int = 256,
+                interpret: bool = False):
+    """One AdamW step on a single tensor of any shape.
+
+    lr/c1/c2 may be traced scalars. Returns (p_new, m_new, v_new).
+    """
+    shape, dtype = p.shape, p.dtype
+    n = p.size
+    cols = 128
+    rows = -(-n // cols)
+    pad = rows * cols - n
+
+    def to2d(x):
+        x = x.reshape(-1)
+        if pad:
+            x = jnp.pad(x, (0, pad))
+        return x.reshape(rows, cols)
+
+    p2, g2, m2, v2 = map(to2d, (p, g, m, v))
+    br = min(block_rows, rows)
+    rows_p = -(-rows // br) * br
+    if rows_p != rows:
+        padr = rows_p - rows
+        p2, g2, m2, v2 = (jnp.pad(x, ((0, padr), (0, 0)))
+                          for x in (p2, g2, m2, v2))
+    scalars = jnp.stack([jnp.asarray(lr, jnp.float32),
+                         jnp.asarray(c1, jnp.float32),
+                         jnp.asarray(c2, jnp.float32)])
+
+    kernel = functools.partial(_adamw_kernel, b1=b1, b2=b2, eps=eps,
+                               weight_decay=weight_decay)
+    grid = (rows_p // br,)
+    tile = pl.BlockSpec((br, cols), lambda i: (i, 0))
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),
+                  tile, tile, tile, tile],
+        out_specs=(tile, tile, tile),
+        out_shape=tuple(jax.ShapeDtypeStruct((rows_p, cols), d)
+                        for d in (dtype, m.dtype, v.dtype)),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(scalars, p2, g2, m2, v2)
+
+    def back(x, dt):
+        return x.reshape(-1)[:n].reshape(shape).astype(dt)
+
+    return (back(outs[0], dtype), back(outs[1], m.dtype),
+            back(outs[2], v.dtype))

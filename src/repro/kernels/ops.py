@@ -1,0 +1,144 @@
+"""Backend dispatch for the Pallas kernels.
+
+Each op picks the Pallas kernel on TPU (or when forced via
+``mode='pallas'`` / ``mode='interpret'``) and the pure-jnp oracle from
+``ref.py`` otherwise — so CPU runs (tests, benchmarks) and TPU runs
+share one call site. Tree-level helpers apply the fused optimizer
+kernels leaf-by-leaf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _flash
+from . import fused_adamw as _adamw
+from . import outer_nesterov as _nesterov
+from . import sign_prune as _prune
+from . import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(mode: str):
+    """-> (use_kernel, interpret)."""
+    if mode == "auto":
+        return (_on_tpu(), False)
+    if mode == "pallas":
+        return (True, False)
+    if mode == "interpret":
+        return (True, True)
+    if mode == "ref":
+        return (False, False)
+    raise ValueError(mode)
+
+
+# ---------------------------------------------------------------------------
+# flash attention — q: (B, S, H, d) model layout; kernel uses (B, H, S, d)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _fa_vjp(causal, window, scale, block_q, block_k, interpret):
+    return _flash.make_flash_attention_vjp(
+        causal=causal, window=window, scale=scale, block_q=block_q,
+        block_k=block_k, interpret=interpret)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
+                    mode: str = "auto", block_q: int = 128,
+                    block_k: int = 128):
+    """Differentiable flash attention (custom_vjp with flash backward
+    kernels on the kernel path)."""
+    use_kernel, interpret = _resolve(mode)
+    if not use_kernel:
+        return ref.flash_attention(q.transpose(0, 2, 1, 3),
+                                   k.transpose(0, 2, 1, 3),
+                                   v.transpose(0, 2, 1, 3),
+                                   causal=causal, window=window,
+                                   scale=scale).transpose(0, 2, 1, 3)
+    fa = _fa_vjp(causal, window, scale, block_q, block_k, interpret)
+    out = fa(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+             v.transpose(0, 2, 1, 3))
+    return out.transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# fused AdamW — tree-level
+# ---------------------------------------------------------------------------
+
+def adamw_update_tree(params, grads, m, v, *, lr, count, b1=0.9, b2=0.95,
+                      eps=1e-8, weight_decay=0.1, mode: str = "auto"):
+    """One fused AdamW step over a whole param tree. ``count`` is the
+    post-increment step (for bias correction)."""
+    use_kernel, interpret = _resolve(mode)
+    cf = jnp.asarray(count, jnp.float32)
+    c1 = 1.0 - b1 ** cf
+    c2 = 1.0 - b2 ** cf
+
+    def one(p, g, mm, vv):
+        if use_kernel:
+            return _adamw.fused_adamw(
+                p, g, mm, vv, lr=lr, c1=c1, c2=c2, b1=b1, b2=b2, eps=eps,
+                weight_decay=weight_decay, interpret=interpret)
+        return ref.fused_adamw(p, g, mm, vv, lr=lr, b1=b1, b2=b2,
+                               eps=eps, weight_decay=weight_decay,
+                               c1=c1, c2=c2)
+
+    out = jax.tree.map(one, params, grads, m, v)
+    leaves = lambda i: jax.tree.map(
+        lambda t: t[i], out, is_leaf=lambda x: isinstance(x, tuple))
+    return leaves(0), leaves(1), leaves(2)
+
+
+# ---------------------------------------------------------------------------
+# sign pruning — matrix + tree-level
+# ---------------------------------------------------------------------------
+
+def sign_prune(x, frac: float, *, mode: str = "auto"):
+    """x: (R, C)."""
+    if frac <= 0:
+        return x
+    use_kernel, interpret = _resolve(mode)
+    if use_kernel:
+        return _prune.sign_prune(x, frac, interpret=interpret)
+    return ref.sign_prune(x, frac)
+
+
+def sign_prune_tree(tree, frac: float, *, mode: str = "auto"):
+    """Leaves are reshaped to (leading-dim rows, flattened cols)."""
+    if frac <= 0:
+        return tree
+
+    def one(x):
+        if x.ndim == 0:
+            return x
+        flat = x.reshape(1, -1) if x.ndim == 1 \
+            else x.reshape(x.shape[0], -1)
+        return sign_prune(flat, frac, mode=mode).reshape(x.shape)
+
+    return jax.tree.map(one, tree)
+
+
+# ---------------------------------------------------------------------------
+# outer Nesterov — tree-level
+# ---------------------------------------------------------------------------
+
+def nesterov_update_tree(params, delta, buf, *, lr, momentum=0.9,
+                         mode: str = "auto"):
+    use_kernel, interpret = _resolve(mode)
+
+    def one(p, d, b):
+        if use_kernel:
+            return _nesterov.outer_nesterov(p, d, b, lr=lr,
+                                            momentum=momentum,
+                                            interpret=interpret)
+        return ref.outer_nesterov(p, d, b, lr=lr, momentum=momentum)
+
+    out = jax.tree.map(one, params, delta, buf)
+    leaves = lambda i: jax.tree.map(
+        lambda t: t[i], out, is_leaf=lambda x: isinstance(x, tuple))
+    return leaves(0), leaves(1)

@@ -1,0 +1,111 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the numerical ground truth the kernels are tested
+against (tests sweep shapes/dtypes with interpret=True). They are also
+the implementations used on non-TPU backends via ``ops.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# flash attention (causal / sliding-window GQA)
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None):
+    """q: (B, Sq, H, d); k/v: (B, Skv, G, d) with H % G == 0.
+
+    Full-softmax reference (materializes scores — oracle only; use on
+    small shapes).
+    """
+    B, Sq, H, d = q.shape
+    _, Sk, G, _ = k.shape
+    rep = H // G
+    scale = d ** -0.5 if scale is None else scale
+    qh = (q * scale).reshape(B, Sq, G, rep, d).astype(jnp.float32)
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", qh, k.astype(jnp.float32))
+    qpos = jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= kpos[None, :] <= qpos[:, None] + (Sk - Sq)
+    if window and window > 0:
+        ok &= kpos[None, :] > qpos[:, None] + (Sk - Sq) - window
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrqk,bkgd->bqgrd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused AdamW update
+# ---------------------------------------------------------------------------
+
+def fused_adamw(p, g, m, v, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                weight_decay=0.1, c1=1.0, c2=1.0):
+    """Single fused AdamW step on one tensor. c1/c2 are the bias
+    corrections (1-b1^t, 1-b2^t) computed by the caller."""
+    pf, gf = p.astype(jnp.float32), g.astype(jnp.float32)
+    mf, vf = m.astype(jnp.float32), v.astype(jnp.float32)
+    m_new = b1 * mf + (1.0 - b1) * gf
+    v_new = b2 * vf + (1.0 - b2) * jnp.square(gf)
+    step = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps) + weight_decay * pf
+    p_new = pf - lr * step
+    return (p_new.astype(p.dtype), m_new.astype(m.dtype),
+            v_new.astype(v.dtype))
+
+
+# ---------------------------------------------------------------------------
+# per-neuron sign pruning (TIES-style) of outer gradients
+# ---------------------------------------------------------------------------
+
+def bisect_threshold(mag, keep_count, iters: int = 26):
+    """Per-row magnitude threshold t s.t. count(|x| >= t) <= keep_count,
+    found by fixed-iteration bisection (kernel-expressible, unlike a
+    quantile). mag: (R, C) >= 0; keep_count: int. Returns (R, 1)."""
+    lo = jnp.zeros((mag.shape[0], 1), jnp.float32)
+    hi = jnp.max(mag, axis=-1, keepdims=True) * (1.0 + 1e-6) + 1e-30
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum((mag >= mid).astype(jnp.int32), -1, keepdims=True)
+        too_many = cnt > keep_count
+        return jnp.where(too_many, mid, lo), jnp.where(too_many, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return hi
+
+
+def sign_prune(x, frac: float):
+    """x: (R, C). Per row: elect sign by magnitude mass, keep entries
+    agreeing with the elected sign AND in the top (1-frac) fraction by
+    magnitude (threshold via deterministic bisection)."""
+    mag = jnp.abs(x.astype(jnp.float32))
+    pos = jnp.sum(jnp.where(x > 0, mag, 0.0), -1, keepdims=True)
+    neg = jnp.sum(jnp.where(x < 0, mag, 0.0), -1, keepdims=True)
+    elected = jnp.where(pos >= neg, 1.0, -1.0)
+    agrees = jnp.sign(x.astype(jnp.float32)) == elected
+    keep_count = max(int(round((1.0 - frac) * x.shape[-1])), 1)
+    thresh = bisect_threshold(mag, keep_count)
+    keep = agrees & (mag >= thresh)
+    return jnp.where(keep, x, jnp.zeros_like(x))
+
+
+# ---------------------------------------------------------------------------
+# fused outer Nesterov update
+# ---------------------------------------------------------------------------
+
+def outer_nesterov(p, delta, buf, *, lr, momentum=0.9):
+    """θ ← θ − lr·(μ·b_new + Δ) with b_new = μ·b + Δ. Returns (p, buf)."""
+    pf = p.astype(jnp.float32)
+    df = delta.astype(jnp.float32)
+    bf = buf.astype(jnp.float32)
+    b_new = momentum * bf + df
+    p_new = pf - lr * (momentum * b_new + df)
+    return p_new.astype(p.dtype), b_new.astype(buf.dtype)

@@ -1,0 +1,165 @@
+"""Continuous batching for the serving path.
+
+vLLM-style slot scheduler on top of the registry's prefill/decode
+entry points: a fixed pool of B slots decodes in ONE batched
+`decode_step` per tick; finished slots are refilled from the request
+queue without stalling the others.
+
+Alignment trick (keeps the batched ring cache simple): all slots share
+one global clock `t`. A request with prompt length L admitted at tick t
+is prefilled at absolute positions [t−L, t) — RoPE and sliding-window
+masks depend only on RELATIVE positions, so each request's logits are
+identical to running it in isolation (tested). The per-slot cache
+position tracks (`pos` rows, -1 = empty) guarantee a fresh request
+never attends to its slot's previous occupant.
+
+Works for rotary/window/SSM families (position-translation-invariant);
+absolute-position models (whisper's learned embeddings) are rejected.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (L,) int32
+    max_new: int
+    out: list = field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    """Slot-based continuous batching engine.
+
+    engine = ContinuousBatcher(arch, params, slots=4, cache_len=256)
+    engine.submit(prompt_tokens, max_new=32) -> rid
+    engine.run_until_drained() -> {rid: np.ndarray(generated)}
+    """
+
+    def __init__(self, arch, params, *, slots: int, cache_len: int,
+                 temperature: float = 0.0, seed: int = 0):
+        self.arch = arch
+        self.cfg = arch.cfg
+        if self.cfg.pos_emb == "learned":
+            raise ValueError(
+                "continuous batching requires translation-invariant "
+                "positions (rope/none); learned absolute embeddings "
+                "break the shared-clock alignment")
+        self.params = params
+        self.B = slots
+        self.C = cache_len
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.queue: collections.deque[Request] = collections.deque()
+        self.active: list[Request | None] = [None] * slots
+        self.remaining = np.zeros(slots, np.int64)
+        self.last_tok = np.zeros(slots, np.int64)
+        self._next_rid = 0
+        self.clock = 0
+        self.cache = M.init_cache(self.cfg, slots, cache_len,
+                                  jnp.float32, window=self.cfg.window)
+        self._jit_decode = jax.jit(
+            lambda p, c, t, pos: arch.decode(p, c, t, pos))
+        self.finished: dict[int, np.ndarray] = {}
+
+    # ---- public API ----
+    def submit(self, prompt, max_new: int) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, np.asarray(prompt, np.int64),
+                                  max_new))
+        return rid
+
+    def run_until_drained(self, max_ticks: int = 100_000):
+        for _ in range(max_ticks):
+            if not self.queue and all(r is None for r in self.active):
+                break
+            self.tick()
+        return dict(self.finished)
+
+    # ---- engine ----
+    # cache leaves are (layer_groups, batch, ...): batch is axis 1
+    def _row(self, tree, i):
+        return jax.tree.map(lambda a: a[:, i:i + 1], tree)
+
+    def _set_row(self, tree, row, i):
+        return jax.tree.map(
+            lambda a, r: jax.lax.dynamic_update_slice(
+                a, r.astype(a.dtype), (0, i) + (0,) * (a.ndim - 2)),
+            tree, row)
+
+    def _blank_row(self):
+        one = M.init_cache(self.cfg, 1, self.C, jnp.float32,
+                           window=self.cfg.window)
+        return one
+
+    def _admit(self, slot: int, req: Request):
+        """Prefill ``req`` into ``slot`` at clock-aligned positions."""
+        L = len(req.prompt)
+        start = self.clock - L          # prompt occupies [t-L, t)
+        assert start >= 0, "advance the clock before admitting"
+        row = self._set_row(self.cache, self._blank_row(), slot)
+        row_cache = self._row(row, slot)
+        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+        logits, row_cache, _ = M.forward(
+            self.params, self.cfg, toks, cache=row_cache,
+            cache_pos=jnp.asarray(start, jnp.int32),
+            window=self.cfg.window or None)
+        self.cache = self._set_row(row, row_cache, slot)
+        self.active[slot] = req
+        self.remaining[slot] = req.max_new
+        self.last_tok[slot] = int(jnp.argmax(logits[0, -1]))
+        req.out.append(int(self.last_tok[slot]))
+        self.remaining[slot] -= 1
+
+    def tick(self):
+        # 1. admit pending requests into free slots
+        for i in range(self.B):
+            if self.active[i] is None and self.queue:
+                req = self.queue[0]
+                if self.clock < len(req.prompt):
+                    self.clock = len(req.prompt)   # warm up the clock
+                self.queue.popleft()
+                self._admit(i, req)
+        if all(r is None for r in self.active):
+            return
+        # 2. one batched decode step for every slot (empty slots decode
+        #    garbage into their own rows — masked by their pos tracks
+        #    and discarded)
+        toks = jnp.asarray(self.last_tok, jnp.int32)[:, None]
+        logits, self.cache = self._jit_decode(
+            self.params, self.cache, toks,
+            jnp.asarray(self.clock, jnp.int32))
+        self.clock += 1
+        if self.temperature > 0:
+            self.key, sub = jax.random.split(self.key)
+            nxt = np.asarray(jax.random.categorical(
+                sub, logits[:, -1] / self.temperature, -1))
+        else:
+            nxt = np.asarray(jnp.argmax(logits[:, -1], -1))
+        # 3. bookkeeping per slot
+        for i in range(self.B):
+            req = self.active[i]
+            if req is None:
+                continue
+            self.last_tok[i] = int(nxt[i])
+            req.out.append(int(nxt[i]))
+            self.remaining[i] -= 1
+            if self.remaining[i] <= 0:
+                req.done = True
+                self.finished[req.rid] = np.asarray(req.out, np.int64)
+                self.active[i] = None
+
+    @property
+    def utilization(self) -> float:
+        return sum(r is not None for r in self.active) / self.B

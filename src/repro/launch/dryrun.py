@@ -1,0 +1,564 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+on the production meshes, prove memory fits, and extract the roofline
+inputs (FLOPs, HBM bytes, collective bytes by pod-crossing).
+
+Per (arch × shape):
+  single-pod (16, 16)  "data","model"
+    train_4k     -> inner_train_step   (one DiLoCo island's hot loop)
+    prefill_32k  -> prefill
+    decode_32k   -> serve_step (1 new token against a seq_len KV cache)
+    long_500k    -> serve_step (sliding-window / SSM constant state)
+  multi-pod (2, 16, 16)  "pod","data","model"   [--multi-pod]
+    train_4k     -> diloco_inner_step  (vmap over the pod axis — must
+                    contain ZERO cross-pod collective bytes)
+                 -> diloco_outer_step  (the once-per-H all-reduce)
+                 -> ddp_train_step     (sync baseline, for Table 2 comm)
+    serve shapes -> same fns with batch over ("pod","data")
+
+Sharding: parameters use 2-D FSDP×TP (logical rules: heads/ff/vocab/
+experts -> "model"; d_model rows -> "data"), optimizer state follows
+params, activations are sharded over ("data", ..., "model") Megatron
+sequence-parallel style, training accumulates over microbatches so the
+per-device live set fits v5e's 16 GB.
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ShapeConfig
+from repro.launch import hlo_analysis as H
+from repro.launch.mesh import make_production_mesh, chips_of
+from repro.launch.jaxpr_cost import jaxpr_cost
+from repro.models.registry import get_arch, ARCH_NAMES, Arch
+from repro.optim import adamw
+from repro.sharding.spec import (DEFAULT_RULES, PRIORITY, logical_to_pspec,
+                                 batch_pspec)
+
+# second sharding pass: FSDP over "data" for the d_model rows
+FSDP_RULES = dict(DEFAULT_RULES)
+FSDP_RULES.update({"embed_fsdp": "data"})
+
+TRAIN_MICROBATCHES = 8
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+
+def param_pspec(axes: tuple, shape: tuple, mesh: Mesh,
+                fsdp: bool = True) -> P:
+    """2-D param sharding: model-parallel pass (priority rules), then an
+    FSDP pass putting 'embed' rows on "data" if still free.
+
+    Exception: *gathered* tables (axes start with "vocab") whose vocab
+    dim does not divide the model axis are fully replicated — XLA's SPMD
+    partitioner mis-lowers gathers from feature-sharded tables (verifier
+    failure), and a gather from a data-sharded table all-gathers the
+    table every step anyway."""
+    mesh_sizes0 = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if (axes and axes[0] == "vocab" and "model" in mesh_sizes0
+            and shape[0] % mesh_sizes0["model"] != 0):
+        return P(*([None] * len(axes)))
+    spec = list(logical_to_pspec(axes, shape, mesh))
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if fsdp and "data" in mesh_sizes and "data" not in spec:
+        for i, name in enumerate(axes):
+            if (spec[i] is None and name == "embed"
+                    and shape[i] % mesh_sizes["data"] == 0):
+                spec[i] = "data"
+                break
+    return P(*spec)
+
+
+def param_shardings(axes_tree, shapes_tree, mesh, *, leading=(),
+                    fsdp: bool = True):
+    def one(ax, s):
+        ax = tuple(leading) + tuple(ax)
+        return NamedSharding(mesh, param_pspec(ax, s.shape, mesh,
+                                               fsdp=fsdp))
+    return jax.tree.map(one, axes_tree, shapes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def cache_pspec(shape: tuple, mesh: Mesh, *, include_pod: bool) -> P:
+    """Decode-cache sharding: leading (groups) dim replicated, batch dim
+    over ("pod"?, "data") when divisible, and ONE more dim over "model"
+    (kv-heads first, then feature, then sequence)."""
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    nd = len(shape)
+    spec = [None] * nd
+    if nd >= 2:
+        axes = []
+        if include_pod and "pod" in mesh_sizes:
+            axes.append("pod")
+        axes.append("data")
+        total = int(np.prod([mesh_sizes[a] for a in axes]))
+        while axes and shape[1] % total != 0:
+            total //= mesh_sizes[axes.pop()]
+        if axes:
+            spec[1] = tuple(axes) if len(axes) > 1 else axes[0]
+    # "model" placement: kv-heads first (head-parallel attention, zero
+    # collectives), then the sequence dim (flash-decoding: tiny softmax-
+    # partial reduces), and only then feature dims (which contract —
+    # per-layer score-sized psums)
+    if "model" in mesh_sizes and nd >= 3:
+        for i in [3, 2, nd - 1, nd - 2]:
+            if 2 <= i < nd and spec[i] is None \
+                    and shape[i] % mesh_sizes["model"] == 0 and shape[i] > 1:
+                spec[i] = "model"
+                break
+    # batch too small for the data axis (e.g. B=1 long-context decode):
+    # shard the sequence dim over "data" instead — flash-decoding style
+    # KV parallelism (softmax partials reduce over tiny per-head terms)
+    if spec[1] is None and "data" in mesh_sizes and nd >= 4:
+        for i in [2, nd - 2]:
+            if 2 <= i < nd and spec[i] is None \
+                    and shape[i] % mesh_sizes["data"] == 0 and shape[i] > 1:
+                spec[i] = "data"
+                break
+    return P(*spec)
+
+
+def cache_shardings(cache_shapes, mesh, *, include_pod: bool):
+    def one(s):
+        # integer tracks (ring-buffer position maps) are tiny; sharding
+        # them on a different dim than their K/V forces GSPMD to emit
+        # cache-sized resharding all-reduces per layer — replicate them
+        if not jnp.issubdtype(s.dtype, jnp.floating):
+            return _replicated(mesh)
+        return NamedSharding(
+            mesh, cache_pspec(s.shape, mesh, include_pod=include_pod))
+    return jax.tree.map(one, cache_shapes)
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# lowered functions
+# ---------------------------------------------------------------------------
+
+def _abstract(arch: Arch, cfg, dtype):
+    shapes, axes = arch.abstract_params(cfg)
+    cast = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, dtype if jnp.issubdtype(s.dtype, jnp.floating)
+            else s.dtype), shapes)
+    return cast, axes
+
+
+def build_train_step(arch: Arch, cfg, *, groups: int,
+                     microbatches: int = TRAIN_MICROBATCHES,
+                     cast_outside_mb: bool = False):
+    """(params, m, v, count, batch) -> (params, m, v, count, loss).
+    Gradient accumulation over ``microbatches`` splits of the batch.
+
+    ``cast_outside_mb``: hoist the f32->bf16 cast (and with it the FSDP
+    parameter all-gather) OUT of the microbatch scan — the gathered bf16
+    weights become loop-invariant, so GSPMD gathers them once per step
+    instead of once per microbatch (§Perf hillclimb)."""
+    def loss16(p16, batch):
+        return arch.loss(p16, batch, cfg=cfg, groups=groups)
+
+    def cast(params):
+        return jax.tree.map(
+            lambda x: x.astype(jnp.bfloat16)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+
+    def step(params, m, v, count, batch):
+        B = batch["tokens"].shape[0]
+        mb = microbatches if B % microbatches == 0 else 1
+        split = jax.tree.map(
+            lambda x: x.reshape((mb, B // mb) + x.shape[1:]), batch)
+
+        if cast_outside_mb:
+            p16 = cast(params)
+
+            def micro(acc, mb_batch):
+                (loss, _), g = jax.value_and_grad(
+                    loss16, has_aux=True)(p16, mb_batch)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32) / mb, acc, g)
+                return acc, loss
+        else:
+            def micro(acc, mb_batch):
+                (loss, _), g = jax.value_and_grad(
+                    lambda p, b: loss16(cast(p), b), has_aux=True)(
+                    params, mb_batch)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32) / mb, acc, g)
+                return acc, loss
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        grads, losses = jax.lax.scan(micro, zeros, split)
+        grads, _ = adamw.clip_by_global_norm(grads, 1.0)
+        new_params, st = adamw.update(
+            grads, adamw.AdamWState(m, v, count), params, lr=4e-4)
+        return new_params, st.m, st.v, st.count, losses.mean()
+
+    return step
+
+
+def build_outer_step(arch: Arch, cfg, k: int):
+    """(global_params, replica_params(k,...), buf) ->
+    (new_global, new_buf, new_replicas). The replica-mean IS the
+    cross-pod all-reduce; everything else is elementwise."""
+    from repro.core import outer_opt
+
+    def step(global_params, replica_params, buf):
+        delta = jax.tree.map(lambda g, r: g[None] - r,
+                             global_params, replica_params)
+        avg = jax.tree.map(lambda d: jnp.mean(d, axis=0), delta)
+        new_buf = jax.tree.map(lambda b, d: 0.9 * b + d, buf, avg)
+        new_global = jax.tree.map(
+            lambda p, b, d: p - 0.7 * (0.9 * b + d),
+            global_params, new_buf, avg)
+        new_replicas = jax.tree.map(
+            lambda g: jnp.broadcast_to(g[None], (k,) + g.shape),
+            new_global)
+        return new_global, new_buf, new_replicas
+
+    return step
+
+
+def build_prefill(arch: Arch, cfg, *, groups: int):
+    def fn(params, batch):
+        logits, cache = arch.prefill(params, batch, cfg=cfg, groups=groups)
+        return logits[:, -1:], cache
+    return fn
+
+
+def build_decode(arch: Arch, cfg, *, groups: int):
+    def fn(params, cache, tokens, pos):
+        return arch.decode(params, cache, tokens, pos, cfg=cfg,
+                           groups=groups)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# per-pair dry run
+# ---------------------------------------------------------------------------
+
+def _analyse(name, lowered, compiled, *, chips, chips_per_pod,
+             jcost=None, extra=None):
+    xla_flops, xla_bytes = H.cost_items(compiled)
+    # jaxpr-walk totals (scan-length-exact, global); XLA's numbers count
+    # while bodies once — kept for reference only.
+    flops = jcost["flops"] if jcost else xla_flops
+    nbytes = jcost["bytes"] if jcost else xla_bytes
+    nbytes_min = jcost["bytes_min"] if jcost else xla_bytes
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    coll = H.collective_stats(hlo, chips_per_pod=chips_per_pod)
+    terms = H.roofline(flops, nbytes, coll, chips=chips)
+    terms["memory_min_s"] = nbytes_min / (chips * H.HBM_BW)
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            if hasattr(ma, attr):
+                mem[attr] = int(getattr(ma, attr))
+    except Exception as e:  # pragma: no cover
+        mem["error"] = str(e)
+    rec = {"fn": name, "flops": flops, "hbm_bytes": nbytes,
+           "hbm_bytes_min": nbytes_min,
+           "xla_flops": xla_flops, "xla_bytes": xla_bytes,
+           "collectives": coll.as_dict(), "roofline": terms, "memory": mem}
+    if extra:
+        rec.update(extra)
+    return rec
+
+
+def model_flops(param_count: float, active_count: float, shape: ShapeConfig
+                ) -> float:
+    """6·N_active·D for train, 2·N_active·D for inference."""
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    factor = 6.0 if shape.kind == "train" else 2.0
+    return factor * active_count * tokens
+
+
+def count_params(shapes_tree, axes_tree, cfg):
+    total = sum(np.prod(s.shape) for s in jax.tree.leaves(shapes_tree))
+    if not cfg.n_experts:
+        return float(total), float(total)
+    expert = 0
+    for s, ax in zip(jax.tree.leaves(shapes_tree),
+                     jax.tree.leaves(axes_tree,
+                                     is_leaf=lambda x: isinstance(x, tuple))):
+        if "experts" in ax:
+            expert += np.prod(s.shape)
+    active = total - expert * (1.0 - cfg.top_k / cfg.n_experts)
+    return float(total), float(active)
+
+
+def dryrun_pair(arch_name: str, shape_name: str, *, multi_pod: bool,
+                microbatches: int = TRAIN_MICROBATCHES,
+                fns: tuple = ("main",), mesh=None,
+                variant: dict | None = None) -> list[dict]:
+    """Lower+compile the pair; returns one record per lowered fn.
+
+    ``variant`` (perf hillclimbing; recorded in each record):
+      fsdp: bool          — False: params model-sharded only (1-D TP)
+      cast_outside_mb: bool — hoist FSDP all-gather out of the mb scan
+      remat: bool         — override activation checkpointing
+      microbatches: int   — override accumulation factor
+      moe_groups: int     — override MoE token-grouping factor
+    """
+    variant = dict(variant or {})
+    microbatches = int(variant.get("microbatches", microbatches))
+    t0 = time.time()
+    arch = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    cfg = arch.shape_cfg(shape)
+    train = shape.kind == "train"
+    # training: f32 master params, bf16 compute; serving: bf16 params
+    cfg = cfg.replace(compute_dtype="bfloat16",
+                      param_dtype="float32" if train else "bfloat16")
+    if "remat" in variant:
+        cfg = cfg.replace(remat=bool(variant["remat"]))
+    if "decode_kv_shard" in variant:
+        cfg = cfg.replace(decode_kv_shard=variant["decode_kv_shard"])
+    if variant.get("seq_parallel"):
+        cfg = cfg.replace(act_seq_shard=True, act_model_shard=False)
+    if variant.get("no_act_shard"):
+        cfg = cfg.replace(act_model_shard=False)
+    fsdp = bool(variant.get("fsdp", True))
+    cast_outside_mb = bool(variant.get("cast_outside_mb", False))
+    pure_dp = bool(variant.get("pure_dp", False))
+    if pure_dp:
+        # small-model regime: batch over BOTH mesh axes, params
+        # replicated, no Megatron activation sharding
+        cfg = cfg.replace(act_batch_axes=("data", "model"),
+                          act_model_shard=False)
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    chips = chips_of(mesh)
+    msizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    cpp = (chips // msizes["pod"]) if "pod" in msizes else None
+    groups = int(variant.get("moe_groups", msizes.get("data", 1)))
+    k = msizes.get("pod", 1)
+
+    # pad vocab to the model-axis multiple (production practice —
+    # Megatron/MaxText pad embeddings for clean sharding; whisper's
+    # 51866 -> 51872). Logits over pad ids are unused.
+    ms = msizes.get("model", 1)
+    vocab_pad = (-cfg.vocab_size) % ms
+    if vocab_pad:
+        cfg = cfg.replace(vocab_size=cfg.vocab_size + vocab_pad)
+
+    pdtype = jnp.float32 if train else jnp.bfloat16
+    pshapes, paxes = _abstract(arch, cfg, pdtype)
+    if pure_dp:
+        psh = jax.tree.map(lambda s: _replicated(mesh), pshapes)
+    else:
+        psh = param_shardings(paxes, pshapes, mesh, fsdp=fsdp)
+    total_p, active_p = count_params(pshapes, paxes, cfg)
+    mf = model_flops(total_p, active_p, shape)
+
+    in_specs = arch.input_specs(shape, dtype=jnp.bfloat16)
+    tok_shape = in_specs["tokens"].shape
+    if pure_dp and tok_shape[0] % chips == 0:
+        axes_all = tuple(mesh.axis_names)
+        bsh = {kk: NamedSharding(mesh, P(axes_all,
+                                         *([None] * (v.ndim - 1))))
+               for kk, v in in_specs.items()}
+    else:
+        bsh = {kk: NamedSharding(
+            mesh, batch_pspec(mesh, v.shape[0], v.ndim,
+                              include_pod=not train))
+            for kk, v in in_specs.items()}
+
+    records = []
+    base = {"arch": arch_name, "shape": shape_name,
+            "mesh": "x".join(map(str, mesh.devices.shape)),
+            "multi_pod": multi_pod, "chips": chips,
+            "params": total_p, "active_params": active_p,
+            "model_flops": mf, "tokens": tok_shape,
+            "vocab_pad": vocab_pad, "variant": variant,
+            "microbatches": microbatches if train else 1}
+
+    def record(name, jitted, args, raw_fn=None):
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+        jcost = None
+        if raw_fn is not None:
+            try:
+                jcost = jaxpr_cost(raw_fn, *args)
+            except Exception:
+                jcost = None
+        rec = _analyse(name, lowered, compiled, chips=chips,
+                       chips_per_pod=cpp, jcost=jcost, extra=dict(base))
+        rec["roofline"]["model_flops_ratio"] = (
+            mf / rec["flops"] if rec["flops"] else 0.0)
+        rec["compile_s"] = round(time.time() - t0, 1)
+        records.append(rec)
+        return rec
+
+    with mesh:
+        if train:
+            step = build_train_step(arch, cfg, groups=groups,
+                                    microbatches=microbatches,
+                                    cast_outside_mb=cast_outside_mb)
+            fshapes = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                pshapes)
+            cnt = jax.ShapeDtypeStruct((), jnp.int32)
+            if not multi_pod:
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(psh, psh, psh, _replicated(mesh), bsh),
+                    out_shardings=(psh, psh, psh, _replicated(mesh),
+                                   _replicated(mesh)))
+                record("inner_train_step", jitted,
+                       (pshapes, fshapes, fshapes, cnt, in_specs),
+                       raw_fn=step)
+            else:
+                # --- DiLoCo inner: vmap over the pod/replica axis.
+                # (A partial-manual shard_map over "pod" would make the
+                # no-cross-pod property definitional, but XLA 's SPMD
+                # partitioner CHECK-fails on gathers under subgrouped
+                # manual sharding; with the sort-free MoE dispatch the
+                # vmap path verifies clean — asserted from the HLO.)
+                vstep = jax.vmap(step, spmd_axis_name="pod")
+                stack = lambda t: jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct((k,) + s.shape, s.dtype),
+                    t)
+                psh_k = param_shardings(paxes, stack(pshapes), mesh,
+                                        leading=("replica",), fsdp=fsdp)
+                rep = NamedSharding(mesh, P("pod"))
+                # per-replica batch: tokens (k, B/k? ) — paper semantics:
+                # each replica consumes its own global_batch; dry-run
+                # splits the assigned global batch across replicas.
+                binner = {kk: jax.ShapeDtypeStruct(
+                    (k, v.shape[0] // k) + v.shape[1:], v.dtype)
+                    for kk, v in in_specs.items()}
+                bsh_k = {kk: NamedSharding(
+                    mesh, P("pod", *batch_pspec(
+                        mesh, v.shape[1], v.ndim - 1)))
+                    for kk, v in binner.items()}
+                cnt_k = jax.ShapeDtypeStruct((k,), jnp.int32)
+                jitted = jax.jit(
+                    vstep,
+                    in_shardings=(psh_k, psh_k, psh_k, rep, bsh_k),
+                    out_shardings=(psh_k, psh_k, psh_k, rep, rep))
+                if "main" in fns or "inner" in fns:
+                    record("diloco_inner_step", jitted,
+                           (stack(pshapes), stack(fshapes), stack(fshapes),
+                            cnt_k, binner), raw_fn=vstep)
+                if "main" in fns or "outer" in fns:
+                    outer = build_outer_step(arch, cfg, k)
+                    jit_outer = jax.jit(
+                        outer, in_shardings=(psh, psh_k, psh),
+                        out_shardings=(psh, psh, psh_k))
+                    record("diloco_outer_step", jit_outer,
+                           (pshapes, stack(pshapes), pshapes),
+                           raw_fn=outer)
+                if "main" in fns or "ddp" in fns:
+                    # synchronous DDP baseline: params replicated across
+                    # pods, batch over (pod, data) -> per-step cross-pod
+                    # gradient all-reduce (Table 2 comm accounting)
+                    bddp = {kk: NamedSharding(
+                        mesh, batch_pspec(mesh, v.shape[0], v.ndim,
+                                          include_pod=True))
+                        for kk, v in in_specs.items()}
+                    jit_ddp = jax.jit(
+                        step,
+                        in_shardings=(psh, psh, psh, _replicated(mesh),
+                                      bddp),
+                        out_shardings=(psh, psh, psh, _replicated(mesh),
+                                       _replicated(mesh)))
+                    record("ddp_train_step", jit_ddp,
+                           (pshapes, fshapes, fshapes, cnt, in_specs),
+                           raw_fn=step)
+        elif shape.kind == "prefill":
+            fn = build_prefill(arch, cfg, groups=groups)
+            jitted = jax.jit(fn, in_shardings=(psh, bsh))
+            record("prefill", jitted, (pshapes, in_specs), raw_fn=fn)
+        else:  # decode
+            fn = build_decode(arch, cfg, groups=groups)
+            cshapes = arch.cache_specs(shape, dtype=jnp.bfloat16)
+            csh = cache_shardings(cshapes, mesh,
+                                  include_pod=multi_pod)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            jitted = jax.jit(
+                fn, in_shardings=(psh, csh, bsh["tokens"],
+                                  _replicated(mesh)),
+                out_shardings=(NamedSharding(
+                    mesh, batch_pspec(mesh, tok_shape[0], 3,
+                                      include_pod=multi_pod)), csh))
+            record("serve_step", jitted,
+                   (pshapes, cshapes, in_specs["tokens"], pos), raw_fn=fn)
+    return records
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="architecture id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="input-shape id or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--fns", default="main",
+                    help="comma list: main|inner|outer|ddp")
+    ap.add_argument("--microbatches", type=int, default=TRAIN_MICROBATCHES)
+    ap.add_argument("--variant", default="",
+                    help='JSON dict, e.g. {"fsdp": false}')
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    archs = ARCH_NAMES if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    out = []
+    for a in archs:
+        for s in shapes:
+            try:
+                recs = dryrun_pair(a, s, multi_pod=args.multi_pod,
+                                   microbatches=args.microbatches,
+                                   fns=tuple(args.fns.split(",")),
+                                   variant=json.loads(args.variant)
+                                   if args.variant else None)
+            except Exception as e:
+                recs = [{"arch": a, "shape": s,
+                         "multi_pod": args.multi_pod,
+                         "error": f"{type(e).__name__}: {e}"}]
+            for r in recs:
+                tag = "OK" if "error" not in r else "FAIL"
+                print(f"[{tag}] {a} × {s} × "
+                      f"{'multi' if args.multi_pod else 'single'} "
+                      f"{r.get('fn', '')} "
+                      f"flops={r.get('flops', 0):.3e} "
+                      f"coll={r.get('collectives', {}).get('total_bytes', 0):.3e} "
+                      f"cross={r.get('collectives', {}).get('cross_pod_bytes', 0):.3e} "
+                      f"bound={r.get('roofline', {}).get('bound', '-')}",
+                      flush=True)
+                if "error" in r:
+                    print("   ", r["error"], flush=True)
+            out.extend(recs)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(out, f, indent=1)
+        print("wrote", args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,280 @@
+"""HLO text analysis: collective bytes & roofline terms.
+
+``cost_analysis()`` gives FLOPs and HBM bytes but not collective
+traffic; we parse the post-SPMD HLO text and sum the *result* sizes of
+every collective op (all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute), classifying each as pod-crossing or
+intra-pod from its replica groups (explicit or iota-v2 format).
+
+Roofline terms (TPU v5e):
+    compute    = HLO_FLOPs / (chips × 197e12 FLOP/s bf16)
+    memory     = HLO_bytes / (chips × 819e9 B/s HBM)
+    collective = collective_bytes_per_chip / link_bw
+with intra-pod traffic on ICI (~50 GB/s/link) and cross-pod traffic on
+DCN (we model 25 GB/s per chip-pair aggregate unless overridden).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+# hardware constants (v5e)
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link, intra-pod
+DCN_BW = 25e9                # bytes/s per chip cross-pod (modeled)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter",
+                "all-to-all", "collective-permute")
+
+# `%name = TYPE all-reduce(...)` — TYPE may be a tuple
+_OP_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s+"
+    r"(" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([0-9,{} ]*)\}\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\]"
+    r"(?:T\(([0-9,]+)\))?(?:\s*dimensions=\{([0-9,]+)\})?")
+_ST_PAIRS_RE = re.compile(r"source_target_pairs=\{([0-9,{} ]*)\}")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _iota_groups(g: int, k: int, dims, perm) -> np.ndarray:
+    ids = np.arange(int(np.prod(dims))).reshape(dims)
+    if perm is not None:
+        ids = ids.transpose(perm)
+    return ids.reshape(g, k)
+
+
+def _line_groups(line: str):
+    """-> list of device-id groups, or None if not present."""
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        return [[int(x) for x in grp.split(",") if x.strip()]
+                for grp in m.group(1).split("},{")]
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        g, k = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        perm_str = m.group(4) or m.group(5)
+        perm = ([int(x) for x in perm_str.split(",")]
+                if perm_str else None)
+        return _iota_groups(g, k, dims, perm).tolist()
+    m = _ST_PAIRS_RE.search(line)
+    if m:  # collective-permute: each pair is a 2-group
+        nums = [int(x) for x in re.findall(r"\d+", m.group(1))]
+        return [nums[i:i + 2] for i in range(0, len(nums), 2)]
+    return None
+
+
+# ---------------------------------------------------------------------------
+# while-loop trip multipliers
+#
+# Collectives inside a lax.scan body (layer loop, microbatch loop)
+# execute trip-count times per step; the HLO text contains them once. We
+# recover trips from each while's condition computation (lax.scan conds
+# compare the counter against a literal) and propagate multipliers down
+# the computation call graph (while bodies, fusions, calls,
+# conditionals).
+# ---------------------------------------------------------------------------
+
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*", re.M)
+_WHILE_RE = re.compile(
+    r"while\([^)]*\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALLEE_RE = re.compile(
+    r"(?:calls=|to_apply=|condition=|body=|true_computation=|"
+    r"false_computation=)%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"=\s+s32\[\]\s+constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> dict:
+    """name -> body text. Computations start at column 0 with
+    `%name (...` or `ENTRY %name (...` and end at a column-0 `}`."""
+    comps = {}
+    name, buf = None, []
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace():
+            m = re.match(r"(?:ENTRY\s+)?%([\w.\-]+)\s*\(", line)
+            if m and line.rstrip().endswith("{"):
+                name, buf = m.group(1), []
+                comps[name] = buf
+                if line.lstrip().startswith("ENTRY") \
+                        or " ENTRY " in line:
+                    comps["__entry__"] = buf
+                continue
+            if line.startswith("}"):
+                name = None
+                continue
+        if name is not None:
+            buf.append(line)
+    return {k: "\n".join(v) for k, v in comps.items()}
+
+
+def computation_multipliers(hlo_text: str) -> dict:
+    """name -> execution multiplier (product of enclosing loop trips)."""
+    comps = _split_computations(hlo_text)
+    trips = {}
+    for body in comps.values():
+        for m in _WHILE_RE.finditer(body):
+            cond, wbody = m.group(1), m.group(2)
+            consts = [int(c) for c in
+                      _CONST_RE.findall(comps.get(cond, ""))]
+            trips[wbody] = max(consts) if consts else 1
+            trips[cond] = trips[wbody]
+
+    # propagate down the call graph from the entry computation
+    entry = comps.get("__entry__")
+    if entry is None:
+        # fall back: computation with the most lines
+        entry_name = max(comps, key=lambda k: len(comps[k]))
+        entry = comps[entry_name]
+    mult = {}
+
+    def visit(name, m):
+        if mult.get(name, 0) >= m:
+            return
+        mult[name] = m
+        body = comps.get(name, "")
+        for cm in _CALLEE_RE.finditer(body):
+            callee = cm.group(1)
+            visit(callee, m * trips.get(callee, 1))
+        for bm in _BRANCHES_RE.finditer(body):
+            for callee in re.findall(r"%?([\w.\-]+)", bm.group(1)):
+                visit(callee, m)
+
+    # seed: entry text is keyed under its own name too
+    for name, body in comps.items():
+        if body is entry or body == entry:
+            visit(name, 1)
+    return mult
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    total_bytes: int = 0
+    cross_pod_bytes: int = 0
+    intra_pod_bytes: int = 0
+    by_op: dict = dataclasses.field(default_factory=dict)
+    count: int = 0
+
+    def as_dict(self):
+        return {"total_bytes": self.total_bytes,
+                "cross_pod_bytes": self.cross_pod_bytes,
+                "intra_pod_bytes": self.intra_pod_bytes,
+                "count": self.count, "by_op": dict(self.by_op)}
+
+
+def collective_stats(hlo_text: str, *, chips_per_pod: int | None = None
+                     ) -> CollectiveStats:
+    """Sum collective result bytes in (post-SPMD) HLO text, each weighted
+    by its enclosing while-loop trip count (lax.scan bodies execute
+    trip-count times per step).
+
+    ``chips_per_pod``: device ids [p*cpp, (p+1)*cpp) belong to pod p;
+    groups spanning two pods are cross-pod traffic. None => all intra.
+    """
+    st = CollectiveStats()
+    comps = _split_computations(hlo_text)
+    mults = computation_multipliers(hlo_text)
+    for cname, body in comps.items():
+        if cname == "__entry__":
+            continue
+        mult = mults.get(cname, 1)
+        for line in body.splitlines():
+            m = _OP_RE.search(line)
+            if not m:
+                continue
+            if "-done(" in line:   # async pair: count the -start only
+                continue
+            nbytes = _type_bytes(m.group(1)) * mult
+            op = m.group(2)
+            st.total_bytes += nbytes
+            st.count += mult
+            st.by_op[op] = st.by_op.get(op, 0) + nbytes
+            crossing = False
+            if chips_per_pod:
+                groups = _line_groups(line)
+                if groups:
+                    for grp in groups:
+                        pods = {d // chips_per_pod for d in grp}
+                        if len(pods) > 1:
+                            crossing = True
+                            break
+                else:
+                    # no groups ⇒ all devices participate
+                    crossing = True
+            if crossing:
+                st.cross_pod_bytes += nbytes
+            else:
+                st.intra_pod_bytes += nbytes
+    return st
+
+
+def roofline(flops: float, hbm_bytes: float, coll: CollectiveStats,
+             *, chips: int, ici_bw: float = ICI_BW,
+             dcn_bw: float = DCN_BW, peak=PEAK_FLOPS, hbm=HBM_BW) -> dict:
+    """Three roofline terms (seconds) + the dominant one.
+
+    flops / hbm_bytes are GLOBAL (whole-program) → divided over chips.
+    Collective result bytes in post-SPMD HLO are PER-DEVICE shapes; a
+    ring all-reduce of R result bytes moves ≈2R per device over its
+    links (2(N−1)/N ≈ 2), all-gather / reduce-scatter / all-to-all /
+    permute move ≈1R — so collective time needs NO further division.
+    """
+    compute_s = flops / (chips * peak)
+    memory_s = hbm_bytes / (chips * hbm)
+
+    def _wire(stats_bytes, by_op_share):
+        ar = by_op_share.get("all-reduce", 0)
+        other = stats_bytes - ar
+        return 2.0 * ar + 1.0 * other
+
+    # split by_op between intra/cross proportionally to their totals
+    tot = max(coll.total_bytes, 1)
+    intra_by = {k: v * coll.intra_pod_bytes / tot
+                for k, v in coll.by_op.items()}
+    cross_by = {k: v * coll.cross_pod_bytes / tot
+                for k, v in coll.by_op.items()}
+    intra_s = _wire(coll.intra_pod_bytes, intra_by) / ici_bw
+    cross_s = _wire(coll.cross_pod_bytes, cross_by) / dcn_bw
+    collective_s = intra_s + cross_s
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s, "collective_intra_s": intra_s,
+             "collective_cross_s": cross_s}
+    terms["bound"] = max(
+        ("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k])
+    terms["total_s"] = max(compute_s, memory_s, collective_s)
+    return terms
+
+
+def cost_items(compiled) -> tuple[float, float]:
+    """(flops, bytes_accessed) from compiled.cost_analysis(), robust to
+    the per-backend dict/list shape differences."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    nbytes = float(ca.get("bytes accessed", 0.0))
+    return flops, nbytes

@@ -1,0 +1,178 @@
+"""Exact global FLOPs / modeled HBM traffic from the jaxpr.
+
+``compiled.cost_analysis()`` counts a ``lax.scan`` body ONCE — layer
+scans and microbatch accumulation make it undercount by 10–100×. The
+jaxpr, by contrast, carries every scan's static ``length``; walking it
+with trip multipliers gives exact global FLOP counts (including remat
+recompute and the AD transpose, which are explicit equations after
+tracing grad).
+
+Two byte models bracket the truth:
+  * ``bytes``      — upper bound: every equation's outputs (plus dot /
+    gather operand traffic). Pessimistic: XLA fuses elementwise chains,
+    and hand-fused kernels (the Pallas flash attention) keep whole
+    scan bodies in VMEM.
+  * ``bytes_min``  — fused lower bound: a ``lax.scan`` is ONE fused op
+    (reads xs/consts, writes ys, carry does one HBM round-trip per
+    iteration); interior intermediates are free. Matmul/gather traffic
+    outside scans still counts. This is what perfect kernel fusion
+    achieves — the flash-attention kernel hits it for the attention
+    scan by construction.
+
+The roofline reports both; the dominant-term analysis uses ``bytes``
+(conservative) and EXPERIMENTS.md quotes the bracket.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+_TRANSPARENT = ("pjit", "closed_call", "remat", "remat2", "checkpoint",
+                "custom_jvp_call", "custom_vjp_call",
+                "custom_vjp_call_jaxpr", "core_call")
+
+
+def _aval_bytes(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+def _in_bytes(eqn) -> int:
+    return sum(_aval_bytes(v.aval) for v in eqn.invars
+               if hasattr(v, "aval"))
+
+
+def _out_bytes(eqn) -> int:
+    return sum(_aval_bytes(v.aval) for v in eqn.outvars)
+
+
+def _dot_flops(eqn) -> int:
+    out = eqn.outvars[0].aval
+    dn = eqn.params["dimension_numbers"]
+    (lc, _), _ = dn
+    lhs = eqn.invars[0].aval
+    k = 1
+    for d in lc:
+        k *= lhs.shape[d]
+    return 2 * int(np.prod(out.shape)) * int(k)
+
+
+def _sub(p, key):
+    j = p[key]
+    return j.jaxpr if hasattr(j, "jaxpr") else j
+
+
+_NESTED_MEMO: dict = {}
+
+
+def _has_nested_scan(jaxpr) -> bool:
+    """True if any scan/while lives (transitively) inside ``jaxpr``."""
+    key = id(jaxpr)
+    if key in _NESTED_MEMO:
+        return _NESTED_MEMO[key]
+    _NESTED_MEMO[key] = False            # cycle guard
+    found = False
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim in ("scan", "while"):
+            found = True
+            break
+        p = eqn.params
+        for k in ("jaxpr", "call_jaxpr", "body_jaxpr", "cond_jaxpr"):
+            if k in p and _has_nested_scan(_sub(p, k)):
+                found = True
+                break
+        if not found and prim == "cond":
+            for br in p["branches"]:
+                if _has_nested_scan(br.jaxpr if hasattr(br, "jaxpr")
+                                    else br):
+                    found = True
+                    break
+        if found:
+            break
+    _NESTED_MEMO[key] = found
+    return found
+
+
+def _walk(jaxpr, mult: int, acc: dict, count_min: bool):
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        p = eqn.params
+
+        if prim == "scan":
+            body = _sub(p, "jaxpr")
+            length = int(p["length"])
+            acc["bytes"] += mult * _out_bytes(eqn)
+            if count_min:
+                n_consts = int(p.get("num_consts", 0))
+                n_carry = int(p["num_carry"])
+                carry_bytes = sum(
+                    _aval_bytes(v.aval)
+                    for v in body.invars[n_consts:n_consts + n_carry])
+                if _has_nested_scan(body):
+                    # outer loop (layers / microbatches): carry does an
+                    # HBM round-trip per iteration, xs/ys stream once,
+                    # and the interior still counts (kernels don't fuse
+                    # across whole layers)
+                    acc["bytes_min"] += mult * (
+                        _in_bytes(eqn) + _out_bytes(eqn)
+                        + 2 * carry_bytes * length)
+                    _walk(body, mult * length, acc, True)
+                else:
+                    # innermost scan (online-softmax attention, SSD
+                    # chunk recurrence, xLSTM cell): a hand-fused kernel
+                    # keeps the body in VMEM — I/O only at the boundary
+                    acc["bytes_min"] += mult * (_in_bytes(eqn)
+                                                + _out_bytes(eqn))
+                    _walk(body, mult * length, acc, False)
+            else:
+                _walk(body, mult * length, acc, False)
+            continue
+
+        if prim == "while":
+            _walk(_sub(p, "body_jaxpr"), mult, acc, False)
+            _walk(_sub(p, "cond_jaxpr"), mult, acc, False)
+            if count_min:
+                acc["bytes_min"] += mult * (_in_bytes(eqn)
+                                            + _out_bytes(eqn))
+            continue
+
+        if prim == "cond":
+            for br in p["branches"]:
+                _walk(br.jaxpr if hasattr(br, "jaxpr") else br, mult,
+                      acc, count_min)
+            continue
+
+        if "jaxpr" in p or "call_jaxpr" in p:
+            body = _sub(p, "jaxpr" if "jaxpr" in p else "call_jaxpr")
+            # pjit/remat wrappers are fusion-transparent
+            _walk(body, mult, acc, count_min)
+            continue
+
+        if prim == "dot_general":
+            acc["flops"] += mult * _dot_flops(eqn)
+            io = _in_bytes(eqn) + _out_bytes(eqn)
+            acc["bytes"] += mult * io
+            if count_min:
+                acc["bytes_min"] += mult * io
+            acc["dots"] += mult
+        elif prim in ("gather", "scatter", "scatter-add", "scatter_add",
+                      "dynamic_slice", "dynamic_update_slice"):
+            io = _in_bytes(eqn) + _out_bytes(eqn)
+            acc["bytes"] += mult * io
+            if count_min:
+                acc["bytes_min"] += mult * io
+        else:
+            acc["bytes"] += mult * _out_bytes(eqn)
+    return acc
+
+
+def jaxpr_cost(fn, *abstract_args) -> dict:
+    """Trace ``fn`` on ShapeDtypeStructs and return
+    {"flops", "bytes", "bytes_min", "dots"} — global totals."""
+    closed = jax.make_jaxpr(fn)(*abstract_args)
+    acc = {"flops": 0, "bytes": 0, "bytes_min": 0, "dots": 0}
+    return _walk(closed.jaxpr, 1, acc, True)

@@ -1,0 +1,34 @@
+"""Production mesh construction (TPU v5e target).
+
+Single-pod: (data=16, model=16) — 256 chips, one DiLoCo island.
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips; the "pod" axis IS
+DiLoCo's replica axis: each pod holds one model replica, inner steps
+never communicate across it, and the outer step's one all-reduce rides
+the (slow) cross-pod links once every H steps.
+
+Functions, not module constants — importing this module must not touch
+jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests use small fake-device meshes)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def pods_of(mesh) -> int:
+    names = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return names.get("pod", 1)
+
+
+def chips_of(mesh) -> int:
+    return mesh.devices.size

@@ -1,0 +1,104 @@
+"""Batched serving driver: prefill a batch of prompts, then decode.
+
+The inference-time half of the paper's claim ("the resulting model has
+the same size and speed as a model trained in fully synchronous mode"):
+a DiLoCo-trained checkpoint serves exactly like any other — the server
+is architecture-agnostic (every assigned arch works via the registry)
+and uses the same prefill/decode entry points the dry-run lowers onto
+the production mesh.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.serve \
+      --arch zamba2_2_7b --smoke --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.models.registry import get_arch, get_smoke_arch
+
+
+def greedy_decode(arch, params, prompts, *, gen: int, extra=None,
+                  temperature: float = 0.0, seed: int = 0):
+    """prompts: (B, S) int32. Returns (B, gen) int32 generated tokens."""
+    B, S = prompts.shape
+    cfg = arch.cfg
+    batch = {"tokens": prompts}
+    if extra:
+        batch.update(extra)
+    logits, cache = arch.prefill(params, batch, cache_len=S + gen)
+    jit_decode = jax.jit(
+        lambda p, c, t, pos: arch.decode(p, c, t, pos))
+
+    key = jax.random.PRNGKey(seed)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    out = [tok]
+    for i in range(gen - 1):
+        logits, cache = jit_decode(params, cache, tok,
+                                   jnp.asarray(S + i, jnp.int32))
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(
+                sub, logits[:, -1] / temperature, -1
+            ).astype(jnp.int32)[:, None]
+        else:
+            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+def run(args):
+    arch = (get_smoke_arch if args.smoke else get_arch)(args.arch)
+    cfg = arch.cfg
+    key = jax.random.PRNGKey(args.seed)
+    params, _ = arch.init(key, cfg)
+    if args.checkpoint:
+        params = ckpt.restore(args.checkpoint, {"params": params})["params"]
+        print("restored", args.checkpoint)
+
+    B, S = args.batch, args.prompt_len
+    prompts = jax.random.randint(jax.random.fold_in(key, 1), (B, S), 0,
+                                 cfg.vocab_size, jnp.int32)
+    extra = {}
+    if cfg.family == "vlm":
+        extra["patches"] = 0.1 * jax.random.normal(
+            jax.random.fold_in(key, 2), (B, cfg.n_patches, cfg.d_model))
+    if cfg.family == "encdec":
+        extra["frames"] = 0.1 * jax.random.normal(
+            jax.random.fold_in(key, 2), (B, cfg.n_frames, cfg.d_model))
+
+    t0 = time.time()
+    toks = greedy_decode(arch, params, prompts, gen=args.gen, extra=extra,
+                         temperature=args.temperature, seed=args.seed)
+    toks.block_until_ready()
+    dt = time.time() - t0
+    total = B * args.gen
+    print(f"arch={args.arch} batch={B} prompt={S} gen={args.gen} "
+          f"-> {total} tokens in {dt:.2f}s ({total / dt:.1f} tok/s, "
+          f"first batch includes compile)")
+    print("sample tokens[0,:16]:", np.asarray(toks[0, :16]))
+    return toks
+
+
+def make_parser():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="diloco_150m")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    return ap
+
+
+if __name__ == "__main__":
+    run(make_parser().parse_args())

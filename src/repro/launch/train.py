@@ -1,0 +1,166 @@
+"""DiLoCo training driver (CLI).
+
+Runs the paper's algorithm end-to-end: optional single-worker
+pretraining phase, then T rounds of (H inner AdamW steps × k replicas +
+one outer Nesterov step), with the paper's robustness features
+switchable from the command line (data regime, communication drops,
+adaptive compute schedule, outer-gradient pruning, outer optimizer).
+
+On CPU this drives the reduced-scale models (--smoke, default) used by
+the benchmark suite; the same functions lower onto the production mesh
+(see dryrun.py) for TPU execution.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.train \
+      --arch diloco_150m --smoke --k 4 --H 20 --rounds 30 \
+      --regime non_iid --outer-opt nesterov
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import DiLoCoConfig, TrainConfig
+from repro.core import diloco, schedules
+from repro.data.sharding import make_regime, shard_weights
+from repro.models.registry import get_arch, get_smoke_arch
+
+
+def build(args):
+    arch = (get_smoke_arch if args.smoke else get_arch)(args.arch)
+    cfg = arch.cfg
+    dcfg = DiLoCoConfig(k=args.k, H=args.H, outer_opt=args.outer_opt,
+                        outer_lr=args.outer_lr,
+                        outer_momentum=args.outer_momentum,
+                        drop_prob=args.drop_prob,
+                        prune_frac=args.prune_frac,
+                        weighted_avg=args.weighted)
+    total = args.pretrain_steps + args.rounds * args.H
+    tcfg = TrainConfig(inner_lr=args.inner_lr, warmup_steps=args.warmup,
+                       total_steps=total, batch_size=args.batch,
+                       seq_len=args.seq, seed=args.seed)
+    sampler = make_regime(args.regime, k=args.k,
+                          vocab_size=cfg.vocab_size, seed=args.seed,
+                          imbalanced=args.weighted)
+    return arch, cfg, dcfg, tcfg, sampler
+
+
+def run(args):
+    arch, cfg, dcfg, tcfg, sampler = build(args)
+    loss_fn = lambda p, b: arch.loss(p, b)
+    key = jax.random.PRNGKey(args.seed)
+    key, init_key = jax.random.split(key)
+    params, _ = arch.init(init_key, cfg)
+    ev = diloco.make_eval(loss_fn)
+    val = sampler.sample_validation(jax.random.PRNGKey(10_000),
+                                    args.eval_batch, args.seq)
+    history = []
+
+    # ---- pretraining phase (paper: 24k steps before DiLoCo) ----
+    if args.pretrain_steps:
+        step = diloco.make_single_worker_step(loss_fn, tcfg,
+                                              total_steps=tcfg.total_steps)
+        from repro.optim import adamw
+        opt = adamw.init(params)
+        for i in range(args.pretrain_steps):
+            key, sub = jax.random.split(key)
+            batch = {"tokens": sampler.sample_validation(
+                sub, args.batch, args.seq)}
+            params, opt, m = step(params, opt, batch, jnp.asarray(i))
+            if (i + 1) % args.log_every == 0:
+                vl = float(ev(params, val))
+                history.append({"phase": "pretrain", "inner_steps": i + 1,
+                                "val_loss": vl})
+                print(f"[pretrain {i + 1}] loss={float(m['loss']):.4f} "
+                      f"val={vl:.4f}", flush=True)
+
+    # ---- DiLoCo phase ----
+    state = diloco.init_state(params, dcfg)
+    rnd = diloco.make_round(loss_fn, sampler.sample_all_shards, dcfg, tcfg,
+                            total_steps=tcfg.total_steps,
+                            compute_cosine=args.cosine_stats,
+                            batch_size=args.batch, seq_len=args.seq)
+    rng = np.random.default_rng(args.seed)
+    drops = schedules.drop_masks(rng, args.drop_prob, args.k, args.rounds)
+    sched = schedules.compute_schedule(args.compute_schedule, args.k,
+                                       args.rounds)
+    weights = jnp.asarray(shard_weights(sampler, args.weighted))
+
+    t0 = time.time()
+    for t in range(args.rounds):
+        key, sub = jax.random.split(key)
+        act = jnp.asarray(schedules.active_mask(int(sched[t]), args.k))
+        state, m = rnd(state, sub, jnp.asarray(drops[t]), act, weights)
+        vl = float(ev(state.global_params, val))
+        rec = {"phase": "diloco", "round": t + 1,
+               "inner_steps": args.pretrain_steps + (t + 1) * args.H,
+               "inner_loss": float(m["inner_loss"]), "val_loss": vl,
+               "outer_gnorm": float(m["outer_gnorm"]),
+               "active": int(sched[t])}
+        if args.cosine_stats:
+            rec["cos_mean"] = float(m["cos_mean"])
+            rec["cos_std"] = float(m["cos_std"])
+        history.append(rec)
+        print(f"[round {t + 1}/{args.rounds}] "
+              f"inner={rec['inner_loss']:.4f} val={vl:.4f} "
+              f"ppl={np.exp(vl):.2f} active={rec['active']}", flush=True)
+
+    print(f"done in {time.time() - t0:.1f}s; "
+          f"entropy floor = {sampler.entropy_floor():.4f} "
+          f"(ppl {np.exp(sampler.entropy_floor()):.2f})")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"args": vars(args), "history": history}, f, indent=1)
+        print("wrote", args.out)
+    if args.checkpoint:
+        ckpt.save(args.checkpoint,
+                  {"params": state.global_params,
+                   "outer_buf": state.outer_state.buf},
+                  metadata={"rounds": args.rounds, "k": args.k,
+                            "H": args.H})
+        print("checkpoint:", args.checkpoint)
+    return history
+
+
+def make_parser():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="diloco_150m")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--H", type=int, default=50)
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--pretrain-steps", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--eval-batch", type=int, default=64)
+    ap.add_argument("--inner-lr", type=float, default=1e-3)
+    ap.add_argument("--warmup", type=int, default=50)
+    ap.add_argument("--outer-opt", default="nesterov",
+                    choices=["nesterov", "sgd", "sgdm", "adam"])
+    ap.add_argument("--outer-lr", type=float, default=0.7)
+    ap.add_argument("--outer-momentum", type=float, default=0.9)
+    ap.add_argument("--regime", default="non_iid",
+                    choices=["iid", "non_iid"])
+    ap.add_argument("--drop-prob", type=float, default=0.0)
+    ap.add_argument("--prune-frac", type=float, default=0.0)
+    ap.add_argument("--weighted", action="store_true")
+    ap.add_argument("--compute-schedule", default="constant_distributed",
+                    choices=["constant_local", "constant_distributed",
+                             "doubling", "halving", "ramp_up", "ramp_down"])
+    ap.add_argument("--cosine-stats", action="store_true")
+    ap.add_argument("--log-every", type=int, default=200)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="")
+    ap.add_argument("--checkpoint", default="")
+    return ap
+
+
+if __name__ == "__main__":
+    run(make_parser().parse_args())

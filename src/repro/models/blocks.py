@@ -1,0 +1,211 @@
+"""Composable residual blocks shared by all architecture families.
+
+A block kind is a string; init/apply dispatch on it:
+  attn_mlp        pre-norm self-attention + (MLP | MoE)     [dense & MoE LMs]
+  mla_moe         MLA self-attention + MoE                  [deepseek-v2]
+  cross_mlp       gated cross-attention + MLP               [VLM layers]
+  self_cross_mlp  self-attn + cross-attn + MLP              [whisper decoder]
+  enc_attn_mlp    bidirectional self-attention + MLP        [whisper encoder]
+  mamba2          Mamba2 SSD mixer                          [zamba2, mamba]
+  mlstm / slstm   xLSTM cells                               [xlstm]
+
+Every apply returns ``(x, new_cache, aux)`` where cache is a (possibly
+empty) dict pytree whose leaves scan cleanly over stacked layers, and aux
+is a scalar auxiliary loss (MoE load balance; 0 elsewhere).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import moe as MOE
+from . import mla as MLA
+from . import ssm as SSM
+from . import xlstm as XL
+from .layers import dense_init, zeros_init
+
+
+def init_block(key, cfg, kind: str):
+    ks = jax.random.split(key, 8)
+    n = lambda: L.init_norm(cfg.norm, cfg.d_model)
+    if kind == "attn_mlp":
+        p = {"ln1": n(), "attn": L.init_attention(ks[0], cfg)}
+        if cfg.n_experts:
+            p["ln2"] = n()
+            p["moe"] = MOE.init_moe(ks[1], cfg)
+        else:
+            p["ln2"] = n()
+            p["mlp"] = L.init_mlp(ks[1], cfg)
+        return p
+    if kind == "mla_moe":
+        return {"ln1": n(), "mla": MLA.init_mla(ks[0], cfg),
+                "ln2": n(), "moe": MOE.init_moe(ks[1], cfg)}
+    if kind == "cross_mlp":
+        return {"ln1": n(), "xattn": L.init_attention(ks[0], cfg),
+                "ln2": n(), "mlp": L.init_mlp(ks[1], cfg),
+                "gate_attn": zeros_init((1,), (None,)),
+                "gate_mlp": zeros_init((1,), (None,))}
+    if kind == "self_cross_mlp":
+        return {"ln1": n(), "attn": L.init_attention(ks[0], cfg),
+                "ln2": n(), "xattn": L.init_attention(ks[1], cfg),
+                "ln3": n(), "mlp": L.init_mlp(ks[2], cfg)}
+    if kind == "enc_attn_mlp":
+        return {"ln1": n(), "attn": L.init_attention(ks[0], cfg),
+                "ln2": n(), "mlp": L.init_mlp(ks[1], cfg)}
+    if kind == "mamba2":
+        return {"ln1": n(), "mixer": SSM.init_mamba2(ks[0], cfg)}
+    if kind == "mlstm":
+        return {"ln1": n(), "cell": XL.init_mlstm(ks[0], cfg)}
+    if kind == "slstm":
+        return {"ln1": n(), "cell": XL.init_slstm(ks[0], cfg)}
+    raise ValueError(kind)
+
+
+def apply_block(p, x, cfg, kind: str, *, positions=None, cache=None,
+                cache_pos=None, kv_x=None, cross_kv=None, groups=1,
+                window=None):
+    """One residual block. ``window`` overrides cfg.window when not None."""
+    win = cfg.window if window is None else window
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {}
+    norm = lambda q, xx: L.apply_norm(p[q], xx, cfg.norm)
+
+    if kind in ("attn_mlp", "enc_attn_mlp"):
+        causal = kind == "attn_mlp"
+        h = norm("ln1", x)
+        a, c = L.apply_attention(p["attn"], h, cfg, positions=positions,
+                                 cache=cache.get("attn") if cache else None,
+                                 cache_pos=cache_pos, window=win,
+                                 causal=causal)
+        if c is not None:
+            new_cache["attn"] = c
+        if cfg.parallel_block:
+            m = L.apply_mlp(p["mlp"], h, cfg)
+            x = x + a + m
+        else:
+            x = x + a
+            h2 = norm("ln2", x)
+            if "moe" in p:
+                m, aux = MOE.apply_moe(p["moe"], h2, cfg, groups=groups)
+            else:
+                m = L.apply_mlp(p["mlp"], h2, cfg)
+            x = x + m
+        return x, new_cache, aux
+
+    if kind == "mla_moe":
+        h = norm("ln1", x)
+        a, c = MLA.apply_mla(p["mla"], h, cfg, positions=positions,
+                             cache=cache.get("mla") if cache else None,
+                             cache_pos=cache_pos)
+        if c is not None:
+            new_cache["mla"] = c
+        x = x + a
+        h2 = norm("ln2", x)
+        m, aux = MOE.apply_moe(p["moe"], h2, cfg, groups=groups)
+        return x + m, new_cache, aux
+
+    if kind == "cross_mlp":
+        # gated cross-attn (llama-3.2-vision style): tanh-gated residuals
+        h = norm("ln1", x)
+        xkv, new_cache = _cross_kv(p["xattn"], cfg, kv_x, cache)
+        a, _ = L.apply_attention(p["xattn"], h, cfg, positions=positions,
+                                 causal=False, cross_kv=xkv, window=0)
+        x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * a
+        h2 = norm("ln2", x)
+        m = L.apply_mlp(p["mlp"], h2, cfg)
+        return (x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * m,
+                new_cache, aux)
+
+    if kind == "self_cross_mlp":
+        h = norm("ln1", x)
+        a, c = L.apply_attention(p["attn"], h, cfg, positions=positions,
+                                 cache=cache.get("attn") if cache else None,
+                                 cache_pos=cache_pos, window=win,
+                                 causal=True)
+        if c is not None:
+            new_cache["attn"] = c
+        x = x + a
+        h2 = norm("ln2", x)
+        xkv, xc = _cross_kv(p["xattn"], cfg, kv_x, cache)
+        new_cache.update(xc)
+        a2, _ = L.apply_attention(p["xattn"], h2, cfg, positions=positions,
+                                  causal=False, cross_kv=xkv, window=0)
+        x = x + a2
+        h3 = norm("ln3", x)
+        return x + L.apply_mlp(p["mlp"], h3, cfg), new_cache, aux
+
+    if kind == "mamba2":
+        h = norm("ln1", x)
+        st = cache.get("ssm") if cache else None
+        ct = cache.get("conv") if cache else None
+        o, (ns, nt) = SSM.apply_mamba2(p["mixer"], h, cfg, state=st,
+                                       conv_tail=ct)
+        if cache is not None:
+            new_cache = {"ssm": ns, "conv": nt}
+        return x + o, new_cache, aux
+
+    if kind in ("mlstm", "slstm"):
+        h = norm("ln1", x)
+        st = cache.get("state") if cache else None
+        fn = XL.apply_mlstm if kind == "mlstm" else XL.apply_slstm
+        o, ns = fn(p["cell"], h, cfg, state=st)
+        if cache is not None:
+            new_cache = {"state": ns}
+        return x + o, new_cache, aux
+
+    raise ValueError(kind)
+
+
+def _cross_kv(p, cfg, kv_x, cache):
+    """(cross_kv, cache_entries): project cross K/V once at prefill and
+    cache them; decode reuses the cached pair (recomputing them per step
+    is the dominant FLOPs waste for enc-dec/VLM serving)."""
+    if kv_x is not None:
+        xk, xv = L.project_cross_kv(p, cfg, kv_x)
+        entries = {"xk": xk, "xv": xv} if cache is not None else {}
+        return (xk, xv), entries
+    if cache is not None and "xk" in cache:
+        return (cache["xk"], cache["xv"]), {"xk": cache["xk"],
+                                            "xv": cache["xv"]}
+    raise ValueError("cross-attention needs kv_x (train/prefill) or a "
+                     "prefilled cache (decode)")
+
+
+def init_block_cache(cfg, kind: str, batch: int, cache_len: int, dtype):
+    """Zeroed decode cache for one block of ``kind``."""
+    hd = cfg.resolved_head_dim
+    G = cfg.n_kv_heads
+    if kind == "self_cross_mlp":
+        c = {"attn": L.init_attn_cache(cfg, batch, cache_len, dtype)}
+        c["xk"] = jnp.zeros((batch, cfg.n_frames, G, hd), dtype)
+        c["xv"] = jnp.zeros((batch, cfg.n_frames, G, hd), dtype)
+        return c
+    if kind == "cross_mlp":
+        return {"xk": jnp.zeros((batch, cfg.n_patches, G, hd), dtype),
+                "xv": jnp.zeros((batch, cfg.n_patches, G, hd), dtype)}
+    if kind in ("attn_mlp", "enc_attn_mlp"):
+        return {"attn": L.init_attn_cache(cfg, batch, cache_len, dtype)}
+    if kind == "mla_moe":
+        return {"mla": MLA.init_mla_cache(cfg, batch, cache_len, dtype)}
+    if kind == "mamba2":
+        s, t = SSM.init_mamba2_state(cfg, batch, dtype)
+        return {"ssm": s, "conv": t}
+    if kind == "mlstm":
+        return {"state": XL.init_mlstm_state(cfg, batch)}
+    if kind == "slstm":
+        return {"state": XL.init_slstm_state(cfg, batch)}
+    return {}
+
+
+def stacked_init(key, cfg, kind: str, count: int):
+    """vmap-init ``count`` layers of one kind: leaves get leading (L,) dim.
+
+    Boxed leaves get their axes preserved (the stacked dim is None)."""
+    from repro.sharding.spec import Boxed, is_boxed
+    keys = jax.random.split(key, count)
+    per = [init_block(k, cfg, kind) for k in keys]
+    return jax.tree.map(
+        lambda *ls: Boxed(jnp.stack([b.value for b in ls]),
+                          (None,) + ls[0].axes),
+        *per, is_leaf=is_boxed)

@@ -1,0 +1,129 @@
+"""Multi-head Latent Attention (DeepSeek-V2).
+
+Keys/values are compressed into a rank-``kv_lora_rank`` latent c_kv plus a
+small decoupled-RoPE key shared across heads; only (c_kv, k_rope) is
+cached — the cache is ~(r + dr)/(2·H·dh) the size of a dense GQA cache.
+
+Decode uses the *absorbed* formulation: scores are computed directly in
+latent space by folding W_uk into the query (q_eff = q_nope · W_uk), so
+the per-step cost never up-projects the whole cache. The absorbed score
+is exactly ⟨[q_eff; q_rope], [c_kv; k_rope]⟩ which lets us reuse the
+generic chunked online-softmax `attention` with a single latent "head".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (dense_init, zeros_init, ones_init, apply_norm,
+                     apply_rope, attention)
+
+
+def init_mla(key, cfg):
+    D = cfg.d_model
+    H = cfg.n_heads
+    dh = cfg.resolved_head_dim          # nope dims per head
+    dv = cfg.resolved_v_head_dim
+    dr = cfg.rope_head_dim
+    r = cfg.kv_lora_rank
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": dense_init(ks[0], (D, H, dh + dr), ("embed", "heads", None),
+                         cfg.init_scale),
+        "w_dkv": dense_init(ks[1], (D, r), ("embed", None), cfg.init_scale),
+        "w_kr": dense_init(ks[2], (D, dr), ("embed", None), cfg.init_scale),
+        "ckv_norm": ones_init((r,), (None,)),
+        "w_uk": dense_init(ks[3], (r, H, dh), (None, "heads", None),
+                           cfg.init_scale),
+        "w_uv": dense_init(ks[4], (r, H, dv), (None, "heads", None),
+                           cfg.init_scale),
+        "wo": dense_init(ks[5], (H, dv, D), ("heads", None, "embed"),
+                         cfg.init_scale),
+    }
+
+
+def _project_qkv_latent(p, x, cfg, positions):
+    dt = x.dtype
+    dh = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    q_nope, q_rope = q[..., :dh], q[..., dh:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c_kv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(dt))
+    c_kv = apply_norm({"scale": p["ckv_norm"]}, c_kv, "rmsnorm")
+    k_rope = jnp.einsum("bsd,dr->bsr", x, p["w_kr"].astype(dt))
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def apply_mla(p, x, cfg, *, positions, cache=None, cache_pos=None):
+    """Returns (out, new_cache). cache = {"ckv": (B,C,r), "kr": (B,C,dr),
+    "pos": (1,C)}; train/prefill when cache is None."""
+    dt = x.dtype
+    dh = cfg.resolved_head_dim
+    dr = cfg.rope_head_dim
+    scale = (dh + dr) ** -0.5
+    q_nope, q_rope, c_kv, k_rope = _project_qkv_latent(p, x, cfg, positions)
+
+    if cache is None:
+        # training/prefill: up-project latents to per-head K/V (MHA-like)
+        k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"].astype(dt))
+        v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"].astype(dt))
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (*k_nope.shape[:3], dr))], -1)
+        qq = jnp.concatenate([q_nope, q_rope], -1)
+        out = attention(qq, k, v, causal=True, window=cfg.window,
+                        chunk=cfg.attn_chunk, scale=scale)
+        o = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+        return o, None
+
+    # decode: absorbed scores in latent space. Ring-buffer scatter write
+    # (wrap-correct; >C tokens at once keep only the last C).
+    B, S = x.shape[:2]
+    C = cache["ckv"].shape[1]
+    if S > C:
+        c_kv, k_rope = c_kv[:, -C:], k_rope[:, -C:]
+        cache_pos_eff = cache_pos + (S - C)
+        S_eff = C
+    else:
+        cache_pos_eff, S_eff = cache_pos, S
+    offs = jnp.arange(S_eff, dtype=jnp.int32)
+    upd = jnp.broadcast_to((cache_pos_eff + offs)[None],
+                           (x.shape[0], S_eff))
+    if S_eff == 1:   # decode: dynamic_update_slice partitions locally
+        slot0 = cache_pos_eff % C
+        ckv = jax.lax.dynamic_update_slice(cache["ckv"], c_kv,
+                                           (0, slot0, 0))
+        kr = jax.lax.dynamic_update_slice(cache["kr"], k_rope,
+                                          (0, slot0, 0))
+        pos_t = jax.lax.dynamic_update_slice(cache["pos"], upd,
+                                             (0, slot0))
+    else:
+        slots = (cache_pos_eff + offs) % C
+        ckv = cache["ckv"].at[:, slots].set(c_kv)
+        kr = cache["kr"].at[:, slots].set(k_rope)
+        pos_t = cache["pos"].at[:, slots].set(upd)
+    new_cache = {"ckv": ckv, "kr": kr, "pos": pos_t}
+
+    q_eff = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"].astype(dt))
+    q_lat = jnp.concatenate([q_eff, q_rope], -1)        # (B,S,H,r+dr)
+    k_lat = jnp.concatenate([ckv, kr], -1)[:, :, None]  # (B,C,1,r+dr)
+    v_lat = ckv[:, :, None]                             # (B,C,1,r)
+    kv_pos = pos_t if S <= 8 else pos_t[0]
+    ctx = attention(q_lat, k_lat, v_lat, causal=True, window=cfg.window,
+                    q_offset=cache_pos, kv_positions=kv_pos,
+                    kv_valid=kv_pos >= 0, chunk=cfg.attn_chunk,
+                    scale=scale,
+                    kv_shard=cfg.decode_kv_shard or None)  # (B,S,H,r)
+    out = jnp.einsum("bshr,rhk->bshk", ctx, p["w_uv"].astype(dt))
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    return o, new_cache
+
+
+def init_mla_cache(cfg, batch: int, cache_len: int, dtype):
+    return {
+        "ckv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
+        "kr": jnp.zeros((batch, cache_len, cfg.rope_head_dim), dtype),
+        "pos": jnp.full((batch, cache_len), -1, jnp.int32),
+    }

@@ -1,0 +1,256 @@
+"""Unified stacked-scan LM engine for every architecture family.
+
+A ``plan`` describes the repeating layer pattern; layers of each pattern
+position are stacked with a leading (n_groups,) dim and executed with
+``lax.scan`` over groups (compile time & HLO size stay O(pattern), not
+O(depth) — essential for the 100-layer VLM dry-run on CPU). Within a
+group the (short) pattern is unrolled.
+
+Special pattern entries:
+  "SHARED" — zamba2-style: a single *tied* block (params outside the
+  scan; gradients accumulate through the scan closure) invoked once per
+  group; per-invocation KV caches still scan.
+
+Encoder-decoder (whisper) adds a separate encoder stack; VLM/whisper pass
+their stubbed modality embeddings as ``cross_src``.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.spec import Boxed, unbox, constrain
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+from . import blocks as BLK
+
+
+@dataclass(frozen=True)
+class Plan:
+    pattern: tuple              # kinds per group, may contain "SHARED"
+    n_groups: int
+    shared_kind: str = ""      # kind of the SHARED block (zamba2)
+    enc_layers: int = 0         # whisper encoder depth
+    cross_src: str = ""        # batch key of stubbed modality embeddings
+
+
+def make_plan(cfg) -> Plan:
+    f = cfg.family
+    if f == "dense":
+        return Plan(("attn_mlp",), cfg.n_layers)
+    if f == "moe":
+        kind = "mla_moe" if cfg.mla else "attn_mlp"
+        return Plan((kind,), cfg.n_layers)
+    if f == "vlm":
+        e = cfg.cross_attn_every
+        n_cross = cfg.n_layers // e
+        assert cfg.n_layers % e == 0
+        return Plan(("attn_mlp",) * (e - 1) + ("cross_mlp",), n_cross,
+                    cross_src="patches")
+    if f == "encdec":
+        return Plan(("self_cross_mlp",), cfg.n_layers,
+                    enc_layers=cfg.n_enc_layers, cross_src="frames")
+    if f == "hybrid":
+        e = cfg.shared_attn_every
+        assert cfg.n_layers % e == 0
+        return Plan(("mamba2",) * e + ("SHARED",), cfg.n_layers // e,
+                    shared_kind="attn_mlp")
+    if f == "ssm":
+        if cfg.slstm_every:
+            e = cfg.slstm_every
+            assert cfg.n_layers % e == 0
+            return Plan(("mlstm",) * (e - 1) + ("slstm",),
+                        cfg.n_layers // e)
+        return Plan(("mamba2",), cfg.n_layers)
+    raise ValueError(f)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg):
+    """Returns a Boxed tree; call sharding.spec.unbox() to split."""
+    plan = make_plan(cfg)
+    ks = jax.random.split(key, 8 + len(plan.pattern))
+    params = {"embed": L.init_embedding(ks[0], cfg),
+              "ln_f": L.init_norm(cfg.norm, cfg.d_model),
+              "head": L.init_lm_head(ks[1], cfg)}
+    if cfg.pos_emb == "learned":
+        params["pos_table"] = L.dense_init(
+            ks[2], (min(cfg.max_position, 1 << 16), cfg.d_model),
+            (None, "embed"), cfg.init_scale)
+    for i, kind in enumerate(plan.pattern):
+        if kind == "SHARED":
+            continue
+        params[f"stack{i}"] = BLK.stacked_init(ks[3 + i], cfg, kind,
+                                               plan.n_groups)
+    if plan.shared_kind:
+        params["shared"] = BLK.init_block(ks[-1], cfg, plan.shared_kind)
+    if plan.enc_layers:
+        params["encoder"] = BLK.stacked_init(ks[-2], cfg, "enc_attn_mlp",
+                                             plan.enc_layers)
+        params["enc_ln_f"] = L.init_norm(cfg.norm, cfg.d_model)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _run_encoder(params, cfg, frames):
+    """Whisper-style encoder over stubbed frame embeddings (B, T, D)."""
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    x = x + L.sincos_positions(x.shape[1], cfg.d_model, x.dtype)[None]
+    pos = jnp.arange(x.shape[1])
+
+    def body(x, lp):
+        x, _, _ = BLK.apply_block(lp, x, cfg, "enc_attn_mlp", positions=pos,
+                                  window=0)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.apply_norm(params["enc_ln_f"], x, cfg.norm)
+
+
+def forward(params, cfg, tokens, *, extra=None, cache=None, cache_pos=None,
+            groups: int = 1, window=None):
+    """Core forward. tokens: (B, S). cache/cache_pos => decode/prefill.
+
+    Returns (logits, new_cache, aux). new_cache is None when cache is None.
+    """
+    plan = make_plan(cfg)
+    dt = jnp.dtype(cfg.compute_dtype)
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens, cfg)
+    # activations: batch over cfg.act_batch_axes, d_model over "model"
+    # when act_model_shard (Megatron sequence-parallel-style residual
+    # sharding — 16x smaller remat stash on the production mesh; small
+    # models flip to pure-DP with batch over both axes instead).
+    # No-op off-mesh.
+    ba = tuple(cfg.act_batch_axes)
+    if cfg.act_seq_shard:
+        # Megatron sequence-parallelism: the residual stream is sharded
+        # over (batch=data, seq=model); GSPMD places all-gather before
+        # attn/mlp interiors and reduce-scatter after — half the wire
+        # bytes of the all-reduce pattern, same 16x remat-stash saving
+        x = constrain(x, P(ba if len(ba) > 1 else ba[0], "model", None))
+    else:
+        x = constrain(x, P(ba if len(ba) > 1 else ba[0], None,
+                           "model" if cfg.act_model_shard else None))
+
+    if cache_pos is None:
+        cache_pos = jnp.zeros((), jnp.int32)
+    positions = cache_pos + jnp.arange(S)
+    if cfg.pos_emb == "learned":
+        # positions are contiguous (cache_pos + arange) — a dynamic
+        # slice, not a gather, so SPMD partitioning of the table stays
+        # trivial (gather of a model-sharded table trips the partitioner)
+        tbl = params["pos_table"].astype(dt)
+        start = jnp.clip(cache_pos, 0, tbl.shape[0] - S)
+        x = x + jax.lax.dynamic_slice_in_dim(tbl, start, S, 0)[None]
+    elif cfg.pos_emb == "sincos":
+        x = x + L.sincos_positions(S, cfg.d_model, dt)[None]
+
+    cross_src = None
+    if plan.cross_src and extra is not None and plan.cross_src in extra:
+        src = extra[plan.cross_src]
+        if plan.enc_layers:
+            src = _run_encoder(params, cfg, src)
+        cross_src = src.astype(dt)
+    # decode (extra absent): blocks read their cached cross K/V — the
+    # modality source is projected exactly once, at prefill
+
+    stacked_params = tuple(
+        params[f"stack{i}"] if k != "SHARED" else None
+        for i, k in enumerate(plan.pattern))
+    stacked_caches = tuple(
+        cache[f"cache{i}"] if cache is not None else None
+        for i in range(len(plan.pattern)))
+
+    def group_body(carry, xs):
+        x, aux = carry
+        lps, lcs = xs
+        new_cs = []
+        for i, kind in enumerate(plan.pattern):
+            k = plan.shared_kind if kind == "SHARED" else kind
+            p = params["shared"] if kind == "SHARED" else lps[i]
+            x, c, a = BLK.apply_block(
+                p, x, cfg, k, positions=positions, cache=lcs[i],
+                cache_pos=cache_pos, kv_x=cross_src, groups=groups,
+                window=window)
+            new_cs.append(c)
+            aux = aux + a
+        return (x, aux), tuple(new_cs)
+
+    body = jax.checkpoint(group_body) if (cfg.remat and cache is None) \
+        else group_body
+    (x, aux), new_caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (stacked_params, stacked_caches))
+
+    x = L.apply_norm(params["ln_f"], x, cfg.norm)
+    logits = L.lm_logits(params.get("head", {}), params["embed"], x, cfg)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {f"cache{i}": new_caches[i]
+                     for i in range(len(plan.pattern))}
+    return logits, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, cfg, batch, *, groups: int = 1):
+    logits, _, aux = forward(params, cfg, batch["tokens"],
+                             extra=batch, groups=groups)
+    ce = L.next_token_loss(logits, batch["tokens"])
+    total = ce + cfg.router_aux_coef * aux
+    return total, {"loss": ce, "aux": aux}
+
+
+def init_cache(cfg, batch: int, cache_len: int, dtype, *,
+               window: int = 0):
+    """Zeroed decode cache. ``window``>0 bounds attention cache length."""
+    plan = make_plan(cfg)
+    eff = min(cache_len, window) if window else cache_len
+    out = {}
+    for i, kind in enumerate(plan.pattern):
+        k = plan.shared_kind if kind == "SHARED" else kind
+        c1 = BLK.init_block_cache(cfg, k, batch, eff, dtype)
+        out[f"cache{i}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a, (plan.n_groups,) + a.shape).copy(), c1)
+    return out
+
+
+def prefill(params, cfg, tokens, *, extra=None, window: int = 0,
+            groups: int = 1, cache_len: int = 0):
+    """Run the full prompt, building the decode cache. Returns
+    (logits, cache). ``cache_len`` sizes the cache for subsequent decode
+    (default: prompt length only)."""
+    B, S = tokens.shape
+    dt = jnp.dtype(cfg.compute_dtype)
+    cache = init_cache(cfg, B, max(cache_len, S), dt, window=window)
+    logits, cache, _ = forward(params, cfg, tokens, extra=extra,
+                               cache=cache, cache_pos=jnp.zeros((), jnp.int32),
+                               groups=groups, window=window or None)
+    return logits, cache
+
+
+def decode_step(params, cfg, cache, tokens, pos, *, window: int = 0,
+                groups: int = 1):
+    """One decode step. tokens: (B, 1); pos: scalar int32 absolute
+    position. Returns (logits, new_cache)."""
+    logits, cache, _ = forward(params, cfg, tokens, cache=cache,
+                               cache_pos=pos, groups=groups,
+                               window=window or None)
+    return logits, cache

@@ -1,0 +1,125 @@
+"""Architecture registry: uniform API over every assigned architecture.
+
+``get_arch(name)`` -> Arch with init / loss / prefill / decode entry
+points, plus ``input_specs`` / ``cache_specs`` producing
+ShapeDtypeStruct stand-ins for the dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import functools
+import importlib
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, \
+    LONG_CONTEXT_WINDOW
+from repro.sharding.spec import unbox
+from . import model as M
+
+ARCH_NAMES = [
+    "whisper_large_v3", "deepseek_v2_lite_16b", "starcoder2_7b",
+    "llama_3_2_vision_90b", "stablelm_1_6b", "olmoe_1b_7b", "qwen3_32b",
+    "zamba2_2_7b", "command_r_35b", "xlstm_350m",
+    # the paper's own Chinchilla-style models
+    "diloco_60m", "diloco_150m", "diloco_400m",
+]
+
+# families with full self-attention that need a sliding window at 500k ctx
+_ATTN_FAMILIES = ("dense", "moe", "vlm", "encdec", "hybrid")
+
+
+@dataclass
+class Arch:
+    cfg: ModelConfig
+
+    # ---- shape adaptation ----
+    def shape_cfg(self, shape: ShapeConfig) -> ModelConfig:
+        """Per-shape config: long-context decode on attention archs flips
+        on sliding-window attention (sub-quadratic carve-out)."""
+        cfg = self.cfg
+        if (shape.kind == "decode" and shape.seq_len > 65_536
+                and cfg.family in _ATTN_FAMILIES and not cfg.window):
+            cfg = cfg.replace(window=LONG_CONTEXT_WINDOW)
+        return cfg
+
+    # ---- params ----
+    def init(self, key, cfg=None):
+        params_boxed = M.init_params(key, cfg or self.cfg)
+        return unbox(params_boxed)
+
+    # ---- entry points ----
+    def loss(self, params, batch, *, cfg=None, groups: int = 1):
+        return M.loss_fn(params, cfg or self.cfg, batch, groups=groups)
+
+    def prefill(self, params, batch, *, cfg=None, groups: int = 1,
+                cache_len: int = 0):
+        cfg = cfg or self.cfg
+        extra = {k: v for k, v in batch.items() if k != "tokens"}
+        return M.prefill(params, cfg, batch["tokens"],
+                         extra=extra or None, window=cfg.window,
+                         groups=groups, cache_len=cache_len)
+
+    def decode(self, params, cache, tokens, pos, *, cfg=None,
+               groups: int = 1):
+        cfg = cfg or self.cfg
+        return M.decode_step(params, cfg, cache, tokens, pos,
+                             window=cfg.window, groups=groups)
+
+    # ---- specs for the dry-run ----
+    def input_specs(self, shape: ShapeConfig, *, batch_override: int = 0,
+                    dtype=jnp.float32) -> dict:
+        cfg = self.shape_cfg(shape)
+        B = batch_override or shape.global_batch
+        S = shape.seq_len
+        sd = jax.ShapeDtypeStruct
+        if shape.kind == "train":
+            out = {"tokens": sd((B, S), jnp.int32)}
+        elif shape.kind == "prefill":
+            out = {"tokens": sd((B, S), jnp.int32)}
+        else:  # decode
+            out = {"tokens": sd((B, 1), jnp.int32)}
+        if cfg.family == "vlm" and shape.kind != "decode":
+            out["patches"] = sd((B, cfg.n_patches, cfg.d_model), dtype)
+        if cfg.family == "encdec" and shape.kind != "decode":
+            out["frames"] = sd((B, cfg.n_frames, cfg.d_model), dtype)
+        return out
+
+    def cache_specs(self, shape: ShapeConfig, *, batch_override: int = 0,
+                    dtype=jnp.float32):
+        cfg = self.shape_cfg(shape)
+        B = batch_override or shape.global_batch
+        fn = lambda: M.init_cache(cfg, B, shape.seq_len, dtype,
+                                  window=cfg.window)
+        return jax.eval_shape(fn)
+
+    def abstract_params(self, cfg=None):
+        """(ShapeDtypeStruct tree, logical-axes tree) without allocation.
+
+        The logical-axes tree is captured as a side effect of tracing the
+        init under eval_shape (init is structurally deterministic)."""
+        cfg = cfg or self.cfg
+        axes_holder = {}
+
+        def go(key):
+            p, ax = unbox(M.init_params(key, cfg))
+            axes_holder["axes"] = ax
+            return p
+
+        shapes = jax.eval_shape(go, jax.random.PRNGKey(0))
+        return shapes, axes_holder["axes"]
+
+
+@functools.lru_cache(maxsize=None)
+def get_arch(name: str) -> Arch:
+    name = name.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return Arch(cfg=mod.config())
+
+
+@functools.lru_cache(maxsize=None)
+def get_smoke_arch(name: str) -> Arch:
+    name = name.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return Arch(cfg=mod.smoke_config())

@@ -1,0 +1,178 @@
+"""Mamba2 (SSD — state-space duality) blocks, chunked-scan formulation.
+
+Training/prefill uses the chunked SSD algorithm: within-chunk quadratic
+(attention-like) term + inter-chunk linear recurrence carried by
+``lax.scan`` — memory is O(chunk²) not O(T²), so 500k contexts lower with
+bounded buffers. Decode is the exact single-step recurrence with constant
+state (B, H, N, P) + a (conv_width-1)-deep causal-conv tail state.
+
+TPU adaptation: the chunk recurrence is a sequential scan over chunks
+(maps to an XLA while loop); within-chunk einsums are MXU-shaped
+(cs=256 multiples of 128 work well). The expanded inner dim is sharded
+over the "model" mesh axis (head-parallel); the scan carries only the
+per-device state shard, so the recurrence itself needs no collectives.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, zeros_init, ones_init, apply_norm
+
+
+def init_mamba2(key, cfg):
+    D = cfg.d_model
+    d_inner = cfg.ssm_expand * D
+    H = cfg.ssm_heads or max(1, d_inner // 64)
+    N = cfg.ssm_state
+    conv_ch = d_inner + 2 * N
+    ks = jax.random.split(key, 6)
+    # in_proj -> [z(d_inner), x(d_inner), B(N), C(N), dt(H)]
+    d_in_total = 2 * d_inner + 2 * N + H
+    p = {
+        "in_proj": dense_init(ks[0], (D, d_in_total), ("embed", "inner"),
+                              cfg.init_scale),
+        "out_proj": dense_init(ks[1], (d_inner, D), ("inner", "embed"),
+                               cfg.init_scale),
+        "conv_w": dense_init(ks[2], (cfg.ssm_conv, conv_ch), (None, "inner"),
+                             0.2),
+        "conv_b": zeros_init((conv_ch,), ("inner",)),
+        "A_log": dense_init(ks[3], (H,), (None,), 1.0),
+        "D": ones_init((H,), (None,)),
+        "dt_bias": zeros_init((H,), (None,)),
+        "norm": ones_init((d_inner,), ("inner",)),
+    }
+    return p
+
+
+def _split_proj(cfg, proj):
+    D = cfg.d_model
+    d_inner = cfg.ssm_expand * D
+    H = cfg.ssm_heads or max(1, d_inner // 64)
+    N = cfg.ssm_state
+    z = proj[..., :d_inner]
+    xc = proj[..., d_inner:2 * d_inner]
+    Bm = proj[..., 2 * d_inner:2 * d_inner + N]
+    Cm = proj[..., 2 * d_inner + N:2 * d_inner + 2 * N]
+    dt = proj[..., 2 * d_inner + 2 * N:]
+    return z, xc, Bm, Cm, dt, d_inner, H, N
+
+
+def _causal_conv(x, w, b, tail=None):
+    """Depthwise causal conv. x: (B,T,C); w: (W,C). tail: (B,W-1,C) carried
+    decode state (pre-pended history). Returns (y, new_tail)."""
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W)) + b
+    new_tail = xp[:, -(W - 1):] if W > 1 else tail
+    return jax.nn.silu(y), new_tail
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, Dp, chunk: int):
+    """SSD scan. x: (B,T,H,P); dt: (B,T,H) (post-softplus); A: (H,) <0;
+    Bm, Cm: (B,T,N); Dp: (H,). Returns y: (B,T,H,P), final state
+    (B,H,N,P)."""
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    if T % chunk != 0:
+        chunk = 1 if T < chunk else T  # degenerate fallback
+    nc, cs = T // chunk, chunk
+
+    dA = dt * A[None, None]                                   # (B,T,H) <= 0
+    xdt = x * dt[..., None]
+    r = lambda a: a.reshape(Bsz, nc, cs, *a.shape[2:])
+    dAc, xc, Bc, Cc = r(dA), r(xdt), r(Bm), r(Cm)
+    cum = jnp.cumsum(dAc, axis=2)                             # (B,nc,cs,H)
+    cum_end = cum[:, :, -1]                                   # (B,nc,H)
+
+    # within-chunk (diagonal) term; mask BEFORE exp (seg>0 off-diagonal
+    # would overflow and poison the backward pass with inf*0)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (B,nc,i,j,H)
+    ii = jnp.arange(cs)
+    causal = ii[:, None] >= ii[None, :]
+    seg = jnp.where(causal[None, None, :, :, None], seg, -jnp.inf)
+    L = jnp.exp(seg)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc,
+                        preferred_element_type=jnp.float32)
+    ydiag = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, L, xc,
+                       preferred_element_type=jnp.float32)
+
+    # per-chunk input state: sum_j exp(cum_end - cum_j) B_j (dt_j x_j)
+    decay_in = jnp.exp(cum_end[:, :, None] - cum)             # (B,nc,cs,H)
+    chunk_states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bc, decay_in, xc,
+                              preferred_element_type=jnp.float32)
+
+    # inter-chunk recurrence
+    def step(state, inp):
+        cstate, cend = inp                                    # (B,H,N,P),(B,H)
+        new = state * jnp.exp(cend)[..., None, None] + cstate
+        return new, state                                     # emit prev
+
+    init = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        step, init, (jnp.moveaxis(chunk_states, 1, 0),
+                     jnp.moveaxis(cum_end, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)             # (B,nc,H,N,P)
+
+    # off-diagonal: y_i += exp(cum_i) C_i . state_prev
+    yoff = jnp.einsum("bcin,bcih,bchnp->bcihp", Cc, jnp.exp(cum),
+                      prev_states, preferred_element_type=jnp.float32)
+    y = (ydiag + yoff).reshape(Bsz, T, H, P)
+    y = y + x * Dp[None, None, :, None]
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(x, dt, A, Bm, Cm, Dp, state):
+    """One-token recurrence. x: (B,1,H,P); dt: (B,1,H); Bm/Cm: (B,1,N);
+    state: (B,H,N,P)."""
+    dA = jnp.exp(dt[:, 0] * A[None])                          # (B,H)
+    upd = jnp.einsum("bn,bh,bhp->bhnp", Bm[:, 0], dt[:, 0], x[:, 0],
+                     preferred_element_type=jnp.float32)
+    state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0], state,
+                   preferred_element_type=jnp.float32)
+    y = y + x[:, 0] * Dp[None, :, None]
+    return y[:, None].astype(x.dtype), state
+
+
+def apply_mamba2(p, x, cfg, *, state=None, conv_tail=None):
+    """x: (B,T,D). state/conv_tail given => decode mode (T==1).
+    Returns (out, (new_state, new_conv_tail))."""
+    dt_ = x.dtype
+    proj = jnp.einsum("btd,de->bte", x, p["in_proj"].astype(dt_))
+    z, xc, Bm, Cm, dtr, d_inner, H, N = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)
+    conv_out, new_tail = _causal_conv(conv_in, p["conv_w"].astype(dt_),
+                                      p["conv_b"].astype(dt_), conv_tail)
+    xc = conv_out[..., :d_inner]
+    Bm = conv_out[..., d_inner:d_inner + N]
+    Cm = conv_out[..., d_inner + N:]
+    P_ = d_inner // H
+    xh = xc.reshape(*xc.shape[:2], H, P_)
+    dt_soft = jax.nn.softplus(dtr.astype(jnp.float32)
+                              + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    Dp = p["D"].astype(jnp.float32)
+
+    if state is not None and x.shape[1] == 1:
+        y, new_state = ssd_decode_step(xh, dt_soft, A, Bm, Cm, Dp, state)
+    else:
+        # train or prefill (prefill starts from the zeroed state)
+        y, new_state = ssd_chunked(xh, dt_soft, A, Bm, Cm, Dp,
+                                   cfg.ssm_chunk)
+    y = y.reshape(*y.shape[:2], d_inner)
+    # gated RMSNorm (mamba2 style) then down-projection
+    y = apply_norm({"scale": p["norm"]}, y * jax.nn.silu(z), "rmsnorm")
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(dt_))
+    return out, (new_state, new_tail)
+
+
+def init_mamba2_state(cfg, batch: int, dtype=jnp.float32):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = cfg.ssm_heads or max(1, d_inner // 64)
+    N = cfg.ssm_state
+    conv_ch = d_inner + 2 * N
+    return (jnp.zeros((batch, H, N, d_inner // H), jnp.float32),
+            jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype))

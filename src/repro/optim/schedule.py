@@ -1,0 +1,27 @@
+"""LR schedules: linear warmup + cosine decay (paper setting)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr, warmup_steps, total_steps,
+                  min_ratio=0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    progress = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0., 1.)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+    return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+
+def make_warmup_cosine(peak_lr, warmup_steps, total_steps, min_ratio=0.1):
+    """Factory form: returns sched(step) -> lr."""
+    return lambda step: warmup_cosine(
+        step, peak_lr=peak_lr, warmup_steps=warmup_steps,
+        total_steps=total_steps, min_ratio=min_ratio)
+
+
+def constant(step, *, peak_lr, warmup_steps=0, **_):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    return jnp.where(step < warmup_steps, warm, peak_lr)

@@ -1,0 +1,123 @@
+"""Logical-axis based sharding specification.
+
+Every parameter leaf is annotated at init time with a tuple of *logical*
+axis names (one per array dim, ``None`` for unsharded). A rules table maps
+logical names onto mesh axes; the mapping is divisibility-aware (an axis
+whose size does not divide the mesh axis size falls back to replication,
+e.g. starcoder2's 4 KV heads on a 16-way model axis) and greedy by
+priority (for a given mesh axis, the highest-priority divisible logical
+axis present on the param gets it; e.g. whisper's 20 heads don't divide 16
+so the d_model/"embed" axis is sharded instead).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical axis -> mesh axis. Order in PRIORITY decides who wins a mesh axis
+# when several logical axes on one param map to it.
+DEFAULT_RULES: dict[str, str] = {
+    "replica": "pod",    # stacked DiLoCo replicas live one-per-pod
+    "batch": "data",
+    "experts": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "vocab": "model",
+    "inner": "model",    # mamba/xlstm expanded inner dim
+    "embed": "model",    # fallback: shard d_model rows when heads don't divide
+}
+
+PRIORITY = ["replica", "batch", "experts", "heads", "kv_heads", "ff",
+            "vocab", "inner", "embed"]
+
+
+class Boxed:
+    """A parameter value paired with its logical axis names."""
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes):
+        assert value.ndim == len(axes), (value.shape, axes)
+        self.value = value
+        self.axes = tuple(axes)
+
+    def __repr__(self):
+        return f"Boxed({self.value.shape}, axes={self.axes})"
+
+
+def is_boxed(x) -> bool:
+    return isinstance(x, Boxed)
+
+
+def unbox(tree):
+    """Split a tree of Boxed leaves into (params, axes-spec) trees."""
+    params = jax.tree.map(lambda b: b.value, tree, is_leaf=is_boxed)
+    specs = jax.tree.map(lambda b: b.axes, tree, is_leaf=is_boxed)
+    return params, specs
+
+
+def logical_to_pspec(axes: tuple, shape: tuple, mesh: Mesh,
+                     rules: dict[str, str] | None = None) -> P:
+    """Map logical axes to a PartitionSpec on ``mesh``, divisibility-aware."""
+    rules = rules or DEFAULT_RULES
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    assignment: dict[int, str] = {}     # dim index -> mesh axis
+    used_mesh: set[str] = set()
+    # Greedy by priority: each mesh axis goes to the best divisible dim.
+    for logical in PRIORITY:
+        target = rules.get(logical)
+        if target is None or target not in mesh_sizes or target in used_mesh:
+            continue
+        for i, name in enumerate(axes):
+            if name == logical and i not in assignment \
+                    and shape[i] % mesh_sizes[target] == 0 and shape[i] > 0:
+                assignment[i] = target
+                used_mesh.add(target)
+                break
+    return P(*[assignment.get(i) for i in range(len(axes))])
+
+
+def tree_shardings(spec_tree, param_tree, mesh: Mesh,
+                   rules: dict[str, str] | None = None,
+                   extra_leading: tuple = ()):
+    """NamedSharding tree for a param tree given its logical-axes tree.
+
+    ``extra_leading`` prepends logical axes (e.g. ("replica",) for stacked
+    DiLoCo replicas) to every leaf's axes.
+    """
+    def one(axes, p):
+        axes = tuple(extra_leading) + tuple(axes)
+        shape = p.shape if hasattr(p, "shape") else np.shape(p)
+        return NamedSharding(mesh, logical_to_pspec(axes, shape, mesh, rules))
+    return jax.tree.map(one, spec_tree, param_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def batch_pspec(mesh: Mesh, batch_size: int, ndim: int,
+                include_pod: bool = False) -> P:
+    """PartitionSpec for an activation/batch array: shard dim 0 over data
+    (and pod when requested), divisibility-aware; rest replicated."""
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = []
+    if include_pod and "pod" in mesh_sizes:
+        axes.append("pod")
+    if "data" in mesh_sizes:
+        axes.append("data")
+    total = int(np.prod([mesh_sizes[a] for a in axes])) if axes else 1
+    while axes and batch_size % total != 0:
+        total //= mesh_sizes[axes.pop()]
+    first = tuple(axes) if axes else None
+    return P(first, *([None] * (ndim - 1)))
+
+
+def constrain(x, pspec: P):
+    """with_sharding_constraint that is a no-op outside a mesh context."""
+    try:
+        return jax.lax.with_sharding_constraint(x, pspec)
+    except (ValueError, RuntimeError):
+        return x

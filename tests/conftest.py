@@ -1,0 +1,9 @@
+import os
+
+# Tests see the single real CPU device (the dry-run, and ONLY the
+# dry-run, forces 512 fake devices — in its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,190 @@
+"""Per-architecture smoke tests (assignment requirement).
+
+For every assigned architecture: instantiate the REDUCED variant of the
+same family (≤2 layers, d_model≤512, ≤4 experts — see each config's
+``smoke_config``), run one forward/train step on CPU, assert output
+shapes and absence of NaNs; additionally check that decode from a
+prefilled cache reproduces the prefill logits (cache correctness) and
+that one AdamW step decreases loss on a repeated batch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, TrainConfig
+from repro.core import diloco
+from repro.models.registry import get_smoke_arch, ARCH_NAMES
+
+ASSIGNED = ARCH_NAMES[:10]
+ALL = ARCH_NAMES
+
+
+def _batch(arch, key, B=2, S=32):
+    cfg = arch.cfg
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size, jnp.int32)
+    batch = {"tokens": toks}
+    if cfg.family == "vlm":
+        batch["patches"] = 0.1 * jax.random.normal(
+            jax.random.fold_in(key, 1), (B, cfg.n_patches, cfg.d_model))
+    if cfg.family == "encdec":
+        batch["frames"] = 0.1 * jax.random.normal(
+            jax.random.fold_in(key, 1), (B, cfg.n_frames, cfg.d_model))
+    return batch
+
+
+def test_smoke_configs_are_reduced():
+    for name in ALL:
+        cfg = get_smoke_arch(name).cfg
+        assert cfg.n_layers <= 4, name
+        assert cfg.d_model <= 512, name
+        assert cfg.n_experts <= 4, name
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_forward_shapes_and_finite(name):
+    arch = get_smoke_arch(name)
+    cfg = arch.cfg
+    key = jax.random.PRNGKey(0)
+    params, axes = arch.init(key, cfg)
+    batch = _batch(arch, jax.random.PRNGKey(1))
+    loss, metrics = arch.loss(params, batch)
+    assert np.isfinite(float(loss)), name
+    from repro.models import model as M
+    logits, _, aux = M.forward(params, cfg, batch["tokens"], extra=batch)
+    B, S = batch["tokens"].shape
+    assert logits.shape == (B, S, cfg.vocab_size), name
+    assert np.all(np.isfinite(np.asarray(logits, np.float32))), name
+    assert np.isfinite(float(aux)), name
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_train_step_decreases_loss(name):
+    arch = get_smoke_arch(name)
+    tcfg = TrainConfig(inner_lr=3e-3, warmup_steps=0, total_steps=100,
+                       batch_size=2, seq_len=32)
+    step = diloco.make_single_worker_step(
+        lambda p, b: arch.loss(p, b), tcfg)
+    from repro.optim import adamw
+    params, _ = arch.init(jax.random.PRNGKey(0), arch.cfg)
+    opt = adamw.init(params)
+    batch = _batch(arch, jax.random.PRNGKey(1))
+    losses = []
+    for i in range(5):
+        params, opt, m = step(params, opt, batch, jnp.asarray(i))
+        losses.append(float(m["loss"]))
+    assert all(np.isfinite(losses)), name
+    assert losses[-1] < losses[0], (name, losses)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_decode_matches_prefill(name):
+    arch = get_smoke_arch(name)
+    cfg = arch.cfg
+    params, _ = arch.init(jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(1)
+    B, S = 2, 16
+    toks = jax.random.randint(key, (B, S + 2), 0, cfg.vocab_size,
+                              jnp.int32)
+    batch = _batch(arch, key, B, S)
+    batch["tokens"] = toks[:, :S]
+    logits, cache = arch.prefill(params, batch, cache_len=S + 2)
+    lg = []
+    for i in range(2):
+        step_logits, cache = arch.decode(
+            params, cache, toks[:, S + i:S + i + 1],
+            jnp.asarray(S + i, jnp.int32))
+        lg.append(step_logits)
+    full = dict(batch)
+    full["tokens"] = toks
+    logits_full, _ = arch.prefill(params, full, cache_len=S + 2)
+    np.testing.assert_allclose(
+        np.asarray(lg[0][:, 0], np.float32),
+        np.asarray(logits_full[:, S], np.float32), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(
+        np.asarray(lg[1][:, 0], np.float32),
+        np.asarray(logits_full[:, S + 1], np.float32), rtol=2e-4,
+        atol=2e-4)
+
+
+@pytest.mark.parametrize("name", ["stablelm_1_6b", "zamba2_2_7b",
+                                  "xlstm_350m"])
+def test_sliding_window_decode(name):
+    """Ring-buffer cache: decoding past the window stays finite and
+    matches a windowed prefill recomputation."""
+    arch = get_smoke_arch(name)
+    cfg = arch.cfg.replace(window=8)
+    params, _ = arch.init(jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(3)
+    B, S = 1, 24
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size, jnp.int32)
+    from repro.models import model as M
+    # windowed cacheless forward over the whole sequence (oracle) —
+    # prefill-through-a-window-sized-ring only guarantees logits of the
+    # final window (earlier keys are evicted by design)
+    logits_all, _, _ = M.forward(params, cfg, toks, window=8)
+    # prefill 8, then decode the rest one-by-one through the ring cache
+    logits_p, cache = M.prefill(params, cfg, toks[:, :8], window=8,
+                                cache_len=S)
+    errs = []
+    for i in range(8, S):
+        lg, cache = M.decode_step(params, cfg, cache, toks[:, i:i + 1],
+                                  jnp.asarray(i, jnp.int32), window=8)
+        errs.append(float(jnp.max(jnp.abs(
+            lg[:, 0].astype(jnp.float32)
+            - logits_all[:, i].astype(jnp.float32)))))
+    assert max(errs) < 2e-4, (name, max(errs))
+
+
+def test_moe_routes_to_multiple_experts():
+    arch = get_smoke_arch("olmoe_1b_7b")
+    cfg = arch.cfg
+    params, _ = arch.init(jax.random.PRNGKey(0), cfg)
+    batch = _batch(arch, jax.random.PRNGKey(1), B=4, S=64)
+    loss, metrics = arch.loss(params, batch)
+    # Switch-style aux floor is K (frac sums to K over experts);
+    # balanced-ish routing at init keeps it near the floor
+    K = cfg.top_k
+    assert 0.9 * K < float(metrics["aux"]) < 2.0 * K
+
+
+def test_ssm_chunked_vs_recurrent():
+    """Mamba2 chunked SSD (train) == step-by-step recurrence (decode)."""
+    from repro.models import ssm
+    arch = get_smoke_arch("zamba2_2_7b")
+    cfg = arch.cfg
+    key = jax.random.PRNGKey(0)
+    p, _ = jax.tree.flatten({})[1], None
+    from repro.sharding.spec import unbox
+    params_boxed = ssm.init_mamba2(key, cfg)
+    params = jax.tree.map(lambda b: b.value, params_boxed,
+                          is_leaf=lambda x: hasattr(x, "axes"))
+    B, T = 2, 16
+    x = 0.1 * jax.random.normal(jax.random.fold_in(key, 1),
+                                (B, T, cfg.d_model))
+    y_chunk, _ = ssm.apply_mamba2(params, x, cfg)
+    st, tail = ssm.init_mamba2_state(cfg, B)
+    ys = []
+    for t in range(T):
+        y1, (st, tail) = ssm.apply_mamba2(params, x[:, t:t + 1], cfg,
+                                          state=st, conv_tail=tail)
+        ys.append(y1)
+    y_rec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_rec),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_input_specs_cover_all_shapes():
+    for name in ASSIGNED:
+        from repro.models.registry import get_arch
+        arch = get_arch(name)
+        for sname, shape in SHAPES.items():
+            specs = arch.input_specs(shape)
+            assert "tokens" in specs
+            B = shape.global_batch
+            if shape.kind == "decode":
+                assert specs["tokens"].shape == (B, 1)
+            else:
+                assert specs["tokens"].shape == (B, shape.seq_len)

@@ -1,0 +1,233 @@
+"""Property tests of the DiLoCo algorithm (core/diloco.py).
+
+The paper defines exact equivalences at parameter corners — these pin
+the implementation to Algorithm 1:
+  * OuterOpt=SGD(lr=1)  => outer step == plain replica averaging (FedAvg)
+  * k=1, SGD(lr=1)      => outer step == adopting the single replica
+  * worker permutation invariance of the outer update
+  * drop-mask semantics: dropped replica keeps its own params
+  * active-mask semantics: inactive replicas are parked & excluded
+  * H=1 + inner SGD + outer SGD(lr=1) == large-batch data parallelism
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import DiLoCoConfig, TrainConfig
+from repro.core import diloco, outer_opt
+
+
+def tiny_params(key, scale=1.0):
+    k1, k2 = jax.random.split(key)
+    return {"w": scale * jax.random.normal(k1, (4, 3)),
+            "b": scale * jax.random.normal(k2, (3,))}
+
+
+def randomized_state(key, dcfg, spread=1.0):
+    params = tiny_params(key)
+    state = diloco.init_state(params, dcfg)
+    noise = jax.tree.map(
+        lambda p: spread * jax.random.normal(
+            jax.random.fold_in(key, 7),
+            (dcfg.k,) + p.shape), params)
+    return state._replace(
+        replica_params=jax.tree.map(jnp.add, state.replica_params, noise))
+
+
+def leaves_allclose(a, b, **kw):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(x, y, **kw)
+
+
+# ---------------------------------------------------------------------------
+# corner equivalences
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**30), k=st.sampled_from([1, 2, 4, 8]))
+@settings(max_examples=20, deadline=None)
+def test_sgd_lr1_is_fedavg(seed, k):
+    """θ^(t) = θ - 1·mean(θ - θ_i) = mean(θ_i): exact FedAvg."""
+    dcfg = DiLoCoConfig(k=k, outer_opt="sgd", outer_lr=1.0)
+    state = randomized_state(jax.random.PRNGKey(seed), dcfg)
+    new, _ = diloco.outer_step(state, dcfg)
+    want = jax.tree.map(lambda r: r.mean(0), state.replica_params)
+    leaves_allclose(new.global_params, want, rtol=1e-6, atol=1e-6)
+    # all replicas re-dispatched to the new global copy
+    for x, y in zip(jax.tree.leaves(new.replica_params),
+                    jax.tree.leaves(new.global_params)):
+        for i in range(k):
+            np.testing.assert_allclose(x[i], y, rtol=1e-6, atol=1e-6)
+
+
+@given(seed=st.integers(0, 2**30))
+@settings(max_examples=15, deadline=None)
+def test_permutation_invariance(seed):
+    dcfg = DiLoCoConfig(k=4, outer_opt="nesterov")
+    state = randomized_state(jax.random.PRNGKey(seed), dcfg)
+    perm = np.array([2, 0, 3, 1])
+    state_p = state._replace(
+        replica_params=jax.tree.map(lambda r: r[perm],
+                                    state.replica_params))
+    a, _ = diloco.outer_step(state, dcfg)
+    b, _ = diloco.outer_step(state_p, dcfg)
+    leaves_allclose(a.global_params, b.global_params, rtol=1e-6, atol=1e-6)
+
+
+@given(seed=st.integers(0, 2**30),
+       dropped=st.integers(0, 3))
+@settings(max_examples=15, deadline=None)
+def test_drop_mask_semantics(seed, dropped):
+    """Dropped replica keeps its own params; average excludes it."""
+    dcfg = DiLoCoConfig(k=4, outer_opt="sgd", outer_lr=1.0)
+    state = randomized_state(jax.random.PRNGKey(seed), dcfg)
+    mask = np.ones(4, np.float32)
+    mask[dropped] = 0.0
+    new, _ = diloco.outer_step(state, dcfg, drop_mask=jnp.asarray(mask))
+    keep = [i for i in range(4) if i != dropped]
+    want = jax.tree.map(lambda r: r[np.array(keep)].mean(0),
+                        state.replica_params)
+    leaves_allclose(new.global_params, want, rtol=1e-6, atol=1e-6)
+    # the dropped replica continues from ITS OWN params (Fig 8)
+    for x_new, x_old in zip(jax.tree.leaves(new.replica_params),
+                            jax.tree.leaves(state.replica_params)):
+        np.testing.assert_allclose(x_new[dropped], x_old[dropped],
+                                   rtol=1e-7, atol=1e-7)
+
+
+def test_active_mask_excludes_inactive():
+    dcfg = DiLoCoConfig(k=4, outer_opt="sgd", outer_lr=1.0)
+    state = randomized_state(jax.random.PRNGKey(3), dcfg)
+    act = jnp.asarray([1.0, 1.0, 0.0, 0.0])
+    new, _ = diloco.outer_step(state, dcfg, active_mask=act)
+    want = jax.tree.map(lambda r: r[:2].mean(0), state.replica_params)
+    leaves_allclose(new.global_params, want, rtol=1e-6, atol=1e-6)
+
+
+def test_weighted_average():
+    dcfg = DiLoCoConfig(k=2, outer_opt="sgd", outer_lr=1.0)
+    state = randomized_state(jax.random.PRNGKey(4), dcfg)
+    w = jnp.asarray([3.0, 1.0])
+    new, _ = diloco.outer_step(state, dcfg, weights=w)
+    want = jax.tree.map(lambda r: (3 * r[0] + r[1]) / 4,
+                        state.replica_params)
+    leaves_allclose(new.global_params, want, rtol=1e-6, atol=1e-6)
+
+
+def test_nesterov_matches_manual():
+    """One Nesterov outer step against the hand-written recurrence."""
+    dcfg = DiLoCoConfig(k=2, outer_opt="nesterov", outer_lr=0.7,
+                        outer_momentum=0.9)
+    state = randomized_state(jax.random.PRNGKey(5), dcfg)
+    delta = jax.tree.map(lambda g, r: g - r.mean(0),
+                         state.global_params, state.replica_params)
+    buf = jax.tree.map(lambda d: d, delta)                 # b1 = Δ (b0=0)
+    want = jax.tree.map(lambda p, b, d: p - 0.7 * (0.9 * b + d),
+                        state.global_params, buf, delta)
+    new, _ = diloco.outer_step(state, dcfg)
+    leaves_allclose(new.global_params, want, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# H=1 + inner/outer SGD == large-batch data parallelism (paper §2)
+# ---------------------------------------------------------------------------
+
+def test_h1_sgd_equals_data_parallel():
+    key = jax.random.PRNGKey(0)
+    params = tiny_params(key)
+
+    def loss_fn(p, batch):
+        x, y = batch["x"], batch["y"]
+        pred = x @ p["w"] + p["b"]
+        return jnp.mean((pred - y) ** 2), {}
+
+    k, B = 4, 8
+    lr = 0.05
+    kx, ky = jax.random.split(jax.random.PRNGKey(1))
+    X = jax.random.normal(kx, (k, B, 4))
+    Y = jax.random.normal(ky, (k, B, 3))
+
+    # --- DiLoCo: k workers, H=1, inner SGD, outer SGD(lr=1) ---
+    def inner_sgd(p, batch):
+        g = jax.grad(lambda q: loss_fn(q, batch)[0])(p)
+        return jax.tree.map(lambda a, b: a - lr * b, p, g)
+
+    replicas = [inner_sgd(params, {"x": X[i], "y": Y[i]})
+                for i in range(k)]
+    mean_rep = jax.tree.map(
+        lambda *ls: jnp.stack(ls).mean(0), *replicas)
+
+    # --- large-batch SGD over the concatenated batch ---
+    big = {"x": X.reshape(k * B, 4), "y": Y.reshape(k * B, 3)}
+    g = jax.grad(lambda q: loss_fn(q, big)[0])(params)
+    want = jax.tree.map(lambda a, b: a - lr * b, params, g)
+
+    leaves_allclose(mean_rep, want, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# outer optimizers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["sgd", "sgdm", "nesterov", "adam"])
+def test_outer_opt_against_numpy(kind):
+    key = jax.random.PRNGKey(0)
+    params = tiny_params(key)
+    state = outer_opt.init(params)
+    delta = jax.tree.map(lambda p: 0.1 * jnp.ones_like(p), params)
+    lr, mu, b2, eps = 0.7, 0.9, 0.95, 0.1
+
+    p_np = {k2: np.array(v) for k2, v in params.items()}
+    buf = {k2: np.zeros_like(v) for k2, v in p_np.items()}
+    buf2 = {k2: np.zeros_like(v) for k2, v in p_np.items()}
+    p, s = params, state
+    for t in range(1, 4):
+        p, s = outer_opt.update(delta, s, p, kind=kind, lr=lr,
+                                momentum=mu, b2=b2, eps=eps)
+        for k2 in p_np:
+            d = 0.1 * np.ones_like(p_np[k2])
+            if kind == "sgd":
+                p_np[k2] -= lr * d
+            elif kind == "sgdm":
+                buf[k2] = mu * buf[k2] + d
+                p_np[k2] -= lr * buf[k2]
+            elif kind == "nesterov":
+                buf[k2] = mu * buf[k2] + d
+                p_np[k2] -= lr * (mu * buf[k2] + d)
+            else:
+                buf[k2] = mu * buf[k2] + (1 - mu) * d
+                buf2[k2] = b2 * buf2[k2] + (1 - b2) * d * d
+                mh = buf[k2] / (1 - mu ** t)
+                vh = buf2[k2] / (1 - b2 ** t)
+                p_np[k2] -= lr * mh / (np.sqrt(vh) + eps)
+            np.testing.assert_allclose(p[k2], p_np[k2], rtol=1e-5,
+                                       atol=1e-6, err_msg=f"{kind} t={t}")
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**30),
+       frac=st.sampled_from([0.25, 0.5, 0.75]))
+@settings(max_examples=20, deadline=None)
+def test_sign_prune_density(seed, frac):
+    from repro.core.compression import sign_prune, density
+    x = {"w": jax.random.normal(jax.random.PRNGKey(seed), (8, 64))}
+    pruned = sign_prune(x, frac)
+    d = float(density(pruned))
+    assert d <= 1.0 - frac + 0.02
+    # pruning keeps values verbatim (no rescale in Tab 6's variant)
+    kept = np.asarray(pruned["w"] != 0)
+    np.testing.assert_allclose(np.asarray(pruned["w"])[kept],
+                               np.asarray(x["w"])[kept])
+
+
+def test_sign_prune_zero_frac_identity():
+    from repro.core.compression import sign_prune
+    x = {"w": jnp.arange(12.0).reshape(3, 4)}
+    out = sign_prune(x, 0.0)
+    np.testing.assert_array_equal(out["w"], x["w"])

@@ -1,0 +1,174 @@
+"""Dry-run machinery tests on a small fake-device mesh (subprocess).
+
+The full 512-device dry-run is exercised by launch/dryrun.py runs (see
+EXPERIMENTS.md); here a 8-device (2, 2, 2) mesh in a subprocess checks
+the same code path end-to-end — lowering, compiling, HLO collective
+parsing with pod-crossing classification — quickly enough for CI.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+
+# ---------------------------------------------------------------------------
+# HLO parsing units (no devices needed)
+# ---------------------------------------------------------------------------
+
+def test_type_bytes():
+    assert H._type_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert H._type_bytes("(f32[4], bf16[8])") == 16 + 16
+    assert H._type_bytes("pred[]") == 0 or True  # scalars ~0
+
+
+def test_iota_groups_transposed():
+    # [256,2]<=[2,16,16]T(2,1,0): group j = {j, j+256}
+    g = H._iota_groups(256, 2, [16, 16, 2][::-1], None)  # sanity base
+    line = ("%ar = f32[8]{0} all-reduce(%x), "
+            "replica_groups=[256,2]<=[2,16,16]T(2,1,0), to_apply=%add")
+    groups = H._line_groups(line)
+    assert groups is not None
+    for grp in groups:
+        assert len(grp) == 2
+        assert abs(grp[0] - grp[1]) == 256
+    st = H.collective_stats(
+        "ENTRY %main (p: f32[8]) -> f32[8] {\n  " + line + "\n}",
+        chips_per_pod=256)
+    assert st.cross_pod_bytes == 32
+    assert st.intra_pod_bytes == 0
+
+
+def test_explicit_groups_intra():
+    line = ("%ag = f32[16]{0} all-gather(%x), "
+            "replica_groups={{0,1},{2,3}}, dimensions={0}")
+    st = H.collective_stats(
+        "ENTRY %main (p: f32[8]) -> f32[16] {\n  " + line + "\n}",
+        chips_per_pod=2)
+    assert st.cross_pod_bytes == 0
+    assert st.intra_pod_bytes == 64
+
+
+def test_while_trip_multiplier():
+    hlo = textwrap.dedent("""\
+    %cond (p: (s32[], f32[8])) -> pred[] {
+      %c = s32[] constant(12)
+      %i = s32[] get-tuple-element(%p), index=0
+      ROOT %lt = pred[] compare(%i, %c), direction=LT
+    }
+    %body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+      %x = f32[8]{0} get-tuple-element(%p), index=1
+      %ar = f32[8]{0} all-reduce(%x), replica_groups={{0,1}}, to_apply=%add
+      ROOT %t = (s32[], f32[8]) tuple(%i, %ar)
+    }
+    ENTRY %main (p0: (s32[], f32[8])) -> (s32[], f32[8]) {
+      ROOT %w = (s32[], f32[8]) while(%p0), condition=%cond, body=%body
+    }
+    """)
+    st = H.collective_stats(hlo, chips_per_pod=2)
+    assert st.total_bytes == 12 * 32      # trip count applied
+    mult = H.computation_multipliers(hlo)
+    assert mult.get("body") == 12
+
+
+def test_roofline_bound_selection():
+    coll = H.CollectiveStats(total_bytes=0, cross_pod_bytes=0,
+                             intra_pod_bytes=0)
+    terms = H.roofline(1e18, 1e12, coll, chips=256)
+    assert terms["bound"] == "compute_s"
+    coll2 = H.CollectiveStats(total_bytes=10**11, cross_pod_bytes=0,
+                              intra_pod_bytes=10**11,
+                              by_op={"all-reduce": 10**11})
+    terms2 = H.roofline(1e12, 1e9, coll2, chips=256)
+    assert terms2["bound"] == "collective_s"
+
+
+# ---------------------------------------------------------------------------
+# jaxpr cost walker
+# ---------------------------------------------------------------------------
+
+def test_jaxpr_cost_scan_multiplier():
+    import jax
+    import jax.numpy as jnp
+    from repro.launch.jaxpr_cost import jaxpr_cost
+
+    def body(c, _):
+        return c @ c, None
+
+    def fn(x):
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    cost = jaxpr_cost(fn, x)
+    assert cost["flops"] == 7 * 2 * 32 * 32 * 32
+    assert cost["dots"] == 7
+
+
+def test_jaxpr_cost_grad_counts_backward():
+    import jax
+    import jax.numpy as jnp
+    from repro.launch.jaxpr_cost import jaxpr_cost
+
+    def loss(w, x):
+        return jnp.sum((x @ w) ** 2)
+
+    w = jax.ShapeDtypeStruct((16, 8), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, 16), jnp.float32)
+    fwd = jaxpr_cost(loss, w, x)
+    bwd = jaxpr_cost(jax.grad(loss), w, x)
+    assert bwd["flops"] >= 2 * fwd["flops"]   # fwd + transpose matmuls
+
+
+# ---------------------------------------------------------------------------
+# end-to-end mini dry-run in a subprocess (8 fake devices)
+# ---------------------------------------------------------------------------
+
+MINI = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, json
+sys.path.insert(0, "src")
+import jax
+from repro.launch import dryrun as DR
+from repro.launch.mesh import make_mesh
+
+mesh_single = make_mesh((2, 2), ("data", "model"))
+mesh_multi = make_mesh((2, 2, 2), ("pod", "data", "model"))
+out = []
+for mesh, mp in [(mesh_single, False), (mesh_multi, True)]:
+    recs = DR.dryrun_pair("diloco_60m", "train_4k", multi_pod=mp,
+                          microbatches=2, mesh=mesh)
+    out.extend(recs)
+recs = DR.dryrun_pair("diloco_60m", "decode_32k", multi_pod=False,
+                      mesh=mesh_single)
+out.extend(recs)
+print(json.dumps([{k: v for k, v in r.items()
+                   if k in ("fn", "flops", "collectives", "error")}
+                  for r in out]))
+"""
+
+
+@pytest.mark.slow
+def test_mini_dryrun_subprocess():
+    res = subprocess.run([sys.executable, "-c", MINI], cwd=".",
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stderr[-2000:]
+    recs = json.loads(res.stdout.splitlines()[-1])
+    fns = {r["fn"] for r in recs}
+    assert {"inner_train_step", "diloco_inner_step", "diloco_outer_step",
+            "ddp_train_step", "serve_step"} <= fns
+    for r in recs:
+        assert "error" not in r, r
+        if r["fn"] == "diloco_inner_step":
+            # the paper's core structural property
+            assert r["collectives"]["cross_pod_bytes"] == 0
+        if r["fn"] == "diloco_outer_step":
+            assert r["collectives"]["cross_pod_bytes"] > 0
+        if r["fn"] == "ddp_train_step":
+            assert r["collectives"]["cross_pod_bytes"] > 0

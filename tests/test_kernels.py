@@ -1,0 +1,213 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU).
+
+Sweeps shapes/dtypes per kernel; flash attention additionally checks
+GQA grouping, causal/window masks and non-block-aligned lengths.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (flash_attention as FK, fused_adamw as FA,
+                           outer_nesterov as ON, sign_prune as SP,
+                           ops, ref)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+ATTN_CASES = [
+    # B, H, G, S, d, causal, window
+    (2, 4, 2, 128, 64, True, 0),
+    (1, 4, 4, 256, 32, True, 0),
+    (2, 8, 2, 96, 64, True, 0),           # not block-aligned
+    (1, 2, 1, 192, 64, True, 64),          # sliding window
+    (1, 4, 2, 256, 64, False, 0),          # bidirectional (encoder)
+    (1, 16, 4, 128, 128, True, 0),         # MXU-aligned head dim
+]
+
+
+@pytest.mark.parametrize("B,H,G,S,d,causal,window", ATTN_CASES)
+def test_flash_attention_matches_ref(B, H, G, S, d, causal, window):
+    key = jax.random.PRNGKey(hash((B, H, G, S, d)) % (2 ** 31))
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, S, d), jnp.float32)
+    k = jax.random.normal(ks[1], (B, G, S, d), jnp.float32)
+    v = jax.random.normal(ks[2], (B, G, S, d), jnp.float32)
+    out = FK.flash_attention(q, k, v, causal=causal, window=window,
+                             block_q=64, block_k=64, interpret=True)
+    want = ref.flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal,
+        window=window).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 4, 128, 64)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 2, 128, 64)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 2, 128, 64)).astype(dtype)
+    out = FK.flash_attention(q, k, v, interpret=True)
+    want = ref.flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(out.astype(np.float32),
+                               want.astype(np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_attention_vs_model_attention():
+    """The kernel agrees with the model's chunked online-softmax
+    (layers.attention) — two independent formulations."""
+    from repro.models.layers import attention
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 3)
+    B, S, H, G, d = 2, 256, 8, 4, 64
+    q = jax.random.normal(ks[0], (B, S, H, d))
+    k = jax.random.normal(ks[1], (B, S, G, d))
+    v = jax.random.normal(ks[2], (B, S, G, d))
+    want = attention(q, k, v, causal=True, chunk=64)
+    out = ops.flash_attention(q, k, v, causal=True, mode="interpret")
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused AdamW
+# ---------------------------------------------------------------------------
+
+ADAMW_SHAPES = [(17,), (1000,), (37, 53), (4, 16, 130), (256, 128)]
+
+
+@pytest.mark.parametrize("shape", ADAMW_SHAPES)
+def test_fused_adamw_matches_ref(shape):
+    key = jax.random.PRNGKey(sum(shape))
+    ks = jax.random.split(key, 4)
+    p, g, m = (jax.random.normal(kk, shape) for kk in ks[:3])
+    v = jnp.abs(jax.random.normal(ks[3], shape))
+    args = dict(lr=3e-4, c1=0.19, c2=0.0975, b1=0.9, b2=0.95,
+                eps=1e-8, weight_decay=0.1)
+    out = FA.fused_adamw(p, g, m, v, interpret=True, **args)
+    want = ref.fused_adamw(p, g, m, v, **args)
+    for a, b in zip(out, want):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+def test_fused_adamw_matches_optim_adamw():
+    """The kernel's semantics equal the training-loop AdamW
+    (optim/adamw.py) for one step."""
+    from repro.optim import adamw
+    key = jax.random.PRNGKey(1)
+    params = {"w": jax.random.normal(key, (32, 16))}
+    grads = {"w": jax.random.normal(jax.random.fold_in(key, 1), (32, 16))}
+    st = adamw.init(params)
+    new_p, new_st = adamw.update(grads, st, params, lr=1e-3)
+    out_p, out_m, out_v = ops.adamw_update_tree(
+        params, grads, st.m, st.v, lr=1e-3, count=1, mode="interpret")
+    np.testing.assert_allclose(out_p["w"], new_p["w"], rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(out_m["w"], new_st.m["w"], rtol=1e-6,
+                               atol=1e-6)
+    np.testing.assert_allclose(out_v["w"], new_st.v["w"], rtol=1e-6,
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# sign pruning
+# ---------------------------------------------------------------------------
+
+PRUNE_CASES = [((16, 256), 0.5), ((7, 100), 0.25), ((64, 300), 0.75),
+               ((1, 128), 0.5), ((5, 513), 0.5)]
+
+
+@pytest.mark.parametrize("shape,frac", PRUNE_CASES)
+def test_sign_prune_matches_ref(shape, frac):
+    x = jax.random.normal(jax.random.PRNGKey(shape[1]), shape)
+    out = SP.sign_prune(x, frac, interpret=True)
+    want = ref.sign_prune(x, frac)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_sign_prune_elects_majority_sign():
+    # a row dominated by positive mass must keep only positive entries
+    x = jnp.asarray([[5.0, 4.0, 3.0, -0.1, -0.2, 2.0, 1.0, -0.3]])
+    out = np.asarray(ref.sign_prune(x, 0.25))
+    assert (out <= 0).sum() == (out == 0).sum()  # no negatives survive
+
+
+# ---------------------------------------------------------------------------
+# outer nesterov
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(77,), (33, 129), (8, 8, 8)])
+def test_outer_nesterov_matches_ref(shape):
+    key = jax.random.PRNGKey(sum(shape))
+    ks = jax.random.split(key, 3)
+    p, d, b = (jax.random.normal(kk, shape) for kk in ks)
+    out = ON.outer_nesterov(p, d, b, lr=0.7, momentum=0.9, interpret=True)
+    want = ref.outer_nesterov(p, d, b, lr=0.7, momentum=0.9)
+    for a, w in zip(out, want):
+        np.testing.assert_allclose(a, w, rtol=1e-6, atol=1e-6)
+
+
+def test_outer_nesterov_matches_outer_opt():
+    """Kernel == core/outer_opt Nesterov update for one step."""
+    from repro.core import outer_opt
+    key = jax.random.PRNGKey(2)
+    params = {"w": jax.random.normal(key, (16, 8))}
+    delta = {"w": 0.01 * jax.random.normal(jax.random.fold_in(key, 1),
+                                           (16, 8))}
+    st = outer_opt.init(params)
+    new_p, new_st = outer_opt.update(delta, st, params, kind="nesterov",
+                                     lr=0.7, momentum=0.9)
+    out_p, out_b = ops.nesterov_update_tree(params, delta, st.buf,
+                                            lr=0.7, momentum=0.9,
+                                            mode="interpret")
+    np.testing.assert_allclose(out_p["w"], new_p["w"], rtol=1e-6,
+                               atol=1e-6)
+    np.testing.assert_allclose(out_b["w"], new_st.buf["w"], rtol=1e-6,
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention backward (custom_vjp, on-chip recompute)
+# ---------------------------------------------------------------------------
+
+BWD_CASES = [
+    (1, 4, 2, 128, 64, True, 0),
+    (2, 2, 1, 96, 32, True, 0),       # non-block-aligned
+    (1, 4, 4, 128, 64, True, 48),     # sliding window
+    (1, 2, 2, 128, 64, False, 0),     # bidirectional
+]
+
+
+@pytest.mark.parametrize("B,H,G,S,d,causal,window", BWD_CASES)
+def test_flash_attention_backward(B, H, G, S, d, causal, window):
+    key = jax.random.PRNGKey(S + d)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (B, H, S, d))
+    k = jax.random.normal(ks[1], (B, G, S, d))
+    v = jax.random.normal(ks[2], (B, G, S, d))
+    dout = jax.random.normal(ks[3], (B, H, S, d))
+    fa = FK.make_flash_attention_vjp(causal=causal, window=window,
+                                     block_q=64, block_k=64,
+                                     interpret=True)
+    o, vjp = jax.vjp(fa, q, k, v)
+    dq, dk, dv = vjp(dout)
+
+    def ref_fn(q, k, v):
+        return ref.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal,
+            window=window).transpose(0, 2, 1, 3)
+
+    o_r, vjp_r = jax.vjp(ref_fn, q, k, v)
+    dq_r, dk_r, dv_r = vjp_r(dout)
+    np.testing.assert_allclose(o, o_r, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(dq, dq_r, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(dk, dk_r, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(dv, dv_r, rtol=5e-4, atol=5e-4)

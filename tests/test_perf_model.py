@@ -1,0 +1,162 @@
+"""Performance-model regression tests.
+
+These pin the §Perf findings so they can't silently regress:
+cross-KV caching keeps decode FLOPs ~O(params), the fused CE never
+materializes a second (B,S,V) tensor, and the jaxpr cost walker's
+invariants hold.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.jaxpr_cost import jaxpr_cost
+from repro.models.registry import get_smoke_arch
+
+
+def test_whisper_decode_flops_near_model_flops():
+    """Decode-step FLOPs must stay within ~4x of 2·N·B — the cross-KV
+    cache regression guard (recomputing encoder K/V per step was 100x)."""
+    arch = get_smoke_arch("whisper_large_v3")
+    cfg = arch.cfg
+    params, _ = arch.init(jax.random.PRNGKey(0), cfg)
+    n = sum(l.size for l in jax.tree.leaves(params))
+    B, S = 2, 16
+    cache = jax.eval_shape(
+        lambda: __import__("repro.models.model", fromlist=["m"]).init_cache(
+            cfg, B, S, jnp.float32))
+    from repro.models import model as M
+    cache_shapes = jax.eval_shape(
+        lambda: M.init_cache(cfg, B, S, jnp.float32))
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def step(p, c, t, i):
+        return M.decode_step(p, cfg, c, t, i)
+
+    pshapes = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+    cost = jaxpr_cost(step, pshapes, cache_shapes, tok, pos)
+    model_flops = 2 * n * B
+    assert cost["flops"] < 6 * model_flops, (cost["flops"], model_flops)
+
+
+def test_fused_ce_cheaper_than_log_softmax():
+    """next_token_loss (logsumexp−gather) must move strictly fewer
+    modeled bytes than the log_softmax formulation it replaced."""
+    from repro.models.layers import next_token_loss
+    B, S, V = 4, 32, 1000
+    logits = jax.ShapeDtypeStruct((B, S, V), jnp.float32)
+    toks = jax.ShapeDtypeStruct((B, S), jnp.int32)
+
+    def log_softmax_version(lg, tk):
+        lp = jax.nn.log_softmax(lg[:, :-1].astype(jnp.float32), -1)
+        tgt = tk[:, 1:]
+        nll = -jnp.take_along_axis(lp, tgt[..., None], -1)[..., 0]
+        return jnp.mean(nll)
+
+    fused = jaxpr_cost(next_token_loss, logits, toks)
+    old = jaxpr_cost(log_softmax_version, logits, toks)
+    assert fused["bytes"] < old["bytes"], (fused["bytes"], old["bytes"])
+    # and it computes the same value
+    key = jax.random.PRNGKey(0)
+    lg = jax.random.normal(key, (B, S, V))
+    tk = jax.random.randint(jax.random.fold_in(key, 1), (B, S), 0, V)
+    np.testing.assert_allclose(next_token_loss(lg, tk),
+                               log_softmax_version(lg, tk), rtol=1e-5)
+
+
+def test_jaxpr_cost_bytes_bracket():
+    """bytes_min <= bytes for a layered scan program."""
+    def body(c, w):
+        return jnp.tanh(c @ w), None
+
+    def fn(x, ws):
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((12, 64, 64), jnp.float32)
+    c = jaxpr_cost(fn, x, ws)
+    assert 0 < c["bytes_min"] <= c["bytes"]
+    assert c["flops"] == 12 * 2 * 64 ** 3
+
+
+def test_innermost_scan_is_fused_leaf():
+    """An innermost scan's interior bytes appear in the upper bound but
+    not in the fused lower bound."""
+    def inner(c, k):
+        s = c @ k                    # big intermediate
+        return c + jnp.tanh(s), None
+
+    def fn(x, ks):
+        y, _ = jax.lax.scan(inner, x, ks)
+        return y
+
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    ks = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)
+    c = jaxpr_cost(fn, x, ks)
+    # upper bound contains the 8 interior s-tensors; lower bound is
+    # boundary I/O only
+    assert c["bytes"] > c["bytes_min"]
+    boundary = (256 * 256 + 8 * 256 * 256 + 256 * 256) * 4
+    assert c["bytes_min"] <= boundary * 1.01
+
+
+def test_moe_topk_matches_lax_topk_values():
+    """The sort-free router selects the same expert set as lax.top_k."""
+    from repro.models.moe import _topk_iterative
+    key = jax.random.PRNGKey(0)
+    probs = jax.nn.softmax(jax.random.normal(key, (32, 64)), -1)
+    v1, i1 = _topk_iterative(probs, 8)
+    v2, i2 = jax.lax.top_k(probs, 8)
+    np.testing.assert_allclose(np.sort(v1, -1), np.sort(v2, -1),
+                               rtol=1e-6)
+    assert all(set(np.asarray(a)) == set(np.asarray(b))
+               for a, b in zip(i1, i2))
+
+
+def test_ring_cache_decode_path_uses_dus():
+    """The 1-token write lowers to dynamic-update-slice, not scatter."""
+    from repro.models import layers as L
+    from repro.models.registry import get_smoke_arch
+    arch = get_smoke_arch("stablelm_1_6b")
+    cfg = arch.cfg
+
+    def write(cache, k, v, pos):
+        p = {"wq": jnp.zeros((cfg.d_model, cfg.n_heads,
+                              cfg.resolved_head_dim))}
+        # call apply_attention's cache update indirectly via decode
+        return None
+
+    # direct check at the model level: decode jaxpr has no scatter of
+    # cache-sized operands
+    from repro.models import model as M
+    params, _ = arch.init(jax.random.PRNGKey(0), cfg)
+    cache = M.init_cache(cfg, 1, 16, jnp.float32)
+    pshapes = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+    cshapes = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), cache)
+    closed = jax.make_jaxpr(
+        lambda p, c: M.decode_step(p, cfg, c,
+                                   jnp.zeros((1, 1), jnp.int32),
+                                   jnp.zeros((), jnp.int32)))(
+        pshapes, cshapes)
+
+    def find_scatters(jaxpr, out):
+        for e in jaxpr.eqns:
+            if e.primitive.name.startswith("scatter"):
+                out.append(e)
+            for k2 in ("jaxpr", "call_jaxpr", "body_jaxpr", "cond_jaxpr"):
+                if k2 in e.params:
+                    j = e.params[k2]
+                    find_scatters(j.jaxpr if hasattr(j, "jaxpr") else j,
+                                  out)
+        return out
+
+    scatters = find_scatters(closed.jaxpr, [])
+    big = [e for e in scatters
+           if np.prod(e.outvars[0].aval.shape) > 4096]
+    assert not big, [e.outvars[0].aval.shape for e in big]
