@@ -79,47 +79,84 @@ def run_diloco(arch, loss_fn, sampler, params, *, k, H, rounds,
                compute_schedule="constant_distributed",
                cosine_stats=False, eval_every=1, step0=0,
                batch=8, seq=64, inner_lr=3e-3, warmup=20, seed=0,
-               eval_batch=64, adam_eps=0.1):
-    """Run T rounds; returns history list of per-round dicts."""
+               eval_batch=64, adam_eps=0.1, kernel_mode="ref",
+               use_scan=True, donate=True):
+    """Run T rounds; returns history list of per-round dicts.
+
+    Default path: the scanned driver (``diloco.make_run``) — all T
+    rounds execute inside one jitted call with in-graph periodic eval
+    and a donated state carry, so the host dispatches once per run
+    instead of once per round. ``use_scan=False`` falls back to the
+    legacy per-round Python loop (one dispatch + one blocking host eval
+    per round); both paths consume the same key chain and produce
+    bit-identical states in ``kernel_mode="ref"``.
+    """
     dcfg = DiLoCoConfig(k=k, H=H, outer_opt=outer_opt, outer_lr=outer_lr,
                         outer_momentum=outer_momentum,
                         drop_prob=drop_prob, prune_frac=prune_frac,
-                        outer_adam_eps=adam_eps)
+                        outer_adam_eps=adam_eps, kernel_mode=kernel_mode)
     total = step0 + rounds * H
     tcfg = TrainConfig(inner_lr=inner_lr, warmup_steps=warmup,
-                       total_steps=total, batch_size=batch, seq_len=seq)
+                       total_steps=total, batch_size=batch, seq_len=seq,
+                       kernel_mode=kernel_mode)
     state = diloco.init_state(params, dcfg)
     state = state._replace(inner_steps_done=jnp.asarray(step0))
-    rnd = diloco.make_round(loss_fn, sampler.sample_all_shards, dcfg,
-                            tcfg, total_steps=total,
-                            compute_cosine=cosine_stats,
-                            batch_size=batch, seq_len=seq)
-    ev = diloco.make_eval(loss_fn)
     val = sampler.sample_validation(jax.random.PRNGKey(10_000),
                                     eval_batch, seq)
     rng = np.random.default_rng(seed)
     drops = schedules.drop_masks(rng, drop_prob, k, rounds)
     sched = schedules.compute_schedule(compute_schedule, k, rounds)
+    acts = schedules.active_masks(sched, k)
     weights = jnp.asarray(shard_weights(sampler, weighted)[:k])
     weights = weights / weights.sum()
     key = jax.random.PRNGKey(seed + 2)
     hist = []
+
+    def record(t, vl, inner_loss, cos_mean=None, cos_std=None):
+        rec = {"round": t + 1,
+               "inner_steps": step0 + (t + 1) * H,
+               "compute_steps": int(sched[:t + 1].sum()) * H + step0,
+               "val_loss": vl, "ppl": float(np.exp(vl)),
+               "inner_loss": inner_loss,
+               "active": int(sched[t])}
+        if cosine_stats:
+            rec["cos_mean"] = cos_mean
+            rec["cos_std"] = cos_std
+        hist.append(rec)
+
+    if use_scan:
+        run = diloco.make_run(
+            loss_fn, sampler.sample_all_shards, dcfg, tcfg,
+            rounds_per_call=rounds, total_steps=total,
+            compute_cosine=cosine_stats, batch_size=batch, seq_len=seq,
+            eval_tokens=val, eval_every=eval_every, donate=donate)
+        state, ms = run(state, key, jnp.asarray(drops),
+                        jnp.asarray(acts), weights)
+        ms = jax.tree.map(np.asarray, ms)
+        for t in range(rounds):
+            # same cadence as the legacy loop — a NaN on an eval round
+            # is a genuine divergence and is recorded as such
+            if (t + 1) % eval_every == 0 or t == rounds - 1:
+                record(t, float(ms["val_loss"][t]),
+                       float(ms["inner_loss"][t]),
+                       float(ms["cos_mean"][t]) if cosine_stats else None,
+                       float(ms["cos_std"][t]) if cosine_stats else None)
+        return hist, state
+
+    rnd = diloco.make_round(loss_fn, sampler.sample_all_shards, dcfg,
+                            tcfg, total_steps=total,
+                            compute_cosine=cosine_stats,
+                            batch_size=batch, seq_len=seq)
+    ev = diloco.make_eval(loss_fn)
     for t in range(rounds):
         key, sub = jax.random.split(key)
-        act = jnp.asarray(schedules.active_mask(int(sched[t]), k))
-        state, m = rnd(state, sub, jnp.asarray(drops[t]), act, weights)
+        state, m = rnd(state, sub, jnp.asarray(drops[t]),
+                       jnp.asarray(acts[t]), weights)
         if (t + 1) % eval_every == 0 or t == rounds - 1:
             vl = float(ev(state.global_params, val))
-            rec = {"round": t + 1,
-                   "inner_steps": step0 + (t + 1) * H,
-                   "compute_steps": int(sched[:t + 1].sum()) * H + step0,
-                   "val_loss": vl, "ppl": float(np.exp(vl)),
-                   "inner_loss": float(m["inner_loss"]),
-                   "active": int(sched[t])}
-            if cosine_stats:
-                rec["cos_mean"] = float(m["cos_mean"])
-                rec["cos_std"] = float(m["cos_std"])
-            hist.append(rec)
+            record(t, vl, float(m["inner_loss"]),
+                   float(m["cos_mean"]) if cosine_stats else None,
+                   float(m["cos_std"]) if cosine_stats else None)
     return hist, state
 
 

@@ -30,6 +30,7 @@ MODULES = [
     "fig10_cosine_similarity",
     "beyond_async",           # beyond-paper: async DiLoCo (paper §5)
     "roofline",               # §Roofline aggregation over dry-run JSON
+    "wallclock",              # perf: scanned driver vs legacy loop
 ]
 
 

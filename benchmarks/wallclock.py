@@ -1,0 +1,186 @@
+"""Wall-clock benchmark: legacy per-round loop vs scanned driver.
+
+The legacy driver re-dispatches one jitted round from Python every
+outer iteration and blocks on a host-side eval before the next round —
+per-round cost = round compute + jit dispatch + device→host sync +
+eval dispatch. The scanned driver (``diloco.make_run``) executes R
+rounds inside ONE jit via ``lax.scan`` with the eval computed in-graph
+and the state carry donated, so the host pays one dispatch per R
+rounds and the carry is not double-buffered.
+
+Both paths run the identical computation (same key chain, same
+``kernel_mode``) so the delta is pure driver overhead. Results go to
+``BENCH_wallclock.json`` at the repo root — the perf trajectory every
+future PR measures itself against:
+
+  tokens_per_sec          training tokens processed per wall second
+  round_latency_ms        wall time per DiLoCo round (compute + driver)
+  dispatch_overhead_ms    legacy minus scanned round latency — the
+                          per-round cost of Python dispatch + blocking
+                          eval that the scanned driver eliminates
+  peak_state_bytes_est    optimizer-state footprint: legacy double-
+                          buffers the k×(params + AdamW m/v) carry,
+                          donation updates it in place
+
+Run:  PYTHONPATH=src python -m benchmarks.wallclock [--rounds 8 ...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from . import common as C
+from repro.configs.base import DiLoCoConfig, TrainConfig
+from repro.core import diloco
+
+ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+OUT_PATH = os.path.join(ROOT, "BENCH_wallclock.json")
+
+
+def tree_bytes(tree) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
+
+
+def bench_drivers(loss_fn, sampler, params, dcfg, tcfg, *, rounds, batch,
+                  seq, eval_batch, seed, repeats):
+    """Time the legacy loop and the scanned driver, interleaved.
+
+    Legacy: per-round jit dispatch + blocking host eval every round.
+    Scanned: one jit per run — lax.scan over rounds, in-graph eval,
+    donated carry. The repeats alternate legacy/scanned so background
+    load drift hits both paths equally; min-of-repeats per path.
+    Returns (t_legacy, t_scanned, loss_legacy, loss_scanned).
+    """
+    total = rounds * dcfg.H
+    val = sampler.sample_validation(jax.random.PRNGKey(10_000),
+                                    eval_batch, seq)
+    rnd = diloco.make_round(loss_fn, sampler.sample_all_shards, dcfg,
+                            tcfg, total_steps=total, batch_size=batch,
+                            seq_len=seq)
+    ev = diloco.make_eval(loss_fn)
+    run = diloco.make_run(loss_fn, sampler.sample_all_shards, dcfg, tcfg,
+                          rounds_per_call=rounds, total_steps=total,
+                          batch_size=batch, seq_len=seq, eval_tokens=val,
+                          eval_every=1, donate=True)
+
+    def one_legacy():
+        state = diloco.init_state(params, dcfg)
+        jax.block_until_ready(state)
+        key = jax.random.PRNGKey(seed + 2)
+        losses = []
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            key, sub = jax.random.split(key)
+            state, m = rnd(state, sub)
+            losses.append(float(ev(state.global_params, val)))
+        jax.block_until_ready(state)
+        return time.perf_counter() - t0, losses[-1]
+
+    def one_scanned():
+        state = diloco.init_state(params, dcfg)
+        jax.block_until_ready(state)
+        t0 = time.perf_counter()
+        state, ms = run(state, jax.random.PRNGKey(seed + 2))
+        jax.block_until_ready((state, ms))
+        return time.perf_counter() - t0, float(ms["val_loss"][-1])
+
+    one_legacy(), one_scanned()                 # compile warmup
+    pairs = [(one_legacy(), one_scanned()) for _ in range(repeats)]
+    t_leg = min(l[0] for l, _ in pairs)
+    t_scan = min(s[0] for _, s in pairs)
+    return t_leg, t_scan, pairs[0][0][1], pairs[0][1][1]
+
+
+def run(scale: int = 1, *, k=4, H=5, rounds=16, batch=2, seq=32,
+        eval_batch=16, repeats=5, kernel_mode="ref", seed=0,
+        out=OUT_PATH):
+    rounds = rounds * scale
+    arch, loss_fn, sampler = C.make_setup(k=k, seed=seed)
+    total = rounds * H
+    params, _ = C.pretrain(arch, loss_fn, sampler, 0, batch=batch,
+                           seq=seq, lr=3e-3, warmup=10, total=total,
+                           seed=seed)
+    dcfg = DiLoCoConfig(k=k, H=H, kernel_mode=kernel_mode)
+    tcfg = TrainConfig(inner_lr=3e-3, warmup_steps=10, total_steps=total,
+                       batch_size=batch, seq_len=seq,
+                       kernel_mode=kernel_mode)
+    kw = dict(rounds=rounds, batch=batch, seq=seq, eval_batch=eval_batch,
+              seed=seed, repeats=repeats)
+
+    print(f"k={k} H={H} rounds={rounds} batch={batch} seq={seq} "
+          f"kernel_mode={kernel_mode} backend={jax.default_backend()}")
+    t_leg, t_scan, loss_leg, loss_scan = bench_drivers(
+        loss_fn, sampler, params, dcfg, tcfg, **kw)
+
+    tokens = k * H * rounds * batch * seq
+    state_bytes = tree_bytes(diloco.init_state(params, dcfg))
+    report = {
+        "config": {"k": k, "H": H, "rounds": rounds, "batch": batch,
+                   "seq": seq, "eval_batch": eval_batch,
+                   "kernel_mode": kernel_mode,
+                   "backend": jax.default_backend(),
+                   "model_params": int(sum(
+                       l.size for l in jax.tree.leaves(params)))},
+        "legacy": {
+            "total_s": t_leg,
+            "round_latency_ms": 1e3 * t_leg / rounds,
+            "tokens_per_sec": tokens / t_leg,
+            "final_val_loss": loss_leg,
+            "peak_state_bytes_est": 2 * state_bytes,  # double-buffered
+        },
+        "scanned": {
+            "total_s": t_scan,
+            "round_latency_ms": 1e3 * t_scan / rounds,
+            "tokens_per_sec": tokens / t_scan,
+            "final_val_loss": loss_scan,
+            "peak_state_bytes_est": state_bytes,      # donated carry
+        },
+        "dispatch_overhead_ms_per_round":
+            1e3 * (t_leg - t_scan) / rounds,
+        "speedup": t_leg / t_scan,
+        "claims": {
+            "scanned_beats_legacy_round_latency": t_scan < t_leg,
+            "same_final_loss": abs(loss_leg - loss_scan) < 1e-4,
+            "speedup_x": float(t_leg / t_scan),
+        },
+    }
+    print(f"legacy : {report['legacy']['round_latency_ms']:8.2f} ms/round"
+          f"  {report['legacy']['tokens_per_sec']:10.0f} tok/s")
+    print(f"scanned: {report['scanned']['round_latency_ms']:8.2f} ms/round"
+          f"  {report['scanned']['tokens_per_sec']:10.0f} tok/s")
+    print(f"speedup: {report['speedup']:.3f}x  "
+          f"(dispatch overhead "
+          f"{report['dispatch_overhead_ms_per_round']:.2f} ms/round)")
+
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1)
+    print("wrote", out)
+    C.save("wallclock", report)
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--H", type=int, default=5)
+    ap.add_argument("--rounds", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--eval-batch", type=int, default=16)
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--kernel-mode", default="ref",
+                    choices=["auto", "pallas", "interpret", "ref"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=OUT_PATH)
+    a = ap.parse_args(argv)
+    return run(1, k=a.k, H=a.H, rounds=a.rounds, batch=a.batch,
+               seq=a.seq, eval_batch=a.eval_batch, repeats=a.repeats,
+               kernel_mode=a.kernel_mode, seed=a.seed, out=a.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -124,6 +124,13 @@ class DiLoCoConfig:
     prune_frac: float = 0.0     # sign-pruning of outer grads (Tab 6)
     weighted_avg: bool = False  # weight outer grads by shard size
     sync_inner_state: bool = False  # paper: False (3x comm for no gain)
+    # Backend for the fused outer-optimizer / pruning kernels:
+    #   ref       — legacy pure-jnp tree maps (bit-identical to the
+    #               pre-kernel implementation);
+    #   auto      — Pallas kernels on TPU, jnp oracles elsewhere;
+    #   pallas    — force the Pallas kernels (TPU);
+    #   interpret — Pallas kernels in interpret mode (CPU testing).
+    kernel_mode: str = "ref"
 
 
 @dataclass(frozen=True)
@@ -140,3 +147,5 @@ class TrainConfig:
     seq_len: int = 1_024
     pretrain_steps: int = 24_000
     seed: int = 0
+    # Backend for the fused inner-AdamW kernel (see DiLoCoConfig).
+    kernel_mode: str = "ref"

@@ -22,18 +22,18 @@ import jax.numpy as jnp
 from repro.kernels import ops as kops
 
 
-def sign_prune_matrix(x, frac: float):
+def sign_prune_matrix(x, frac: float, *, mode: str = "auto"):
     """x: (R, C) — prune per row (dispatches kernel vs jnp oracle)."""
-    return kops.sign_prune(x, frac)
+    return kops.sign_prune(x, frac, mode=mode)
 
 
-def sign_prune(tree, frac: float):
+def sign_prune(tree, frac: float, *, mode: str = "auto"):
     """Apply per-neuron sign pruning to every leaf of an outer-gradient
     tree. Leaves are reshaped to (rows, cols) with the leading dim as
     rows (a 'neuron' = one output row); vectors prune globally. The
     Pallas kernel is used on TPU, the jnp oracle elsewhere — identical
     semantics (see kernels/sign_prune.py)."""
-    return kops.sign_prune_tree(tree, frac)
+    return kops.sign_prune_tree(tree, frac, mode=mode)
 
 
 def density(tree) -> jnp.ndarray:

@@ -62,10 +62,15 @@ def broadcast_replicas(tree, k: int):
 
 
 def init_state(params, dcfg: DiLoCoConfig) -> DiLoCoState:
-    """Start DiLoCo from (possibly pretrained) ``params``."""
+    """Start DiLoCo from (possibly pretrained) ``params``.
+
+    ``global_params`` is a copy, not an alias of the caller's tree —
+    the scanned driver (``make_run``) donates the state's buffers, and
+    donating an aliased tree would delete the caller's params.
+    """
     rep = broadcast_replicas(params, dcfg.k)
     return DiLoCoState(
-        global_params=params,
+        global_params=jax.tree.map(jnp.copy, params),
         outer_state=outer_opt.init(params),
         replica_params=rep,
         inner_state=jax.vmap(adamw.init)(rep),
@@ -92,7 +97,8 @@ def make_inner_step(loss_fn: Callable, tcfg: TrainConfig,
         lr = sched(step_idx)
         params, opt_state = adamw.update(
             grads, opt_state, params, lr=lr, b1=tcfg.b1, b2=tcfg.b2,
-            eps=tcfg.eps, weight_decay=tcfg.weight_decay)
+            eps=tcfg.eps, weight_decay=tcfg.weight_decay,
+            mode=getattr(tcfg, "kernel_mode", "ref"))
         return params, opt_state, {"loss": loss, "gnorm": gnorm, "lr": lr}
 
     return step
@@ -155,11 +161,15 @@ def outer_step(state: DiLoCoState, dcfg: DiLoCoConfig, *,
     m = drop_mask * active_mask * weights                     # (k,)
     denom = jnp.maximum(m.sum(), 1e-9)
 
+    kernel_mode = getattr(dcfg, "kernel_mode", "ref")
+
     # Δ_i = θ^(t-1) − θ_i^(t)   (line 12)
     deltas = jax.tree.map(lambda g, r: g[None] - r,
                           state.global_params, state.replica_params)
     if dcfg.prune_frac > 0:
-        deltas = jax.vmap(lambda d: sign_prune(d, dcfg.prune_frac))(deltas)
+        deltas = jax.vmap(
+            lambda d: sign_prune(d, dcfg.prune_frac, mode=kernel_mode)
+        )(deltas)
 
     # weighted average over communicating replicas. On the pod-sharded
     # path this contraction is THE cross-pod all-reduce.
@@ -170,7 +180,7 @@ def outer_step(state: DiLoCoState, dcfg: DiLoCoConfig, *,
         avg, state.outer_state, state.global_params,
         kind=dcfg.outer_opt, lr=dcfg.outer_lr,
         momentum=dcfg.outer_momentum, b2=dcfg.outer_adam_b2,
-        eps=dcfg.outer_adam_eps)
+        eps=dcfg.outer_adam_eps, kernel_mode=kernel_mode)
 
     # re-dispatch (line 3 of next phase): communicated & active replicas
     # adopt θ^(t); dropped replicas continue from their own θ_i; inactive
@@ -223,29 +233,22 @@ def _pairwise_cosine(deltas, mask):
 
 
 # ---------------------------------------------------------------------------
-# round driver (one outer iteration = H inner steps + outer step)
+# round drivers (one outer iteration = H inner steps + outer step)
 # ---------------------------------------------------------------------------
 
-def make_round(loss_fn, sample_fn, dcfg: DiLoCoConfig, tcfg: TrainConfig,
-               *, total_steps: int | None = None,
-               compute_cosine: bool = False,
-               batch_size: int | None = None,
-               seq_len: int | None = None):
-    """Build the jitted DiLoCo round.
-
-    sample_fn(key, batch, seq_len) -> (k, B, S) int32 tokens, one batch
-    per shard. Returns round(state, key, drop_mask, active_mask, weights)
-    -> (state, metrics). Data for all H steps is sampled *inside* the
-    round via fold_in so the jitted function stays closed over the
-    sampler constants only.
-    """
+def _make_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
+                     tcfg: TrainConfig, *, total_steps=None,
+                     compute_cosine=False, batch_size=None, seq_len=None):
+    """Un-jitted round: the computation shared by ``make_round`` (one
+    jit dispatch per round) and ``make_run`` (R rounds scanned inside
+    one jit)."""
     inner_step_tok = make_inner_step(
         lambda p, b: loss_fn(p, b), tcfg, total_steps)
     B = batch_size or tcfg.batch_size
     S = seq_len or tcfg.seq_len
 
-    def round_fn(state: DiLoCoState, key, drop_mask=None, active_mask=None,
-                 weights=None):
+    def round_body(state: DiLoCoState, key, drop_mask=None,
+                   active_mask=None, weights=None):
         H = dcfg.H
         keys = jax.random.split(key, H)
         toks = jax.vmap(lambda kk: sample_fn(kk, B, S))(keys)  # (H,k',B,S)
@@ -264,7 +267,113 @@ def make_round(loss_fn, sample_fn, dcfg: DiLoCoConfig, tcfg: TrainConfig,
         om["inner_loss_last"] = ms["loss"][:, -1].mean()
         return state, om
 
-    return jax.jit(round_fn)
+    return round_body
+
+
+def make_round(loss_fn, sample_fn, dcfg: DiLoCoConfig, tcfg: TrainConfig,
+               *, total_steps: int | None = None,
+               compute_cosine: bool = False,
+               batch_size: int | None = None,
+               seq_len: int | None = None):
+    """Build the jitted DiLoCo round.
+
+    sample_fn(key, batch, seq_len) -> (k, B, S) int32 tokens, one batch
+    per shard. Returns round(state, key, drop_mask, active_mask, weights)
+    -> (state, metrics). Data for all H steps is sampled *inside* the
+    round via fold_in so the jitted function stays closed over the
+    sampler constants only.
+    """
+    round_body = _make_round_body(
+        loss_fn, sample_fn, dcfg, tcfg, total_steps=total_steps,
+        compute_cosine=compute_cosine, batch_size=batch_size,
+        seq_len=seq_len)
+    return jax.jit(round_body)
+
+
+def split_chain(key, n: int):
+    """((2,) carry, (n, 2) subs) uint32 — the carry key and sub-keys
+    the sequential host pattern ``key, sub = jax.random.split(key)``
+    would produce over n iterations, computed in-graph. Lets the
+    scanned driver consume the exact same randomness as the legacy
+    per-round Python loop; the carry (returned as ``next_key`` in
+    ``make_run`` metrics) seeds the next chunk of a chunked run."""
+    def body(carry, _):
+        carry, sub = jax.random.split(carry)
+        return carry, sub
+
+    return jax.lax.scan(body, key, None, length=n)
+
+
+def make_run(loss_fn, sample_fn, dcfg: DiLoCoConfig, tcfg: TrainConfig,
+             *, rounds_per_call: int,
+             total_steps: int | None = None,
+             compute_cosine: bool = False,
+             batch_size: int | None = None,
+             seq_len: int | None = None,
+             eval_tokens=None, eval_every: int = 1,
+             donate: bool = True):
+    """Build the scanned multi-round driver: R = ``rounds_per_call``
+    full DiLoCo rounds execute inside ONE jitted call via ``lax.scan``,
+    so the host dispatches once per R rounds instead of once per round
+    (and never blocks on a host-side eval between rounds).
+
+    Returns ``run(state, key, drop_masks, active_masks, weights) ->
+    (state, metrics)`` where drop/active masks are stacked ``(R, k)``
+    arrays (or None for all-ones) and every metric comes back stacked
+    along a leading (R,) axis, plus ``metrics["next_key"]`` — the
+    advanced carry key that seeds the next chunk of a chunked run.
+    Round t consumes the key the legacy pattern ``key, sub =
+    split(key)`` would have given it, so one ``run`` call is
+    bit-identical to R iterations of ``make_round``.
+
+    ``eval_tokens`` (B, S) enables in-graph periodic eval: rounds where
+    ``(t+1) % eval_every == 0`` (and the last round) report
+    ``val_loss``; skipped rounds report NaN and pay no eval FLOPs
+    (``lax.cond``). The eval index is call-local: chunked callers
+    (several ``run`` calls covering one logical training run) should
+    keep ``eval_every=1`` or chunk on a multiple of ``eval_every``,
+    else the cadence resets at every chunk boundary.
+
+    ``donate=True`` donates the DiLoCoState carry — the k×(params +
+    AdamW m/v) replica buffers are updated in place instead of
+    double-buffered, halving steady-state optimizer memory.
+    """
+    round_body = _make_round_body(
+        loss_fn, sample_fn, dcfg, tcfg, total_steps=total_steps,
+        compute_cosine=compute_cosine, batch_size=batch_size,
+        seq_len=seq_len)
+    R = int(rounds_per_call)
+    ev_toks = None if eval_tokens is None else jnp.asarray(eval_tokens)
+
+    def run_fn(state: DiLoCoState, key, drop_masks=None,
+               active_masks=None, weights=None):
+        ones = jnp.ones((R, dcfg.k), jnp.float32)
+        drop_masks = ones if drop_masks is None else drop_masks
+        active_masks = ones if active_masks is None else active_masks
+        next_key, subs = split_chain(key, R)
+
+        def body(st, xs):
+            sub, drop, act, t = xs
+            st, m = round_body(st, sub, drop, act, weights)
+            if ev_toks is not None:
+                do_eval = ((t + 1) % eval_every == 0) | (t == R - 1)
+                m["val_loss"] = jax.lax.cond(
+                    do_eval,
+                    lambda p: loss_fn(p, {"tokens": ev_toks})[0]
+                    .astype(jnp.float32),
+                    lambda p: jnp.full((), jnp.nan, jnp.float32),
+                    st.global_params)
+            return st, m
+
+        state, ms = jax.lax.scan(
+            body, state,
+            (subs, drop_masks, active_masks, jnp.arange(R)))
+        ms["next_key"] = next_key     # seeds the next chunk (not (R,))
+        return state, ms
+
+    if donate:
+        return jax.jit(run_fn, donate_argnums=(0,))
+    return jax.jit(run_fn)
 
 
 def make_eval(loss_fn):

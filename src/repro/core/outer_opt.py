@@ -27,9 +27,23 @@ def init(params) -> OuterState:
 
 
 def update(delta, state: OuterState, params, *, kind: str, lr: float,
-           momentum: float = 0.9, b2: float = 0.95, eps: float = 0.1):
-    """Returns (new_params, new_state)."""
+           momentum: float = 0.9, b2: float = 0.95, eps: float = 0.1,
+           kernel_mode: str = "ref"):
+    """Returns (new_params, new_state).
+
+    ``kernel_mode`` != "ref" routes the Nesterov update (the paper's
+    default outer optimizer) through the fused Pallas kernel — one VMEM
+    pass over (θ, Δ, b) instead of two tree maps. Other outer-opt kinds
+    always use the jnp tree maps (they are off the paper's main path).
+    """
     count = state.count + 1
+
+    if kind == "nesterov" and kernel_mode != "ref":
+        from repro.kernels import ops as kops
+        new_p, new_buf = kops.nesterov_update_tree(
+            params, delta, state.buf, lr=lr, momentum=momentum,
+            mode=kernel_mode)
+        return new_p, OuterState(new_buf, state.buf2, count)
 
     if kind == "sgd":
         new_p = jax.tree.map(lambda p, d: p - lr * d, params, delta)

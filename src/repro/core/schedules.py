@@ -43,6 +43,12 @@ def active_mask(n_active: int, k: int) -> np.ndarray:
     return m
 
 
+def active_masks(schedule: np.ndarray, k: int) -> np.ndarray:
+    """(n_rounds, k) float — per-round active masks for a compute
+    schedule, in the stacked layout the scanned driver consumes."""
+    return np.stack([active_mask(int(n), k) for n in schedule])
+
+
 def drop_masks(rng: np.random.Generator, drop_prob: float, k: int,
                n_rounds: int) -> np.ndarray:
     """(n_rounds, k) float — 1 = communicated, 0 = dropped (Fig 8)."""

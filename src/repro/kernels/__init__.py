@@ -6,4 +6,10 @@ sign_prune.py       fused sign election + magnitude pruning (Table 6)
 outer_nesterov.py   fused outer Nesterov update
 ops.py              backend dispatch (kernel on TPU, jnp oracle elsewhere)
 ref.py              pure-jnp oracles for every kernel
+compat.py           Pallas TPU API names across jax releases
+
+The fused optimizer kernels are wired into the training hot path via
+``kernel_mode`` on TrainConfig (inner AdamW) and DiLoCoConfig (outer
+Nesterov, sign pruning): ``ref`` = legacy jnp tree maps, ``auto`` =
+kernels on TPU / oracles elsewhere, ``pallas``/``interpret`` = forced.
 """

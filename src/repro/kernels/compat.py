@@ -1,0 +1,18 @@
+"""Pallas TPU API compatibility across jax releases.
+
+jax renamed the TPU-specific Pallas types between release lines:
+
+  * ``pltpu.TPUCompilerParams`` (<= 0.4.x)  ->  ``pltpu.CompilerParams``
+  * ``pltpu.TPUMemorySpace``   (<= 0.4.x)  ->  ``pltpu.MemorySpace``
+
+Every kernel in this package imports the names from here so the package
+works on either side of the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+MemorySpace = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace
+SMEM = MemorySpace.SMEM

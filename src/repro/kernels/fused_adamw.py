@@ -19,7 +19,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from . import compat
 
 
 def _adamw_kernel(sc_ref, p_ref, g_ref, m_ref, v_ref,
@@ -74,12 +75,12 @@ def fused_adamw(p, g, m, v, *, lr, c1, c2, b1=0.9, b2=0.95, eps=1e-8,
     outs = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),
+        in_specs=[pl.BlockSpec(memory_space=compat.SMEM),
                   tile, tile, tile, tile],
         out_specs=(tile, tile, tile),
         out_shape=tuple(jax.ShapeDtypeStruct((rows_p, cols), d)
                         for d in (dtype, m.dtype, v.dtype)),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(scalars, p2, g2, m2, v2)

@@ -13,7 +13,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from . import compat
 
 
 def _nesterov_kernel(sc_ref, p_ref, d_ref, b_ref, p_out, b_out, *,
@@ -56,12 +57,12 @@ def outer_nesterov(p, delta, buf, *, lr, momentum=0.9,
     outs = pl.pallas_call(
         functools.partial(_nesterov_kernel, momentum=momentum),
         grid=(rows_p // br,),
-        in_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),
+        in_specs=[pl.BlockSpec(memory_space=compat.SMEM),
                   tile, tile, tile],
         out_specs=(tile, tile),
         out_shape=(jax.ShapeDtypeStruct((rows_p, cols), dtype),
                    jax.ShapeDtypeStruct((rows_p, cols), buf.dtype)),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(scalars, p2, d2, b2)

@@ -18,7 +18,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from . import compat
 
 
 def _prune_kernel(x_ref, o_ref, *, keep_count, valid_cols, iters):
@@ -73,7 +74,7 @@ def sign_prune(x, frac: float, *, block_rows: int = 64,
         in_specs=[pl.BlockSpec((br, C_p), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((br, C_p), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((R_p, C_p), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(xp)

@@ -40,11 +40,13 @@ def build(args):
                         outer_momentum=args.outer_momentum,
                         drop_prob=args.drop_prob,
                         prune_frac=args.prune_frac,
-                        weighted_avg=args.weighted)
+                        weighted_avg=args.weighted,
+                        kernel_mode=args.kernel_mode)
     total = args.pretrain_steps + args.rounds * args.H
     tcfg = TrainConfig(inner_lr=args.inner_lr, warmup_steps=args.warmup,
                        total_steps=total, batch_size=args.batch,
-                       seq_len=args.seq, seed=args.seed)
+                       seq_len=args.seq, seed=args.seed,
+                       kernel_mode=args.kernel_mode)
     sampler = make_regime(args.regime, k=args.k,
                           vocab_size=cfg.vocab_size, seed=args.seed,
                           imbalanced=args.weighted)
@@ -82,34 +84,71 @@ def run(args):
 
     # ---- DiLoCo phase ----
     state = diloco.init_state(params, dcfg)
-    rnd = diloco.make_round(loss_fn, sampler.sample_all_shards, dcfg, tcfg,
-                            total_steps=tcfg.total_steps,
-                            compute_cosine=args.cosine_stats,
-                            batch_size=args.batch, seq_len=args.seq)
     rng = np.random.default_rng(args.seed)
     drops = schedules.drop_masks(rng, args.drop_prob, args.k, args.rounds)
     sched = schedules.compute_schedule(args.compute_schedule, args.k,
                                        args.rounds)
+    acts = schedules.active_masks(sched, args.k)
     weights = jnp.asarray(shard_weights(sampler, args.weighted))
 
-    t0 = time.time()
-    for t in range(args.rounds):
-        key, sub = jax.random.split(key)
-        act = jnp.asarray(schedules.active_mask(int(sched[t]), args.k))
-        state, m = rnd(state, sub, jnp.asarray(drops[t]), act, weights)
-        vl = float(ev(state.global_params, val))
+    def emit_round(t, m, i=None):
+        """Append the round-t record from metrics dict ``m`` (scalar
+        entries for the legacy loop, (R,) stacked entries at index
+        ``i`` for the scanned driver) and print the progress line."""
+        pick = (lambda x: float(x)) if i is None else \
+            (lambda x: float(x[i]))
+        vl = pick(m["val_loss"])
         rec = {"phase": "diloco", "round": t + 1,
                "inner_steps": args.pretrain_steps + (t + 1) * args.H,
-               "inner_loss": float(m["inner_loss"]), "val_loss": vl,
-               "outer_gnorm": float(m["outer_gnorm"]),
+               "inner_loss": pick(m["inner_loss"]), "val_loss": vl,
+               "outer_gnorm": pick(m["outer_gnorm"]),
                "active": int(sched[t])}
         if args.cosine_stats:
-            rec["cos_mean"] = float(m["cos_mean"])
-            rec["cos_std"] = float(m["cos_std"])
+            rec["cos_mean"] = pick(m["cos_mean"])
+            rec["cos_std"] = pick(m["cos_std"])
         history.append(rec)
         print(f"[round {t + 1}/{args.rounds}] "
               f"inner={rec['inner_loss']:.4f} val={vl:.4f} "
               f"ppl={np.exp(vl):.2f} active={rec['active']}", flush=True)
+
+    t0 = time.time()
+    if args.legacy_loop:
+        # One jit dispatch + one blocking host eval per round — kept for
+        # comparison (see benchmarks/wallclock.py).
+        rnd = diloco.make_round(loss_fn, sampler.sample_all_shards, dcfg,
+                                tcfg, total_steps=tcfg.total_steps,
+                                compute_cosine=args.cosine_stats,
+                                batch_size=args.batch, seq_len=args.seq)
+        for t in range(args.rounds):
+            key, sub = jax.random.split(key)
+            state, m = rnd(state, sub, jnp.asarray(drops[t]),
+                           jnp.asarray(acts[t]), weights)
+            m = dict(m, val_loss=ev(state.global_params, val))
+            emit_round(t, m)
+    else:
+        # Scanned driver: chunks of `rounds_per_call` rounds run inside
+        # one jit each (donated carry, in-graph eval every round); the
+        # host only touches metrics at chunk boundaries.
+        rpc = max(1, min(args.rounds_per_call or args.rounds,
+                         args.rounds))
+        runs = {}
+        t = 0
+        while t < args.rounds:
+            n = min(rpc, args.rounds - t)
+            if n not in runs:
+                runs[n] = diloco.make_run(
+                    loss_fn, sampler.sample_all_shards, dcfg, tcfg,
+                    rounds_per_call=n, total_steps=tcfg.total_steps,
+                    compute_cosine=args.cosine_stats,
+                    batch_size=args.batch, seq_len=args.seq,
+                    eval_tokens=val, eval_every=1)
+            state, ms = runs[n](state, key, jnp.asarray(drops[t:t + n]),
+                                jnp.asarray(acts[t:t + n]), weights)
+            key = ms.pop("next_key")
+            ms = jax.tree.map(np.asarray, ms)
+            for i in range(n):
+                emit_round(t + i, ms, i)
+            t += n
 
     print(f"done in {time.time() - t0:.1f}s; "
           f"entropy floor = {sampler.entropy_floor():.4f} "
@@ -155,6 +194,16 @@ def make_parser():
                     choices=["constant_local", "constant_distributed",
                              "doubling", "halving", "ramp_up", "ramp_down"])
     ap.add_argument("--cosine-stats", action="store_true")
+    ap.add_argument("--kernel-mode", default="ref",
+                    choices=["auto", "pallas", "interpret", "ref"],
+                    help="fused optimizer kernels: auto=Pallas on TPU, "
+                         "ref=legacy jnp tree maps (bit-identical)")
+    ap.add_argument("--rounds-per-call", type=int, default=0,
+                    help="rounds scanned inside one jit "
+                         "(0 = all rounds in a single call)")
+    ap.add_argument("--legacy-loop", action="store_true",
+                    help="use the per-round Python loop instead of the "
+                         "scanned driver")
     ap.add_argument("--log-every", type=int, default=200)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="")

@@ -25,9 +25,22 @@ def init(params) -> AdamWState:
 
 
 def update(grads, state: AdamWState, params, *, lr, b1=0.9, b2=0.95,
-           eps=1e-8, weight_decay=0.1):
-    """One AdamW step. ``lr`` may be a scalar traced value (schedule)."""
+           eps=1e-8, weight_decay=0.1, mode: str = "ref"):
+    """One AdamW step. ``lr`` may be a scalar traced value (schedule).
+
+    ``mode`` selects the backend: ``ref`` is the legacy pure-jnp tree
+    map below; ``auto``/``pallas``/``interpret`` route through the fused
+    single-VMEM-pass kernel in ``repro.kernels`` (one read of each of
+    p/g/m/v, one write of p/m/v per step instead of XLA's split
+    fusions).
+    """
     count = state.count + 1
+    if mode != "ref":
+        from repro.kernels import ops as kops
+        new_p, new_m, new_v = kops.adamw_update_tree(
+            params, grads, state.m, state.v, lr=lr, count=count, b1=b1,
+            b2=b2, eps=eps, weight_decay=weight_decay, mode=mode)
+        return new_p, AdamWState(new_m, new_v, count)
     c1 = 1.0 - b1 ** count.astype(jnp.float32)
     c2 = 1.0 - b2 ** count.astype(jnp.float32)
 

@@ -15,7 +15,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs.base import DiLoCoConfig, TrainConfig
 from repro.core import diloco, outer_opt

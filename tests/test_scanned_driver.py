@@ -1,0 +1,199 @@
+"""Tests for the dispatch-free round path: the scanned multi-round
+driver (``diloco.make_run``) and the fused optimizer kernels behind
+``kernel_mode``.
+
+Pins the two contracts the refactor must keep:
+  * the scanned driver is bit-identical to R iterations of the legacy
+    per-round loop (same key chain, ref mode);
+  * the fused AdamW / Nesterov kernels (interpret mode on CPU) match
+    the legacy jnp tree maps through a full DiLoCo round.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import DiLoCoConfig, TrainConfig, ModelConfig
+from repro.core import diloco, outer_opt
+from repro.data.sharding import make_regime
+from repro.models.registry import Arch
+from repro.optim import adamw
+
+K, H, B, S, VOCAB = 2, 3, 2, 16, 64
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ModelConfig(name="tiny", family="dense", n_layers=1,
+                      d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                      vocab_size=VOCAB, remat=False, attn_chunk=32)
+    arch = Arch(cfg=cfg)
+    loss_fn = lambda p, b: arch.loss(p, b)
+    sampler = make_regime("non_iid", k=K, vocab_size=VOCAB, seed=0)
+    params, _ = arch.init(jax.random.PRNGKey(0), cfg)
+    return arch, loss_fn, sampler, params
+
+
+def _cfgs(kernel_mode="ref", rounds=4):
+    dcfg = DiLoCoConfig(k=K, H=H, kernel_mode=kernel_mode)
+    tcfg = TrainConfig(inner_lr=3e-3, warmup_steps=2,
+                       total_steps=rounds * H, batch_size=B, seq_len=S,
+                       kernel_mode=kernel_mode)
+    return dcfg, tcfg
+
+
+def test_scanned_run_bit_identical_to_legacy_loop(setup):
+    """One make_run call == R iterations of make_round, to the bit."""
+    arch, loss_fn, sampler, params = setup
+    R = 4
+    dcfg, tcfg = _cfgs(rounds=R)
+
+    state_l = diloco.init_state(params, dcfg)
+    rnd = diloco.make_round(loss_fn, sampler.sample_all_shards, dcfg,
+                            tcfg, total_steps=R * H, batch_size=B,
+                            seq_len=S)
+    key = jax.random.PRNGKey(5)
+    inner_losses = []
+    for _ in range(R):
+        key, sub = jax.random.split(key)
+        state_l, m = rnd(state_l, sub)
+        inner_losses.append(float(m["inner_loss"]))
+
+    state_s = diloco.init_state(params, dcfg)
+    run = diloco.make_run(loss_fn, sampler.sample_all_shards, dcfg,
+                          tcfg, rounds_per_call=R, total_steps=R * H,
+                          batch_size=B, seq_len=S, donate=False)
+    state_s, ms = run(state_s, jax.random.PRNGKey(5))
+
+    for a, b in zip(jax.tree.leaves(state_l), jax.tree.leaves(state_s)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_allclose(np.asarray(ms["inner_loss"]),
+                               np.asarray(inner_losses), rtol=1e-6)
+
+
+def test_scanned_run_with_masks_matches_legacy(setup):
+    """Stacked (R, k) drop/active masks reproduce per-round masks."""
+    arch, loss_fn, sampler, params = setup
+    R = 3
+    dcfg, tcfg = _cfgs(rounds=R)
+    rng = np.random.default_rng(0)
+    drops = (rng.random((R, K)) >= 0.5).astype(np.float32)
+    drops[:, 0] = 1.0                       # keep the average non-empty
+    acts = np.ones((R, K), np.float32)
+    weights = jnp.asarray([0.75, 0.25])
+
+    state_l = diloco.init_state(params, dcfg)
+    rnd = diloco.make_round(loss_fn, sampler.sample_all_shards, dcfg,
+                            tcfg, total_steps=R * H, batch_size=B,
+                            seq_len=S)
+    key = jax.random.PRNGKey(7)
+    for t in range(R):
+        key, sub = jax.random.split(key)
+        state_l, _ = rnd(state_l, sub, jnp.asarray(drops[t]),
+                         jnp.asarray(acts[t]), weights)
+
+    state_s = diloco.init_state(params, dcfg)
+    run = diloco.make_run(loss_fn, sampler.sample_all_shards, dcfg,
+                          tcfg, rounds_per_call=R, total_steps=R * H,
+                          batch_size=B, seq_len=S, donate=False)
+    state_s, _ = run(state_s, jax.random.PRNGKey(7), jnp.asarray(drops),
+                     jnp.asarray(acts), weights)
+
+    for a, b in zip(jax.tree.leaves(state_l), jax.tree.leaves(state_s)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_scanned_run_in_graph_eval_and_donation(setup):
+    """Periodic in-graph eval: NaN on skipped rounds, a real loss on
+    eval rounds; the donated carry survives repeated calls and does not
+    delete the caller's params."""
+    arch, loss_fn, sampler, params = setup
+    R = 4
+    dcfg, tcfg = _cfgs(rounds=2 * R)
+    val = sampler.sample_validation(jax.random.PRNGKey(9), 4, S)
+    ev = diloco.make_eval(loss_fn)
+    run = diloco.make_run(loss_fn, sampler.sample_all_shards, dcfg,
+                          tcfg, rounds_per_call=R, total_steps=2 * R * H,
+                          batch_size=B, seq_len=S, eval_tokens=val,
+                          eval_every=2, donate=True)
+    state = diloco.init_state(params, dcfg)
+    state, ms = run(state, jax.random.PRNGKey(1))
+    state, ms = run(state, jax.random.PRNGKey(2))   # donated second call
+    vl = np.asarray(ms["val_loss"])
+    assert np.isnan(vl[0]) and np.isnan(vl[2])
+    assert np.isfinite(vl[1]) and np.isfinite(vl[3])
+    # in-graph eval agrees with the host-side eval of the final state
+    np.testing.assert_allclose(
+        vl[-1], float(ev(state.global_params, val)), rtol=1e-6)
+    # the caller's params tree is still alive after donation
+    assert np.isfinite(float(jax.tree.leaves(params)[0].sum()))
+
+
+@pytest.mark.parametrize("shape", [(64,), (33, 7), (4, 32, 16)])
+def test_fused_adamw_interpret_matches_legacy_update(shape):
+    """adamw.update(mode='interpret') — the Pallas kernel — matches the
+    legacy jnp tree map."""
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 2)
+    params = {"w": jax.random.normal(ks[0], shape)}
+    grads = {"w": jax.random.normal(ks[1], shape)}
+    st = adamw.init(params)
+    st = adamw.AdamWState(st.m, st.v, jnp.asarray(3, jnp.int32))
+    ref_p, ref_st = adamw.update(grads, st, params, lr=1e-2, mode="ref")
+    ker_p, ker_st = adamw.update(grads, st, params, lr=1e-2,
+                                 mode="interpret")
+    np.testing.assert_allclose(ref_p["w"], ker_p["w"], rtol=2e-6,
+                               atol=2e-6)
+    np.testing.assert_allclose(ref_st.m["w"], ker_st.m["w"], rtol=2e-6,
+                               atol=2e-6)
+    np.testing.assert_allclose(ref_st.v["w"], ker_st.v["w"], rtol=2e-6,
+                               atol=2e-6)
+    assert int(ker_st.count) == int(ref_st.count) == 4
+
+
+def test_fused_nesterov_interpret_matches_legacy_update():
+    """outer_opt.update(kernel_mode='interpret') matches the legacy
+    Nesterov tree map."""
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 3)
+    params = {"w": jax.random.normal(ks[0], (17, 9))}
+    delta = {"w": jax.random.normal(ks[1], (17, 9))}
+    st = outer_opt.init(params)
+    st = outer_opt.OuterState(
+        {"w": jax.random.normal(ks[2], (17, 9))}, st.buf2, st.count)
+    ref_p, ref_st = outer_opt.update(delta, st, params, kind="nesterov",
+                                     lr=0.7, kernel_mode="ref")
+    ker_p, ker_st = outer_opt.update(delta, st, params, kind="nesterov",
+                                     lr=0.7, kernel_mode="interpret")
+    np.testing.assert_allclose(ref_p["w"], ker_p["w"], rtol=2e-6,
+                               atol=2e-6)
+    np.testing.assert_allclose(ref_st.buf["w"], ker_st.buf["w"],
+                               rtol=2e-6, atol=2e-6)
+
+
+def test_full_round_interpret_matches_ref(setup):
+    """kernel_mode='interpret' (fused AdamW + Nesterov through the
+    Pallas kernels) matches kernel_mode='ref' through a full round."""
+    arch, loss_fn, sampler, params = setup
+    states = {}
+    for mode in ("ref", "interpret"):
+        dcfg, tcfg = _cfgs(kernel_mode=mode, rounds=1)
+        st = diloco.init_state(params, dcfg)
+        rnd = diloco.make_round(loss_fn, sampler.sample_all_shards,
+                                dcfg, tcfg, total_steps=H, batch_size=B,
+                                seq_len=S)
+        st, _ = rnd(st, jax.random.PRNGKey(3))
+        states[mode] = st
+    for a, b in zip(jax.tree.leaves(states["ref"]),
+                    jax.tree.leaves(states["interpret"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-6)
+
+
+def test_kernel_mode_ref_is_default_and_unchanged(setup):
+    """The default configs run the legacy tree-map path — guard against
+    a silent default flip changing numerics for every existing user."""
+    assert DiLoCoConfig().kernel_mode == "ref"
+    assert TrainConfig().kernel_mode == "ref"
