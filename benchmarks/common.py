@@ -164,6 +164,9 @@ def run_baseline(arch, loss_fn, sampler, params, *, steps, batch=8,
                  seq=64, inner_lr=3e-3, warmup=20, seed=0, step0=0,
                  eval_every=10, eval_batch=64, total=None):
     """Single-worker AdamW baseline on the mixture stream."""
+    # the donated step updates (params, opt) in place — work on a copy
+    # so callers can reuse their params tree across runs
+    params = jax.tree.map(jnp.copy, params)
     tcfg = TrainConfig(inner_lr=inner_lr, warmup_steps=warmup,
                        total_steps=total or (step0 + steps),
                        batch_size=batch, seq_len=seq)

@@ -31,6 +31,7 @@ MODULES = [
     "beyond_async",           # beyond-paper: async DiLoCo (paper §5)
     "roofline",               # §Roofline aggregation over dry-run JSON
     "wallclock",              # perf: scanned driver vs legacy loop
+    "streaming",              # comm: fragment-scheduled outer sync
 ]
 
 

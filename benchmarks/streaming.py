@@ -1,0 +1,247 @@
+"""Streaming outer-sync benchmark: fragment scheduling, overlap, and
+quantized transport vs the synchronous outer step.
+
+Runs the same DiLoCo workload (equal rounds, equal inner steps) under
+the classic synchronous driver and under ``core/streaming.py`` with
+several (P fragments, α, τ, transport dtype) settings, then derives the
+communication profile every configuration would put on a real
+interconnect:
+
+  peak_bytes_per_sync     bytes one replica sends at its largest single
+                          sync event — the *peak-bandwidth* bill.
+                          Synchronous DiLoCo syncs the full model in
+                          f32; streaming syncs one fragment at the
+                          transport precision, so this drops ≥ P×
+                          (× another 2–7.5× from quantization).
+  round_bytes             total bytes per replica per round (all P
+                          fragment syncs vs one full-model sync).
+  bandwidth_curves        estimated wall-clock per run over a sweep of
+                          interconnect bandwidths: measured compute time
+                          plus per-sync stalls, where a streaming sync
+                          may hide up to τ inner steps of its transfer
+                          behind compute (the overlap simulator's
+                          semantics) while the synchronous barrier hides
+                          nothing.
+  claims.bit_identical_P1_vs_sync   the regression gate: P=1, α=1, τ=0,
+                          f32 transport must be bit-identical to the
+                          synchronous scanned driver.
+  claims.peak_bytes_reduced_geP     every quantized streaming config
+                          must cut peak bytes-per-sync by at least its
+                          own P×.
+
+Results go to ``BENCH_streaming.json`` at the repo root (see
+benchmarks/README.md for the field-by-field reading guide).
+
+Run:  PYTHONPATH=src python -m benchmarks.streaming [--rounds 6 ...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common as C
+from repro.configs.base import DiLoCoConfig, TrainConfig
+from repro.core import diloco, fragments, streaming
+from repro.kernels.ops import TRANSPORT_BYTES_PER_ELEM
+
+ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+OUT_PATH = os.path.join(ROOT, "BENCH_streaming.json")
+
+BANDWIDTHS = [1e6, 1e7, 1e8, 1e9, 1e10, 1e11]   # bytes/s
+
+
+def stream_configs(k: int, H: int):
+    """(name, DiLoCoConfig) list. The first entry is the synchronous
+    baseline; stream_P1_f32 is the bit-identity gate."""
+    tau = min(1, H - 1)
+    return [
+        ("sync", DiLoCoConfig(k=k, H=H)),
+        ("stream_P1_f32",
+         DiLoCoConfig(k=k, H=H, streaming_fragments=1)),
+        ("stream_P2_bf16",
+         DiLoCoConfig(k=k, H=H, streaming_fragments=2, stream_alpha=0.5,
+                      stream_tau=tau, outer_grad_dtype="bfloat16")),
+        ("stream_P4_int4",
+         DiLoCoConfig(k=k, H=H, streaming_fragments=4, stream_alpha=0.5,
+                      stream_tau=tau, outer_grad_dtype="int4")),
+    ]
+
+
+def comm_profile(params, dcfg: DiLoCoConfig) -> dict:
+    """Static wire profile of one replica's outer sync per round."""
+    total = int(sum(l.size for l in jax.tree.leaves(params)))
+    if not dcfg.streaming_fragments:
+        return {"peak_bytes_per_sync": 4.0 * total,
+                "round_bytes": 4.0 * total,
+                "syncs_per_round": 1,
+                "fragment_elems": [total],
+                "transport": "float32"}
+    part = fragments.partition_params(params, dcfg.streaming_fragments,
+                                      overrides=dcfg.stream_overrides)
+    bpe = TRANSPORT_BYTES_PER_ELEM[dcfg.outer_grad_dtype]
+    return {"peak_bytes_per_sync": bpe * part.peak_fragment_elems(),
+            "round_bytes": bpe * sum(part.sizes),
+            "syncs_per_round": part.n,
+            "fragment_elems": list(part.sizes),
+            "transport": dcfg.outer_grad_dtype}
+
+
+def bench_one(loss_fn, sampler, params, name, dcfg, tcfg, *, rounds,
+              batch, seq, val, seed, repeats):
+    """Time one driver config (min-of-repeats after warmup)."""
+    run = diloco.make_run(loss_fn, sampler.sample_all_shards, dcfg,
+                          tcfg, rounds_per_call=rounds,
+                          total_steps=rounds * dcfg.H, batch_size=batch,
+                          seq_len=seq, eval_tokens=val, eval_every=1,
+                          donate=False)
+
+    def init():
+        if dcfg.streaming_fragments:
+            return streaming.init_state(params, dcfg)
+        return diloco.init_state(params, dcfg)
+
+    def one():
+        state = init()
+        jax.block_until_ready(state)
+        t0 = time.perf_counter()
+        state, ms = run(state, jax.random.PRNGKey(seed + 2))
+        jax.block_until_ready((state, ms))
+        return time.perf_counter() - t0, state, ms
+
+    one()                                            # compile warmup
+    results = [one() for _ in range(repeats)]
+    t = min(r[0] for r in results)
+    _, state, ms = results[0]
+    return {"name": name, "total_s": t,
+            "round_latency_ms": 1e3 * t / rounds,
+            "final_val_loss": float(np.asarray(ms["val_loss"])[-1]),
+            "state": state}
+
+
+def bandwidth_curve(profile, *, rounds, compute_s, H, tau) -> dict:
+    """Estimated total wall-clock at each simulated bandwidth: measured
+    compute plus per-sync transfer stalls. A streaming sync has τ inner
+    steps of compute to hide its transfer behind; the synchronous
+    barrier overlaps nothing."""
+    t_step = compute_s / (rounds * H)
+    peak = profile["peak_bytes_per_sync"]
+    n_syncs = profile["syncs_per_round"]
+    per_frag = [e * TRANSPORT_BYTES_PER_ELEM[profile["transport"]]
+                for e in profile["fragment_elems"]]
+    est = []
+    for bw in BANDWIDTHS:
+        stall = sum(max(0.0, b / bw - tau * t_step) for b in per_frag)
+        est.append(compute_s + rounds * stall)
+    return {"bandwidth_bytes_per_s": BANDWIDTHS,
+            "est_total_s": est,
+            "min_bw_for_full_overlap":
+                (max(per_frag) / (tau * t_step) if tau > 0 else None),
+            "peak_bytes_per_sync": peak,
+            "syncs_per_round": n_syncs}
+
+
+def run(scale: int = 1, *, k=4, H=6, rounds=6, batch=2, seq=32,
+        eval_batch=16, repeats=3, seed=0, out=OUT_PATH):
+    rounds = rounds * scale
+    arch, loss_fn, sampler = C.make_setup(k=k, seed=seed)
+    total = rounds * H
+    params, _ = C.pretrain(arch, loss_fn, sampler, 0, batch=batch,
+                           seq=seq, lr=3e-3, warmup=10, total=total,
+                           seed=seed)
+    val = sampler.sample_validation(jax.random.PRNGKey(10_000),
+                                    eval_batch, seq)
+    tcfg = TrainConfig(inner_lr=3e-3, warmup_steps=10, total_steps=total,
+                       batch_size=batch, seq_len=seq)
+    print(f"k={k} H={H} rounds={rounds} batch={batch} seq={seq} "
+          f"backend={jax.default_backend()}")
+
+    runs, states = {}, {}
+    for name, dcfg in stream_configs(k, H):
+        r = bench_one(loss_fn, sampler, params, name, dcfg, tcfg,
+                      rounds=rounds, batch=batch, seq=seq, val=val,
+                      seed=seed, repeats=repeats)
+        states[name] = r.pop("state")
+        r["comm"] = comm_profile(params, dcfg)
+        r["curve"] = bandwidth_curve(
+            r["comm"], rounds=rounds, compute_s=r["total_s"], H=H,
+            tau=dcfg.stream_tau if dcfg.streaming_fragments else 0)
+        r["config"] = {"P": dcfg.streaming_fragments,
+                       "alpha": dcfg.stream_alpha,
+                       "tau": dcfg.stream_tau,
+                       "transport": dcfg.outer_grad_dtype}
+        runs[name] = r
+        print(f"{name:16s} {r['round_latency_ms']:8.2f} ms/round  "
+              f"val={r['final_val_loss']:.4f}  "
+              f"peak_sync={r['comm']['peak_bytes_per_sync']:.0f} B")
+
+    sync_state = states["sync"]
+    p1_state = states["stream_P1_f32"].base
+    bit_identical = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(sync_state),
+                        jax.tree.leaves(p1_state)))
+
+    sync_peak = runs["sync"]["comm"]["peak_bytes_per_sync"]
+    reductions = {}
+    ge_p = True
+    for name, r in runs.items():
+        P = r["config"]["P"]
+        if not P:
+            continue
+        red = sync_peak / r["comm"]["peak_bytes_per_sync"]
+        reductions[name] = red
+        if r["config"]["transport"] != "float32" and red < P:
+            ge_p = False
+
+    report = {
+        "config": {"k": k, "H": H, "rounds": rounds, "batch": batch,
+                   "seq": seq, "backend": jax.default_backend(),
+                   "model_params": int(sum(
+                       l.size for l in jax.tree.leaves(params)))},
+        "runs": runs,
+        "sync_peak_bytes_per_sync": sync_peak,
+        "peak_bytes_reduction": reductions,
+        "claims": {
+            "bit_identical_P1_vs_sync": bool(bit_identical),
+            "peak_bytes_reduced_geP": bool(ge_p),
+            "all_losses_finite": bool(all(
+                np.isfinite(r["final_val_loss"])
+                for r in runs.values())),
+        },
+    }
+    print(f"bit-identical P=1: {bit_identical}   "
+          f"peak-bytes reductions: "
+          + "  ".join(f"{n}={v:.2f}x" for n, v in reductions.items()))
+
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1)
+    print("wrote", out)
+    C.save("streaming", report)
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--H", type=int, default=6)
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--eval-batch", type=int, default=16)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=OUT_PATH)
+    a = ap.parse_args(argv)
+    return run(1, k=a.k, H=a.H, rounds=a.rounds, batch=a.batch,
+               seq=a.seq, eval_batch=a.eval_batch, repeats=a.repeats,
+               seed=a.seed, out=a.out)
+
+
+if __name__ == "__main__":
+    main()

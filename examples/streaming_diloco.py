@@ -1,0 +1,97 @@
+"""Streaming DiLoCo example: fragment-scheduled outer sync with
+overlap and quantized transport.
+
+Trains the same reduced model twice — classic synchronous DiLoCo
+(every-H-steps full-model outer step) and streaming DiLoCo
+(P fragments synced on a staggered schedule, applies delayed τ inner
+steps to model an in-flight collective, outer gradients sent as int4) —
+and prints the loss trajectories next to the wire-bytes profile each
+run would put on a real interconnect.
+
+  PYTHONPATH=src python examples/streaming_diloco.py
+
+The same knobs are available on the training CLI:
+
+  PYTHONPATH=src python -m repro.launch.train \
+      --arch diloco_150m --smoke --k 4 --H 20 --rounds 10 \
+      --stream-fragments 4 --stream-alpha 0.5 --stream-tau 2 \
+      --outer-grad-dtype int4
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DiLoCoConfig, TrainConfig
+from repro.core import diloco, fragments, streaming
+from repro.data.sharding import make_regime
+from repro.kernels.ops import TRANSPORT_BYTES_PER_ELEM
+from repro.models.registry import get_smoke_arch
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--k", type=int, default=4)
+ap.add_argument("--H", type=int, default=10)
+ap.add_argument("--rounds", type=int, default=8)
+ap.add_argument("--fragments", type=int, default=4)
+ap.add_argument("--alpha", type=float, default=0.5)
+ap.add_argument("--tau", type=int, default=2)
+ap.add_argument("--transport", default="int4",
+                choices=["float32", "bfloat16", "int4"])
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=64)
+args = ap.parse_args()
+
+arch = get_smoke_arch("diloco_150m")
+loss_fn = lambda p, b: arch.loss(p, b)
+sampler = make_regime("non_iid", k=args.k,
+                      vocab_size=arch.cfg.vocab_size)
+total = args.rounds * args.H
+tcfg = TrainConfig(inner_lr=3e-3, warmup_steps=20, total_steps=total,
+                   batch_size=args.batch, seq_len=args.seq)
+params, _ = arch.init(jax.random.PRNGKey(0), arch.cfg)
+n_params = sum(l.size for l in jax.tree.leaves(params))
+val = sampler.sample_validation(jax.random.PRNGKey(42), 64, args.seq)
+
+configs = {
+    "sync": DiLoCoConfig(k=args.k, H=args.H),
+    "stream": DiLoCoConfig(
+        k=args.k, H=args.H, streaming_fragments=args.fragments,
+        stream_alpha=args.alpha, stream_tau=args.tau,
+        outer_grad_dtype=args.transport),
+}
+
+histories = {}
+for name, dcfg in configs.items():
+    run = diloco.make_run(loss_fn, sampler.sample_all_shards, dcfg,
+                          tcfg, rounds_per_call=args.rounds,
+                          total_steps=total, batch_size=args.batch,
+                          seq_len=args.seq, eval_tokens=val,
+                          eval_every=1)
+    state = (streaming.init_state(params, dcfg)
+             if dcfg.streaming_fragments
+             else diloco.init_state(params, dcfg))
+    state, ms = run(state, jax.random.PRNGKey(7))
+    histories[name] = np.asarray(ms["val_loss"])
+
+print(f"\nmodel: {arch.cfg.name} ({n_params / 1e6:.2f}M params), "
+      f"k={args.k} H={args.H} rounds={args.rounds}")
+print(f"streaming: P={args.fragments} alpha={args.alpha} "
+      f"tau={args.tau} transport={args.transport}\n")
+print(f"{'round':>5s} {'sync val':>10s} {'stream val':>11s}")
+for t in range(args.rounds):
+    print(f"{t + 1:5d} {histories['sync'][t]:10.4f} "
+          f"{histories['stream'][t]:11.4f}")
+
+part = fragments.partition_params(params, args.fragments)
+bpe = TRANSPORT_BYTES_PER_ELEM[args.transport]
+sync_peak = 4.0 * n_params
+stream_peak = bpe * part.peak_fragment_elems()
+print(f"\nwire profile (per replica):")
+print(f"  sync   : 1 × {sync_peak / 1e6:8.2f} MB per round "
+      f"(full model, f32, blocking barrier)")
+print(f"  stream : {args.fragments} × ≤{stream_peak / 1e6:8.2f} MB per "
+      f"round ({args.transport}, each with {args.tau} inner steps of "
+      f"overlap)")
+print(f"  peak bytes-per-sync reduction: "
+      f"{sync_peak / stream_peak:.1f}x")

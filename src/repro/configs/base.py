@@ -131,6 +131,20 @@ class DiLoCoConfig:
     #   pallas    — force the Pallas kernels (TPU);
     #   interpret — Pallas kernels in interpret mode (CPU testing).
     kernel_mode: str = "ref"
+    # --- streaming outer sync (Streaming DiLoCo; see core/streaming.py) ---
+    # 0 disables streaming (classic full-model outer step every H steps).
+    # P >= 1 splits the parameter tree into P fragments, each synced on
+    # its own staggered schedule within the round. P=1 with the defaults
+    # below reproduces the synchronous path bit-exactly.
+    streaming_fragments: int = 0
+    stream_alpha: float = 1.0    # merge θ_i ← α·θ_global + (1−α)·θ_i
+    stream_tau: int = 0          # inner steps between a fragment's
+    #                              snapshot and its application (the
+    #                              simulated in-flight collective)
+    outer_grad_dtype: str = "float32"  # transport precision of outer
+    #                              gradients: float32 | bfloat16 | int4
+    stream_overrides: tuple = ()  # ((path-regex, fragment_idx), ...)
+    #                              forcing whole leaves into a fragment
 
 
 @dataclass(frozen=True)

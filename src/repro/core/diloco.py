@@ -241,7 +241,18 @@ def _make_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
                      compute_cosine=False, batch_size=None, seq_len=None):
     """Un-jitted round: the computation shared by ``make_round`` (one
     jit dispatch per round) and ``make_run`` (R rounds scanned inside
-    one jit)."""
+    one jit).
+
+    When ``dcfg.streaming_fragments > 0`` the round is the *streaming*
+    round (fragment-scheduled outer sync, see ``core/streaming.py``);
+    the state is then a ``streaming.StreamState`` (build with
+    ``streaming.init_state``)."""
+    if getattr(dcfg, "streaming_fragments", 0):
+        from . import streaming
+        return streaming.make_stream_round_body(
+            loss_fn, sample_fn, dcfg, tcfg, total_steps=total_steps,
+            compute_cosine=compute_cosine, batch_size=batch_size,
+            seq_len=seq_len)
     inner_step_tok = make_inner_step(
         lambda p, b: loss_fn(p, b), tcfg, total_steps)
     B = batch_size or tcfg.batch_size
@@ -327,16 +338,21 @@ def make_run(loss_fn, sample_fn, dcfg: DiLoCoConfig, tcfg: TrainConfig,
     bit-identical to R iterations of ``make_round``.
 
     ``eval_tokens`` (B, S) enables in-graph periodic eval: rounds where
-    ``(t+1) % eval_every == 0`` (and the last round) report
-    ``val_loss``; skipped rounds report NaN and pay no eval FLOPs
-    (``lax.cond``). The eval index is call-local: chunked callers
-    (several ``run`` calls covering one logical training run) should
-    keep ``eval_every=1`` or chunk on a multiple of ``eval_every``,
-    else the cadence resets at every chunk boundary.
+    the *global* round index ``(round_offset + t + 1) % eval_every == 0``
+    (and the last round of the call) report ``val_loss``; skipped
+    rounds report NaN and pay no eval FLOPs (``lax.cond``). Chunked
+    callers (several ``run`` calls covering one logical training run)
+    pass ``round_offset`` = rounds already completed so the cadence
+    stays aligned across chunk boundaries; the offset is a traced
+    scalar, so every chunk reuses one compiled function.
 
     ``donate=True`` donates the DiLoCoState carry — the k×(params +
     AdamW m/v) replica buffers are updated in place instead of
     double-buffered, halving steady-state optimizer memory.
+
+    When ``dcfg.streaming_fragments > 0`` the scanned rounds are
+    streaming rounds (``core/streaming.py``): pass/expect a
+    ``streaming.StreamState`` instead of a ``DiLoCoState``.
     """
     round_body = _make_round_body(
         loss_fn, sample_fn, dcfg, tcfg, total_steps=total_steps,
@@ -346,17 +362,19 @@ def make_run(loss_fn, sample_fn, dcfg: DiLoCoConfig, tcfg: TrainConfig,
     ev_toks = None if eval_tokens is None else jnp.asarray(eval_tokens)
 
     def run_fn(state: DiLoCoState, key, drop_masks=None,
-               active_masks=None, weights=None):
+               active_masks=None, weights=None, round_offset=0):
         ones = jnp.ones((R, dcfg.k), jnp.float32)
         drop_masks = ones if drop_masks is None else drop_masks
         active_masks = ones if active_masks is None else active_masks
+        round_offset = jnp.asarray(round_offset, jnp.int32)
         next_key, subs = split_chain(key, R)
 
         def body(st, xs):
             sub, drop, act, t = xs
             st, m = round_body(st, sub, drop, act, weights)
             if ev_toks is not None:
-                do_eval = ((t + 1) % eval_every == 0) | (t == R - 1)
+                g = round_offset + t + 1          # global 1-based round
+                do_eval = (g % eval_every == 0) | (t == R - 1)
                 m["val_loss"] = jax.lax.cond(
                     do_eval,
                     lambda p: loss_fn(p, {"tokens": ev_toks})[0]
@@ -389,13 +407,20 @@ def make_eval(loss_fn):
 # ---------------------------------------------------------------------------
 
 def make_single_worker_step(loss_fn, tcfg: TrainConfig,
-                            total_steps: int | None = None):
+                            total_steps: int | None = None, *,
+                            donate: bool = True):
     """Plain (non-DiLoCo) training step — used for the paper's pretraining
-    stage and the single-worker baselines of Table 2 / Fig 2."""
+    stage and the single-worker baselines of Table 2 / Fig 2.
+
+    ``donate=True`` donates (params, opt_state), so the per-step update
+    runs in place instead of double-buffering params + AdamW m/v —
+    callers must rebind both to the returned values (every in-repo loop
+    already does)."""
     inner = make_inner_step(lambda p, b: loss_fn(p, b), tcfg, total_steps)
 
-    @jax.jit
     def step(params, opt_state, batch, idx):
         return inner(params, opt_state, batch, idx)
 
-    return step
+    if donate:
+        return jax.jit(step, donate_argnums=(0, 1))
+    return jax.jit(step)

@@ -1,0 +1,219 @@
+"""Fragment partitioning and sync scheduling for streaming DiLoCo.
+
+Streaming DiLoCo (Douillard et al., 2025) never syncs the whole model
+at once: the parameter tree is split into P *contiguous fragments* (by
+transformer-block depth) and each fragment runs its own outer step on a
+schedule staggered across the H inner steps of a round. This module
+provides the two static ingredients of that subsystem:
+
+  * ``partition_params`` — split a parameter tree into P contiguous
+    fragments. Block-stacked leaves (the scanned ``stack*`` transformer
+    blocks, leading axis = layers) are split along their layer axis;
+    non-stacked leaves are ordered embedding-first / head-last, and the
+    P cut points are chosen to balance element counts. A pattern-based
+    ``overrides`` list pins whole leaves to a chosen fragment.
+  * ``schedule`` — the per-round event list: fragment p *sends* (snap-
+    shots its outer gradient and starts the simulated all-reduce) at
+    inner offset p·H/P (offset 0 maps to the end-of-round boundary, so
+    P=1 degenerates to the classic sync-after-H-steps algorithm), and
+    *applies* the reduced result τ inner steps later — possibly in the
+    next round, modeling a collective that runs concurrently with
+    compute.
+
+Fragments are represented as per-fragment *mask trees*: one broadcast-
+ready array per leaf ((L, 1, ..., 1) for an L-layer stacked leaf, a
+scalar 0/1 otherwise). Masks are tiny (O(layers) numbers, not O(params))
+and make every fragment operation a ``jnp.where`` select.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, NamedTuple
+
+import jax
+import numpy as np
+
+STACK_PATTERN = r"stack"
+EMBED_PATTERN = r"embed"
+
+
+class Partition(NamedTuple):
+    """P disjoint fragments of a parameter tree.
+
+    masks: tuple of P pytrees matching the params structure; each leaf
+    is a float32 array broadcastable against the param leaf (and against
+    a replica-stacked (k, ...) version of it). Summed over fragments the
+    masks are exactly one everywhere.
+    sizes: per-fragment element counts.
+    """
+    n: int
+    masks: tuple
+    sizes: tuple
+
+    def peak_fragment_elems(self) -> int:
+        return max(self.sizes) if self.sizes else 0
+
+
+def _is_stacked(path: str, leaf, stack_pattern: str) -> bool:
+    return (re.search(stack_pattern, path) is not None
+            and leaf.ndim >= 1 and leaf.shape[0] > 1)
+
+
+def partition_params(params, n_fragments: int, *, overrides=(),
+                     stack_pattern: str = STACK_PATTERN) -> Partition:
+    """Split ``params`` into ``n_fragments`` contiguous fragments.
+
+    Every (leaf, layer) unit gets a depth coordinate in [0, 1]:
+    embedding-like leaves 0, layer j of an L-layer stacked leaf
+    (j+0.5)/L, remaining non-stacked leaves (final norm, head) 1. Units
+    are sorted by depth and cut into P contiguous groups balanced by
+    element count, so each fragment is a contiguous band of transformer
+    blocks. ``overrides`` — ((path-regex, fragment_idx), ...), first
+    match wins — pins whole leaves regardless of depth.
+    """
+    P = int(n_fragments)
+    if P < 1:
+        raise ValueError(f"n_fragments must be >= 1, got {P}")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    paths = [jax.tree_util.keystr(kp) for kp, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+
+    def forced_fragment(path: str):
+        for pat, frag in overrides:
+            if re.search(pat, path):
+                frag = int(frag)
+                if not (0 <= frag < P):
+                    raise ValueError(
+                        f"override {pat!r} -> fragment {frag} out of "
+                        f"range for P={P}")
+                return frag
+        return None
+
+    # units: (coord, size, leaf_idx, layer_idx | None, forced | None)
+    units = []
+    for i, (path, leaf) in enumerate(zip(paths, leaves)):
+        forced = forced_fragment(path)
+        if _is_stacked(path, leaf, stack_pattern):
+            L = leaf.shape[0]
+            per = int(leaf.size) // L
+            for j in range(L):
+                units.append(((j + 0.5) / L, per, i, j, forced))
+        else:
+            coord = 0.0 if re.search(EMBED_PATTERN, path) else 1.0
+            units.append((coord, int(leaf.size), i, None, forced))
+    units.sort(key=lambda u: u[0])          # stable: ties keep order
+
+    free_total = sum(u[1] for u in units if u[4] is None) or 1
+    assign = {}
+    cum = 0
+    for coord, size, i, j, forced in units:
+        if forced is not None:
+            assign[(i, j)] = forced
+        else:
+            assign[(i, j)] = min(P - 1,
+                                 int(P * (cum + 0.5 * size) / free_total))
+            cum += size
+
+    mask_leaves: list[list] = [[] for _ in range(P)]
+    sizes = [0] * P
+    for i, (path, leaf) in enumerate(zip(paths, leaves)):
+        if _is_stacked(path, leaf, stack_pattern):
+            L = leaf.shape[0]
+            per = int(leaf.size) // L
+            vec = np.zeros((P, L), np.float32)
+            for j in range(L):
+                f = assign[(i, j)]
+                vec[f, j] = 1.0
+                sizes[f] += per
+            shape = (L,) + (1,) * (leaf.ndim - 1)
+            # masks stay host-side numpy: they broadcast into jnp ops
+            # as constants AND remain statically inspectable (the
+            # streaming round skips leaves a fragment doesn't touch)
+            for p in range(P):
+                mask_leaves[p].append(vec[p].reshape(shape))
+        else:
+            f = assign[(i, None)]
+            sizes[f] += int(leaf.size)
+            for p in range(P):
+                mask_leaves[p].append(
+                    np.float32(1.0 if p == f else 0.0))
+    masks = tuple(jax.tree_util.tree_unflatten(treedef, mask_leaves[p])
+                  for p in range(P))
+    return Partition(P, masks, tuple(sizes))
+
+
+# ---------------------------------------------------------------------------
+# per-round sync schedule
+# ---------------------------------------------------------------------------
+
+class StreamEvent(NamedTuple):
+    kind: str          # "send" | "apply"
+    fragment: int
+    wrapped: bool      # apply deferred from the previous round's send
+
+
+class StreamSchedule(NamedTuple):
+    """Static per-round event plan. ``phases`` is a tuple of
+    (inner_steps, events) pairs covering the round: run that many inner
+    steps, then fire the events in order. Step counts sum to H."""
+    n_fragments: int
+    H: int
+    tau: int
+    send_offsets: tuple    # per fragment, in (0, H]
+    apply_offsets: tuple   # per fragment, send + tau (may exceed H:
+    #                        the apply lands in the NEXT round)
+    phases: tuple
+
+
+def schedule(n_fragments: int, H: int, tau: int = 0) -> StreamSchedule:
+    """Build the staggered fragment schedule for one round.
+
+    Fragment p sends at inner offset p·H/P ("after that many inner
+    steps"); offset 0 maps to H — the end-of-round boundary — so P=1
+    reduces to the classic DiLoCo outer step and the steady-state cycle
+    is unchanged. The apply fires τ steps after the send; τ ≥ H would
+    mean a collective still in flight when the fragment's next send is
+    due, so τ is restricted to [0, H). At equal offsets, applies of
+    earlier sends complete before new sends snapshot.
+    """
+    P, H, tau = int(n_fragments), int(H), int(tau)
+    if P < 1 or H < 1:
+        raise ValueError(f"need P >= 1 and H >= 1, got P={P} H={H}")
+    if P > H:
+        # more fragments than inner offsets would force >1 fragment
+        # onto the same sync instant, silently breaking the peak-
+        # bytes-per-sync accounting
+        raise ValueError(
+            f"streaming needs P <= H to stagger every fragment on its "
+            f"own inner offset, got P={P} H={H}")
+    if not 0 <= tau < H:
+        raise ValueError(f"stream_tau must be in [0, H): tau={tau} H={H}")
+    send = tuple((p * H) // P or H for p in range(P))
+    apply_abs = tuple(s + tau for s in send)
+
+    events: dict[int, tuple[list, list]] = {}
+
+    def at(off):
+        return events.setdefault(off, ([], []))
+
+    for p in range(P):
+        at(send[p])[1].append(p)
+        if tau > 0:
+            a = apply_abs[p]
+            at(a - H if a > H else a)[0].append(p)
+
+    phases = []
+    prev = 0
+    for off in sorted(events):
+        applies, sends = events[off]
+        acts = [StreamEvent("apply", p, apply_abs[p] > H)
+                for p in sorted(applies)]
+        for p in sorted(sends):
+            acts.append(StreamEvent("send", p, False))
+            if tau == 0:
+                acts.append(StreamEvent("apply", p, False))
+        phases.append((off - prev, tuple(acts)))
+        prev = off
+    if prev < H:                       # unreachable (fragment 0 sends
+        phases.append((H - prev, ()))  # at H) — kept defensive
+    return StreamSchedule(P, H, tau, send, apply_abs, tuple(phases))

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from . import flash_attention as _flash
 from . import fused_adamw as _adamw
 from . import outer_nesterov as _nesterov
+from . import quantize as _quant
 from . import sign_prune as _prune
 from . import ref
 
@@ -121,6 +122,56 @@ def sign_prune_tree(tree, frac: float, *, mode: str = "auto"):
         return sign_prune(flat, frac, mode=mode).reshape(x.shape)
 
     return jax.tree.map(one, tree)
+
+
+# ---------------------------------------------------------------------------
+# low-precision outer-gradient transport — tensor + tree-level
+# ---------------------------------------------------------------------------
+
+# Wire cost of one transported element: int4 carries 0.5 B of codes
+# plus one f32 scale per 128-element block.
+TRANSPORT_BYTES_PER_ELEM = {
+    "float32": 4.0,
+    "bfloat16": 2.0,
+    "int4": 0.5 + 4.0 / 128,
+}
+
+
+def quant_roundtrip(x, dtype: str, *, mode: str = "auto"):
+    """Simulated low-precision transport: quantize→dequantize round trip
+    at ``dtype`` ("float32" = identity). int4 uses one f32 scale per
+    128-element block of the flattened tensor (the same (blocks, 128)
+    layout as the fused optimizer kernels)."""
+    if dtype == "float32":
+        return x
+    if dtype not in TRANSPORT_BYTES_PER_ELEM:
+        raise ValueError(f"unknown transport dtype {dtype!r}")
+    use_kernel, interpret = _resolve(mode)
+    if use_kernel:
+        return _quant.fake_quant(x, dtype, interpret=interpret)
+    if dtype == "bfloat16":
+        return ref.fake_quant(x, dtype)
+    # int4 oracle on the kernel's block layout, so ref == kernel exactly
+    shape, out_dtype = x.shape, x.dtype
+    n = x.size
+    rows = -(-n // 128)
+    flat = x.reshape(-1).astype(jnp.float32)
+    if rows * 128 != n:
+        flat = jnp.pad(flat, (0, rows * 128 - n))
+    out = ref.fake_quant(flat.reshape(rows, 128), dtype)
+    return out.reshape(-1)[:n].reshape(shape).astype(out_dtype)
+
+
+def quant_roundtrip_tree(tree, dtype: str, *, mode: str = "auto"):
+    if dtype == "float32":
+        return tree
+    return jax.tree.map(lambda x: quant_roundtrip(x, dtype, mode=mode),
+                        tree)
+
+
+def transport_bytes(n_elems: int, dtype: str) -> float:
+    """Simulated wire bytes for ``n_elems`` outer-gradient elements."""
+    return n_elems * TRANSPORT_BYTES_PER_ELEM[dtype]
 
 
 # ---------------------------------------------------------------------------

@@ -98,6 +98,45 @@ def sign_prune(x, frac: float):
 
 
 # ---------------------------------------------------------------------------
+# low-precision outer-gradient transport (streaming DiLoCo)
+# ---------------------------------------------------------------------------
+
+INT4_LEVELS = 7.0          # symmetric int4: codes in [-7, 7]
+
+
+def quantize_int4(x):
+    """Blockwise symmetric int4 quantization. x: (R, C) with each row a
+    block sharing one f32 scale (the streaming transport flattens
+    tensors to (blocks, 128)). Returns (codes int8 in [-7, 7],
+    scales (R, 1) f32). All-zero blocks get scale 0 and codes 0."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = amax / INT4_LEVELS
+    q = jnp.round(xf / jnp.where(scale > 0, scale, 1.0))
+    q = jnp.clip(q, -INT4_LEVELS, INT4_LEVELS).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int4(codes, scales):
+    """Inverse of ``quantize_int4``: (R, C) int8 × (R, 1) f32 -> f32."""
+    return codes.astype(jnp.float32) * scales
+
+
+def fake_quant(x, dtype: str):
+    """Quantize→dequantize round trip simulating low-precision
+    transport of outer gradients. x: (R, C) blocks (int4) or any shape
+    (bfloat16). Returns the same shape/dtype as x."""
+    if dtype == "float32":
+        return x
+    if dtype == "bfloat16":
+        return x.astype(jnp.bfloat16).astype(x.dtype)
+    if dtype == "int4":
+        codes, scales = quantize_int4(x)
+        return dequantize_int4(codes, scales).astype(x.dtype)
+    raise ValueError(f"unknown transport dtype {dtype!r}")
+
+
+# ---------------------------------------------------------------------------
 # fused outer Nesterov update
 # ---------------------------------------------------------------------------
 

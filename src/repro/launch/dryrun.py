@@ -161,14 +161,20 @@ def _abstract(arch: Arch, cfg, dtype):
 
 def build_train_step(arch: Arch, cfg, *, groups: int,
                      microbatches: int = TRAIN_MICROBATCHES,
-                     cast_outside_mb: bool = False):
+                     cast_outside_mb: bool = False,
+                     kernel_mode: str = "auto"):
     """(params, m, v, count, batch) -> (params, m, v, count, loss).
     Gradient accumulation over ``microbatches`` splits of the batch.
 
     ``cast_outside_mb``: hoist the f32->bf16 cast (and with it the FSDP
     parameter all-gather) OUT of the microbatch scan — the gathered bf16
     weights become loop-invariant, so GSPMD gathers them once per step
-    instead of once per microbatch (§Perf hillclimb)."""
+    instead of once per microbatch (§Perf hillclimb).
+
+    ``kernel_mode="auto"`` (default) routes the AdamW update through
+    the fused Pallas kernel on TPU, so the dry-run's HLO analysis
+    exercises the kernels structurally; on CPU hosts auto resolves to
+    the jnp reference, leaving the CPU-lite tests unchanged."""
     def loss16(p16, batch):
         return arch.loss(p16, batch, cfg=cfg, groups=groups)
 
@@ -206,26 +212,29 @@ def build_train_step(arch: Arch, cfg, *, groups: int,
         grads, losses = jax.lax.scan(micro, zeros, split)
         grads, _ = adamw.clip_by_global_norm(grads, 1.0)
         new_params, st = adamw.update(
-            grads, adamw.AdamWState(m, v, count), params, lr=4e-4)
+            grads, adamw.AdamWState(m, v, count), params, lr=4e-4,
+            mode=kernel_mode)
         return new_params, st.m, st.v, st.count, losses.mean()
 
     return step
 
 
-def build_outer_step(arch: Arch, cfg, k: int):
+def build_outer_step(arch: Arch, cfg, k: int, *,
+                     kernel_mode: str = "auto"):
     """(global_params, replica_params(k,...), buf) ->
     (new_global, new_buf, new_replicas). The replica-mean IS the
-    cross-pod all-reduce; everything else is elementwise."""
-    from repro.core import outer_opt
+    cross-pod all-reduce; everything else is elementwise. The Nesterov
+    update goes through the fused kernel dispatch (Pallas on TPU, jnp
+    oracle elsewhere) so the analyzed HLO matches production."""
+    from repro.kernels import ops as kops
 
     def step(global_params, replica_params, buf):
         delta = jax.tree.map(lambda g, r: g[None] - r,
                              global_params, replica_params)
         avg = jax.tree.map(lambda d: jnp.mean(d, axis=0), delta)
-        new_buf = jax.tree.map(lambda b, d: 0.9 * b + d, buf, avg)
-        new_global = jax.tree.map(
-            lambda p, b, d: p - 0.7 * (0.9 * b + d),
-            global_params, new_buf, avg)
+        new_global, new_buf = kops.nesterov_update_tree(
+            global_params, avg, buf, lr=0.7, momentum=0.9,
+            mode=kernel_mode)
         new_replicas = jax.tree.map(
             lambda g: jnp.broadcast_to(g[None], (k,) + g.shape),
             new_global)
@@ -311,7 +320,8 @@ def count_params(shapes_tree, axes_tree, cfg):
 def dryrun_pair(arch_name: str, shape_name: str, *, multi_pod: bool,
                 microbatches: int = TRAIN_MICROBATCHES,
                 fns: tuple = ("main",), mesh=None,
-                variant: dict | None = None) -> list[dict]:
+                variant: dict | None = None,
+                kernel_mode: str = "auto") -> list[dict]:
     """Lower+compile the pair; returns one record per lowered fn.
 
     ``variant`` (perf hillclimbing; recorded in each record):
@@ -320,6 +330,11 @@ def dryrun_pair(arch_name: str, shape_name: str, *, multi_pod: bool,
       remat: bool         — override activation checkpointing
       microbatches: int   — override accumulation factor
       moe_groups: int     — override MoE token-grouping factor
+
+    ``kernel_mode`` defaults to "auto": the fused Pallas optimizer
+    kernels are part of the lowered train/outer steps on TPU, so the
+    HLO analysis exercises them structurally; CPU hosts fall back to
+    the jnp oracles (unchanged lite tests).
     """
     variant = dict(variant or {})
     microbatches = int(variant.get("microbatches", microbatches))
@@ -414,7 +429,8 @@ def dryrun_pair(arch_name: str, shape_name: str, *, multi_pod: bool,
         if train:
             step = build_train_step(arch, cfg, groups=groups,
                                     microbatches=microbatches,
-                                    cast_outside_mb=cast_outside_mb)
+                                    cast_outside_mb=cast_outside_mb,
+                                    kernel_mode=kernel_mode)
             fshapes = jax.tree.map(
                 lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
                 pshapes)
@@ -462,7 +478,8 @@ def dryrun_pair(arch_name: str, shape_name: str, *, multi_pod: bool,
                            (stack(pshapes), stack(fshapes), stack(fshapes),
                             cnt_k, binner), raw_fn=vstep)
                 if "main" in fns or "outer" in fns:
-                    outer = build_outer_step(arch, cfg, k)
+                    outer = build_outer_step(arch, cfg, k,
+                                             kernel_mode=kernel_mode)
                     jit_outer = jax.jit(
                         outer, in_shardings=(psh, psh_k, psh),
                         out_shardings=(psh, psh, psh_k))
@@ -523,6 +540,10 @@ def main():
     ap.add_argument("--microbatches", type=int, default=TRAIN_MICROBATCHES)
     ap.add_argument("--variant", default="",
                     help='JSON dict, e.g. {"fsdp": false}')
+    ap.add_argument("--kernel-mode", default="auto",
+                    choices=["auto", "pallas", "interpret", "ref"],
+                    help="fused optimizer kernels in the lowered steps "
+                         "(auto = Pallas on TPU, jnp oracle elsewhere)")
     ap.add_argument("--out", default="")
     args = ap.parse_args()
 
@@ -536,7 +557,8 @@ def main():
                                    microbatches=args.microbatches,
                                    fns=tuple(args.fns.split(",")),
                                    variant=json.loads(args.variant)
-                                   if args.variant else None)
+                                   if args.variant else None,
+                                   kernel_mode=args.kernel_mode)
             except Exception as e:
                 recs = [{"arch": a, "shape": s,
                          "multi_pod": args.multi_pod,

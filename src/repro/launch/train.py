@@ -41,7 +41,11 @@ def build(args):
                         drop_prob=args.drop_prob,
                         prune_frac=args.prune_frac,
                         weighted_avg=args.weighted,
-                        kernel_mode=args.kernel_mode)
+                        kernel_mode=args.kernel_mode,
+                        streaming_fragments=args.stream_fragments,
+                        stream_alpha=args.stream_alpha,
+                        stream_tau=args.stream_tau,
+                        outer_grad_dtype=args.outer_grad_dtype)
     total = args.pretrain_steps + args.rounds * args.H
     tcfg = TrainConfig(inner_lr=args.inner_lr, warmup_steps=args.warmup,
                        total_steps=total, batch_size=args.batch,
@@ -83,7 +87,11 @@ def run(args):
                       f"val={vl:.4f}", flush=True)
 
     # ---- DiLoCo phase ----
-    state = diloco.init_state(params, dcfg)
+    if dcfg.streaming_fragments:
+        from repro.core import streaming
+        state = streaming.init_state(params, dcfg)
+    else:
+        state = diloco.init_state(params, dcfg)
     rng = np.random.default_rng(args.seed)
     drops = schedules.drop_masks(rng, args.drop_prob, args.k, args.rounds)
     sched = schedules.compute_schedule(args.compute_schedule, args.k,
@@ -91,25 +99,32 @@ def run(args):
     acts = schedules.active_masks(sched, args.k)
     weights = jnp.asarray(shard_weights(sampler, args.weighted))
 
-    def emit_round(t, m, i=None):
+    def emit_round(t, m, i=None, evaled=True):
         """Append the round-t record from metrics dict ``m`` (scalar
         entries for the legacy loop, (R,) stacked entries at index
-        ``i`` for the scanned driver) and print the progress line."""
+        ``i`` for the scanned driver) and print the progress line.
+        ``evaled`` False marks a round skipped by the eval cadence —
+        a NaN on an *evaled* round is a genuine divergence and is
+        reported as such."""
         pick = (lambda x: float(x)) if i is None else \
             (lambda x: float(x[i]))
         vl = pick(m["val_loss"])
+        skipped = not evaled
         rec = {"phase": "diloco", "round": t + 1,
                "inner_steps": args.pretrain_steps + (t + 1) * args.H,
-               "inner_loss": pick(m["inner_loss"]), "val_loss": vl,
+               "inner_loss": pick(m["inner_loss"]),
+               "val_loss": None if skipped else vl,
                "outer_gnorm": pick(m["outer_gnorm"]),
                "active": int(sched[t])}
         if args.cosine_stats:
             rec["cos_mean"] = pick(m["cos_mean"])
             rec["cos_std"] = pick(m["cos_std"])
         history.append(rec)
+        val_s = "   skip" if skipped else \
+            f"{vl:.4f} ppl={np.exp(vl):.2f}"
         print(f"[round {t + 1}/{args.rounds}] "
-              f"inner={rec['inner_loss']:.4f} val={vl:.4f} "
-              f"ppl={np.exp(vl):.2f} active={rec['active']}", flush=True)
+              f"inner={rec['inner_loss']:.4f} val={val_s} "
+              f"active={rec['active']}", flush=True)
 
     t0 = time.time()
     if args.legacy_loop:
@@ -141,13 +156,19 @@ def run(args):
                     rounds_per_call=n, total_steps=tcfg.total_steps,
                     compute_cosine=args.cosine_stats,
                     batch_size=args.batch, seq_len=args.seq,
-                    eval_tokens=val, eval_every=1)
+                    eval_tokens=val, eval_every=args.eval_every)
+            # round_offset keeps the in-graph eval cadence globally
+            # aligned across chunk boundaries (traced: chunks of equal
+            # size share one compiled function)
             state, ms = runs[n](state, key, jnp.asarray(drops[t:t + n]),
-                                jnp.asarray(acts[t:t + n]), weights)
+                                jnp.asarray(acts[t:t + n]), weights,
+                                round_offset=t)
             key = ms.pop("next_key")
             ms = jax.tree.map(np.asarray, ms)
             for i in range(n):
-                emit_round(t + i, ms, i)
+                evaled = ((t + i + 1) % args.eval_every == 0
+                          or i == n - 1)
+                emit_round(t + i, ms, i, evaled=evaled)
             t += n
 
     print(f"done in {time.time() - t0:.1f}s; "
@@ -201,6 +222,24 @@ def make_parser():
     ap.add_argument("--rounds-per-call", type=int, default=0,
                     help="rounds scanned inside one jit "
                          "(0 = all rounds in a single call)")
+    ap.add_argument("--eval-every", type=int, default=1,
+                    help="in-graph eval cadence in rounds (scanned "
+                         "driver; globally aligned across chunks)")
+    ap.add_argument("--stream-fragments", type=int, default=0,
+                    help="streaming outer sync: number of parameter "
+                         "fragments P (0 = classic synchronous outer "
+                         "step; see core/streaming.py)")
+    ap.add_argument("--stream-alpha", type=float, default=1.0,
+                    help="streaming merge weight "
+                         "θ_i <- α·θ_global + (1-α)·θ_i")
+    ap.add_argument("--stream-tau", type=int, default=0,
+                    help="inner steps between a fragment's snapshot "
+                         "and its application (simulated in-flight "
+                         "collective)")
+    ap.add_argument("--outer-grad-dtype", default="float32",
+                    choices=["float32", "bfloat16", "int4"],
+                    help="transport precision of outer gradients on "
+                         "the simulated wire")
     ap.add_argument("--legacy-loop", action="store_true",
                     help="use the per-round Python loop instead of the "
                          "scanned driver")

@@ -1,0 +1,357 @@
+"""Tests for the streaming outer-sync subsystem (core/streaming.py,
+core/fragments.py, kernels/quantize.py) and the PR's satellites
+(round-offset eval cadence, single-worker donation).
+
+Pins the subsystem's contracts:
+  * P=1 / α=1 / τ=0 / f32 transport is bit-identical to the
+    synchronous scanned driver — streaming is a strict generalization;
+  * the fragment scheduler sends and applies every fragment exactly
+    once per round for P ∈ {1, 2, 4}, including H values P does not
+    divide, with τ-delayed applies wrapping into the next round;
+  * the partitioner covers every parameter element exactly once with
+    contiguous per-layer fragments, and pattern overrides pin leaves;
+  * quantize→dequantize round trips respect the per-block error bound
+    and the Pallas kernels (interpret mode) match the jnp oracles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import DiLoCoConfig, TrainConfig, ModelConfig
+from repro.core import diloco, fragments, streaming
+from repro.data.sharding import make_regime
+from repro.kernels import ops as kops
+from repro.kernels import quantize as kquant
+from repro.kernels import ref as kref
+from repro.models.registry import Arch
+
+K, H, B, S, VOCAB = 2, 4, 2, 16, 64
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ModelConfig(name="tiny", family="dense", n_layers=2,
+                      d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                      vocab_size=VOCAB, remat=False, attn_chunk=32)
+    arch = Arch(cfg=cfg)
+    loss_fn = lambda p, b: arch.loss(p, b)
+    sampler = make_regime("non_iid", k=K, vocab_size=VOCAB, seed=0)
+    params, _ = arch.init(jax.random.PRNGKey(0), cfg)
+    return arch, loss_fn, sampler, params
+
+
+def _tcfg(rounds):
+    return TrainConfig(inner_lr=3e-3, warmup_steps=2,
+                       total_steps=rounds * H, batch_size=B, seq_len=S)
+
+
+# ---------------------------------------------------------------------------
+# streaming ≡ synchronous at the degenerate point
+# ---------------------------------------------------------------------------
+
+def test_stream_p1_bit_identical_to_sync(setup):
+    """P=1, α=1, τ=0, f32 transport == the synchronous scanned driver,
+    to the bit (states and metrics), including drop masks + weights."""
+    arch, loss_fn, sampler, params = setup
+    R = 3
+    rng = np.random.default_rng(0)
+    drops = (rng.random((R, K)) >= 0.5).astype(np.float32)
+    drops[:, 0] = 1.0
+    acts = np.ones((R, K), np.float32)
+    weights = jnp.asarray([0.75, 0.25])
+
+    dcfg = DiLoCoConfig(k=K, H=H)
+    run = diloco.make_run(loss_fn, sampler.sample_all_shards, dcfg,
+                          _tcfg(R), rounds_per_call=R, total_steps=R * H,
+                          batch_size=B, seq_len=S, donate=False)
+    st, ms = run(diloco.init_state(params, dcfg), jax.random.PRNGKey(5),
+                 jnp.asarray(drops), jnp.asarray(acts), weights)
+
+    dcfg_s = DiLoCoConfig(k=K, H=H, streaming_fragments=1,
+                          stream_alpha=1.0, stream_tau=0,
+                          outer_grad_dtype="float32")
+    run_s = diloco.make_run(loss_fn, sampler.sample_all_shards, dcfg_s,
+                            _tcfg(R), rounds_per_call=R,
+                            total_steps=R * H, batch_size=B, seq_len=S,
+                            donate=False)
+    ss, ms_s = run_s(streaming.init_state(params, dcfg_s),
+                     jax.random.PRNGKey(5), jnp.asarray(drops),
+                     jnp.asarray(acts), weights)
+
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(ss.base)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for key in ("inner_loss", "inner_loss_last", "outer_gnorm"):
+        np.testing.assert_array_equal(np.asarray(ms[key]),
+                                      np.asarray(ms_s[key]))
+
+
+def test_streaming_overlap_quantized_runs_and_stays_finite(setup):
+    """P=2, τ=1, α=0.5, int4 transport: the staggered/stale/quantized
+    path trains, every fragment arms, and the state stays finite."""
+    arch, loss_fn, sampler, params = setup
+    R = 3
+    dcfg = DiLoCoConfig(k=K, H=H, streaming_fragments=2,
+                        stream_alpha=0.5, stream_tau=1,
+                        outer_grad_dtype="int4")
+    run = diloco.make_run(loss_fn, sampler.sample_all_shards, dcfg,
+                          _tcfg(R), rounds_per_call=R, total_steps=R * H,
+                          batch_size=B, seq_len=S, donate=False)
+    ss, ms = run(streaming.init_state(params, dcfg),
+                 jax.random.PRNGKey(5))
+    assert np.all(np.asarray(ss.armed) == 1.0)
+    for leaf in jax.tree.leaves(ss):
+        assert np.isfinite(np.asarray(leaf)).all()
+    losses = np.asarray(ms["inner_loss"])
+    assert np.isfinite(losses).all()
+    # global params actually moved (the outer step is live)
+    moved = any(not np.array_equal(np.asarray(a), np.asarray(b))
+                for a, b in zip(jax.tree.leaves(params),
+                                jax.tree.leaves(ss.global_params)))
+    assert moved
+
+
+def test_streaming_rejects_non_nesterov(setup):
+    arch, loss_fn, sampler, params = setup
+    dcfg = DiLoCoConfig(k=K, H=H, streaming_fragments=2,
+                        outer_opt="adam")
+    with pytest.raises(NotImplementedError):
+        streaming.make_stream_round_body(
+            loss_fn, sampler.sample_all_shards, dcfg, _tcfg(1))
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("P", [1, 2, 4])
+@pytest.mark.parametrize("Hh", [4, 5, 7])
+def test_schedule_covers_every_fragment_once(P, Hh):
+    for tau in (0, min(2, Hh - 1)):
+        sched = fragments.schedule(P, Hh, tau)
+        assert sum(steps for steps, _ in sched.phases) == Hh
+        sends = [e.fragment for _, acts in sched.phases
+                 for e in acts if e.kind == "send"]
+        applies = [e.fragment for _, acts in sched.phases
+                   for e in acts if e.kind == "apply"]
+        assert sorted(sends) == list(range(P))
+        assert sorted(applies) == list(range(P))
+        assert all(0 < o <= Hh for o in sched.send_offsets)
+        # τ-delayed applies that overflow the round are marked wrapped
+        for p in range(P):
+            wrapped = sched.apply_offsets[p] > Hh
+            ev = [e for _, acts in sched.phases for e in acts
+                  if e.kind == "apply" and e.fragment == p]
+            assert ev[0].wrapped == wrapped
+
+
+def test_schedule_orders_apply_before_send_at_equal_offset():
+    """A collective landing at the same offset as another fragment's
+    send completes (applies) before the new snapshot is taken."""
+    sched = fragments.schedule(2, 4, tau=2)
+    # fragment 1 sends at 2, applies at 4; fragment 0 sends at 4
+    last_acts = [acts for _, acts in sched.phases if acts][-1]
+    kinds = [(e.kind, e.fragment) for e in last_acts]
+    assert kinds.index(("apply", 1)) < kinds.index(("send", 0))
+
+
+def test_schedule_validates_tau():
+    with pytest.raises(ValueError):
+        fragments.schedule(2, 4, tau=4)
+    with pytest.raises(ValueError):
+        fragments.schedule(2, 4, tau=-1)
+
+
+def test_schedule_rejects_more_fragments_than_offsets():
+    """P > H would force two fragments onto one sync instant and break
+    the peak-bytes-per-sync accounting — rejected up front."""
+    with pytest.raises(ValueError):
+        fragments.schedule(5, 4)
+    # P == H is the densest legal stagger: one sync per inner step
+    sched = fragments.schedule(4, 4)
+    assert sorted(sched.send_offsets) == [1, 2, 3, 4]
+
+
+# ---------------------------------------------------------------------------
+# partitioner
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("P", [1, 2, 4])
+def test_partition_covers_every_element_exactly_once(setup, P):
+    _, _, _, params = setup
+    part = fragments.partition_params(params, P)
+    assert part.n == P
+    assert sum(part.sizes) == sum(l.size
+                                  for l in jax.tree.leaves(params))
+    total = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+    for mk in part.masks:
+        total = jax.tree.map(
+            lambda t, q, p: t + jnp.broadcast_to(q, p.shape),
+            total, mk, params)
+    for leaf in jax.tree.leaves(total):
+        np.testing.assert_array_equal(np.asarray(leaf),
+                                      np.ones_like(np.asarray(leaf)))
+
+
+def test_partition_stacked_fragments_are_contiguous(setup):
+    """Per-layer fragment assignment of stacked block leaves is a
+    contiguous band per fragment (the paper's block-range fragments)."""
+    _, _, _, params = setup
+    part = fragments.partition_params(params, 2)
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    for p in range(2):
+        mleaves, _ = jax.tree_util.tree_flatten(part.masks[p])
+        for (kp, leaf), mk in zip(flat, mleaves):
+            if "stack" not in jax.tree_util.keystr(kp) or mk.ndim == 0:
+                continue
+            vec = np.asarray(mk).reshape(-1)
+            on = np.flatnonzero(vec > 0)
+            if on.size:
+                assert np.array_equal(on,
+                                      np.arange(on[0], on[-1] + 1))
+
+
+def test_partition_pattern_override(setup):
+    _, _, _, params = setup
+    part = fragments.partition_params(
+        params, 4, overrides=((r"embed", 3),))
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    m3, _ = jax.tree_util.tree_flatten(part.masks[3])
+    m0, _ = jax.tree_util.tree_flatten(part.masks[0])
+    for (kp, _), v3, v0 in zip(flat, m3, m0):
+        if "embed" in jax.tree_util.keystr(kp):
+            assert float(np.asarray(v3)) == 1.0     # pinned to frag 3
+            assert float(np.asarray(v0)) == 0.0
+
+
+def test_partition_rejects_bad_override(setup):
+    _, _, _, params = setup
+    with pytest.raises(ValueError):
+        fragments.partition_params(params, 2, overrides=((r"embed", 5),))
+
+
+# ---------------------------------------------------------------------------
+# quantized transport
+# ---------------------------------------------------------------------------
+
+def test_quant_roundtrip_error_bounds():
+    """int4: |x − dq(q(x))| ≤ amax_block / 14 per 128-elem block of the
+    flattened tensor; bf16: relative error ≤ 2^-8; zeros exact."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (37, 41)) * 3.0
+    dq = np.asarray(kops.quant_roundtrip(x, "int4", mode="ref"))
+    flat = np.asarray(x).reshape(-1)
+    n = flat.size
+    rows = -(-n // 128)
+    fp = np.pad(flat, (0, rows * 128 - n)).reshape(rows, 128)
+    dp = np.pad(dq.reshape(-1), (0, rows * 128 - n)).reshape(rows, 128)
+    amax = np.abs(fp).max(axis=1, keepdims=True)
+    assert (np.abs(fp - dp) <= amax / 13.99 + 1e-12).all()
+
+    dq16 = np.asarray(kops.quant_roundtrip(x, "bfloat16", mode="ref"))
+    assert (np.abs(np.asarray(x) - dq16)
+            <= np.abs(np.asarray(x)) * 2.0 ** -8 + 1e-12).all()
+
+    z = jnp.zeros((5, 7))
+    assert np.asarray(kops.quant_roundtrip(z, "int4",
+                                           mode="ref")).sum() == 0.0
+    with pytest.raises(ValueError):
+        kops.quant_roundtrip(x, "fp8", mode="ref")
+
+
+def test_quant_kernels_interpret_match_oracle():
+    """The Pallas kernels (interpret mode on CPU) match the jnp oracles
+    to float tolerance, and the int4 wire format round-trips."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (33, 50)) * 2.0
+    for dt in ("bfloat16", "int4"):
+        r = np.asarray(kops.quant_roundtrip(x, dt, mode="ref"))
+        k = np.asarray(kops.quant_roundtrip(x, dt, mode="interpret"))
+        np.testing.assert_allclose(r, k, rtol=2e-6, atol=2e-6)
+
+    x2d = jax.random.normal(jax.random.PRNGKey(2), (10, 128))
+    c_r, s_r = kref.quantize_int4(x2d)
+    c_k, s_k = kquant.quantize_int4(x2d, interpret=True)
+    assert c_k.dtype == jnp.int8
+    assert np.abs(np.asarray(c_k)).max() <= 7
+    np.testing.assert_allclose(np.asarray(s_r), np.asarray(s_k),
+                               rtol=2e-6, atol=0)
+    d_k = kquant.dequantize_int4(c_k, s_k, interpret=True)
+    np.testing.assert_allclose(np.asarray(kref.dequantize_int4(c_r, s_r)),
+                               np.asarray(d_k), rtol=2e-6, atol=2e-6)
+
+
+def test_transport_bytes_accounting():
+    assert kops.transport_bytes(1000, "float32") == 4000.0
+    assert kops.transport_bytes(1000, "bfloat16") == 2000.0
+    assert kops.transport_bytes(128, "int4") == 128 * 0.5 + 4.0
+
+
+# ---------------------------------------------------------------------------
+# satellites: round-offset eval cadence, single-worker donation
+# ---------------------------------------------------------------------------
+
+def test_round_offset_aligns_chunked_eval_cadence(setup):
+    """Two chunks of 2 rounds with eval_every=3 + round_offset
+    reproduce the unchunked cadence: the global round-3 eval fires in
+    chunk 2 (it would be skipped with chunk-local indices)."""
+    arch, loss_fn, sampler, params = setup
+    R = 4
+    dcfg = DiLoCoConfig(k=K, H=H)
+    tcfg = _tcfg(R)
+    val = sampler.sample_validation(jax.random.PRNGKey(9), 4, S)
+
+    full = diloco.make_run(loss_fn, sampler.sample_all_shards, dcfg,
+                           tcfg, rounds_per_call=R, total_steps=R * H,
+                           batch_size=B, seq_len=S, eval_tokens=val,
+                           eval_every=3, donate=False)
+    _, ms_full = full(diloco.init_state(params, dcfg),
+                      jax.random.PRNGKey(5))
+
+    chunk = diloco.make_run(loss_fn, sampler.sample_all_shards, dcfg,
+                            tcfg, rounds_per_call=2, total_steps=R * H,
+                            batch_size=B, seq_len=S, eval_tokens=val,
+                            eval_every=3, donate=False)
+    state = diloco.init_state(params, dcfg)
+    key = jax.random.PRNGKey(5)
+    vals = []
+    for off in (0, 2):
+        state, ms = chunk(state, key, round_offset=off)
+        key = ms["next_key"]
+        vals.extend(np.asarray(ms["val_loss"]).tolist())
+
+    vf = np.asarray(ms_full["val_loss"])
+    # unchunked: evals at global rounds 3 and 4 (last round forced)
+    assert np.isnan(vf[0]) and np.isnan(vf[1])
+    assert np.isfinite(vf[2]) and np.isfinite(vf[3])
+    # chunked with offset: round 3 eval fires mid-chunk-2 and matches
+    # (rounds 2 and 4 are chunk-final, so they eval as well)
+    assert np.isnan(vals[0])
+    assert np.isfinite(vals[2])
+    np.testing.assert_allclose(vals[2], float(vf[2]), rtol=1e-6)
+    np.testing.assert_allclose(vals[3], float(vf[3]), rtol=1e-6)
+
+
+def test_single_worker_step_donation(setup):
+    """The donated single-worker step trains in place across iterations
+    and matches the non-donated step."""
+    arch, loss_fn, sampler, params = setup
+    from repro.optim import adamw
+    tcfg = _tcfg(2)
+    batch = {"tokens": sampler.sample_validation(
+        jax.random.PRNGKey(3), B, S)}
+
+    outs = {}
+    for donate in (False, True):
+        step = diloco.make_single_worker_step(loss_fn, tcfg,
+                                              total_steps=2 * H,
+                                              donate=donate)
+        p = jax.tree.map(jnp.copy, params)
+        opt = adamw.init(p)
+        for i in range(3):
+            p, opt, m = step(p, opt, batch, jnp.asarray(i))
+        outs[donate] = (p, float(m["loss"]))
+    for a, b in zip(jax.tree.leaves(outs[False][0]),
+                    jax.tree.leaves(outs[True][0])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert np.isfinite(outs[True][1])
