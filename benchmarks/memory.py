@@ -1,0 +1,260 @@
+"""Replica-state memory benchmark: the mixed-precision policy's byte
+and wall-clock bill vs the all-f32 baseline.
+
+DiLoCo's donated carry is dominated by the k-fold replica state — every
+replica's params plus its AdamW m/v moments ride through the scanned
+driver round after round. The precision policy (``optim/precision.py``)
+shrinks exactly that tier:
+
+  f32        param_dtype=float32, master_dtype=float32 — the baseline,
+             bit-identical to the historical driver (gated below).
+  bf16       param_dtype=bfloat16, master_dtype=float32 — THE mixed
+             policy: bf16 working params + bf16 moments + an f32
+             per-replica master inside the AdamW state. The
+             params+moments carry halves (12 B -> 6 B per param per
+             replica); the master adds 4 B back but keeps the update
+             and the outer deltas at full precision.
+  bf16_pure  param_dtype=master_dtype=bfloat16 — no master at all;
+             smallest carry, lowest-precision outer gradients
+             (informational, not gated).
+
+Measured per policy:
+
+  state_bytes.*            actual storage bytes of every state tier,
+                           read off the initialized DiLoCoState leaves
+                           (params / moments / master / global / outer);
+  replica_params_moments_bytes   the gated tier: k×(params + m + v);
+  compiled_memory          XLA's compiled-memory analysis of the
+                           scanned run (argument/output/temp/donated
+                           alias bytes) via launch/hlo_analysis.py —
+                           best-effort, {} where the backend doesn't
+                           report it;
+  round_latency_ms         measured wall-clock per round (min over
+                           repeats, donated carry, fresh state each
+                           call);
+  final_val_loss           end-of-run validation loss of the *global*
+                           (always-f32) params;
+  outer_sync_bytes         informational: simulated wire bytes of one
+                           full-model outer exchange per transport
+                           dtype (the *measured* transported-bytes gate
+                           lives in benchmarks/streaming.py).
+
+Claims (the regression gates):
+
+  replica_state_reduction_ge_1p8   bf16 policy shrinks the
+                           params+moments donated carry >= 1.8x;
+  f32_bit_identical        the f32 policy's final state equals a
+                           default-config (policy-less) run bit for bit;
+  loss_gap_small           |val(bf16) - val(f32)| <= --loss-gap.
+
+Writes ``BENCH_memory.json`` at the repo root (see benchmarks/README.md
+for the reading guide).
+
+Run:  PYTHONPATH=src python -m benchmarks.memory [--rounds 4 ...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from . import common as C
+from repro.configs.base import DiLoCoConfig, TrainConfig
+from repro.core import diloco
+from repro.kernels.ops import transport_bytes
+from repro.launch import hlo_analysis
+from repro.optim import precision
+
+ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+OUT_PATH = os.path.join(ROOT, "BENCH_memory.json")
+
+POLICIES = [
+    ("f32", "float32", "float32"),
+    ("bf16", "bfloat16", "float32"),
+    ("bf16_pure", "bfloat16", "bfloat16"),
+]
+
+
+def state_bytes(state: diloco.DiLoCoState) -> dict:
+    """Storage bytes of each tier of the carry, from the real leaves."""
+    tb = precision.tree_bytes
+    out = {
+        "replica_params": tb(state.replica_params),
+        "inner_m": tb(state.inner_state.m),
+        "inner_v": tb(state.inner_state.v),
+        "inner_master": tb(state.inner_state.master),
+        "global_params": tb(state.global_params),
+        "outer_buffers": tb(state.outer_state.buf)
+        + tb(state.outer_state.buf2),
+    }
+    out["replica_params_moments"] = (out["replica_params"]
+                                     + out["inner_m"] + out["inner_v"])
+    out["total"] = sum(v for k, v in out.items()
+                       if k not in ("replica_params_moments",))
+    return out
+
+
+def bench_policy(loss_fn, sampler, params, name, dcfg, tcfg, *, rounds,
+                 batch, seq, val, seed, repeats):
+    run = diloco.make_run(loss_fn, sampler.sample_all_shards, dcfg,
+                          tcfg, rounds_per_call=rounds,
+                          total_steps=rounds * dcfg.H, batch_size=batch,
+                          seq_len=seq, eval_tokens=val, eval_every=1,
+                          donate=True)
+    key = jax.random.PRNGKey(seed + 2)
+
+    state0 = diloco.init_state(params, dcfg)
+    sb = state_bytes(state0)
+    # AOT-compile once: the same executable serves the memory analysis
+    # AND the timed calls (compiling again through the jit cache would
+    # double the dominant cost of the benchmark)
+    try:
+        compiled = run.lower(state0, key).compile()
+        mem = hlo_analysis.memory_items(compiled)
+        call = compiled
+    except Exception:
+        mem = {}
+        call = run
+
+    def one():
+        state = diloco.init_state(params, dcfg)
+        jax.block_until_ready(state)
+        t0 = time.perf_counter()
+        state, ms = call(state, key)
+        jax.block_until_ready((state, ms))
+        return time.perf_counter() - t0, state, ms
+
+    one()                                           # warmup
+    results = [one() for _ in range(repeats)]
+    t = min(r[0] for r in results)
+    _, state, ms = results[0]
+    return {
+        "name": name,
+        "config": {"param_dtype": dcfg.param_dtype,
+                   "master_dtype": dcfg.master_dtype},
+        "state_bytes": sb,
+        "compiled_memory": mem,
+        "total_s": t,
+        "round_latency_ms": 1e3 * t / rounds,
+        "final_val_loss": float(np.asarray(ms["val_loss"])[-1]),
+    }, state
+
+
+def run(scale: int = 1, *, k=4, H=6, rounds=6, batch=2, seq=32,
+        eval_batch=16, repeats=3, seed=0, loss_gap=0.25, out=OUT_PATH):
+    rounds = rounds * scale
+    arch, loss_fn, sampler = C.make_setup(k=k, seed=seed)
+    total = rounds * H
+    params, _ = C.pretrain(arch, loss_fn, sampler, 0, batch=batch,
+                           seq=seq, lr=3e-3, warmup=10, total=total,
+                           seed=seed)
+    val = sampler.sample_validation(jax.random.PRNGKey(10_000),
+                                    eval_batch, seq)
+    n_params = int(sum(l.size for l in jax.tree.leaves(params)))
+    print(f"k={k} H={H} rounds={rounds} batch={batch} seq={seq} "
+          f"params={n_params} backend={jax.default_backend()}")
+
+    runs, states = {}, {}
+    for name, pd, md in POLICIES:
+        dcfg = DiLoCoConfig(k=k, H=H, param_dtype=pd, master_dtype=md)
+        tcfg = TrainConfig(inner_lr=3e-3, warmup_steps=10,
+                           total_steps=total, batch_size=batch,
+                           seq_len=seq, param_dtype=pd, master_dtype=md)
+        r, st = bench_policy(loss_fn, sampler, params, name, dcfg, tcfg,
+                             rounds=rounds, batch=batch, seq=seq,
+                             val=val, seed=seed, repeats=repeats)
+        runs[name] = r
+        states[name] = st
+        sb = r["state_bytes"]
+        print(f"{name:10s} {r['round_latency_ms']:8.2f} ms/round  "
+              f"val={r['final_val_loss']:.4f}  "
+              f"p+m+v={sb['replica_params_moments']} B  "
+              f"total={sb['total']} B")
+
+    # --- gate 1: f32 policy == default (policy-less) config, bit for bit
+    dcfg_d = DiLoCoConfig(k=k, H=H)
+    tcfg_d = TrainConfig(inner_lr=3e-3, warmup_steps=10,
+                         total_steps=total, batch_size=batch, seq_len=seq)
+    run_d = diloco.make_run(loss_fn, sampler.sample_all_shards, dcfg_d,
+                            tcfg_d, rounds_per_call=rounds,
+                            total_steps=total, batch_size=batch,
+                            seq_len=seq, eval_tokens=val, eval_every=1,
+                            donate=True)
+    st_d, _ = run_d(diloco.init_state(params, dcfg_d),
+                    jax.random.PRNGKey(seed + 2))
+    bit_identical = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(states["f32"]),
+                        jax.tree.leaves(st_d)))
+
+    # --- gate 2: >=1.8x params+moments reduction for the bf16 policy
+    base = runs["f32"]["state_bytes"]["replica_params_moments"]
+    reductions = {n: base / r["state_bytes"]["replica_params_moments"]
+                  for n, r in runs.items() if n != "f32"}
+
+    # --- gate 3: matched loss
+    gap = abs(runs["bf16"]["final_val_loss"]
+              - runs["f32"]["final_val_loss"])
+
+    # informational: wire bytes of one full-model outer exchange per
+    # transport dtype (the measured per-run gate on transported bytes
+    # lives in benchmarks/streaming.py)
+    sync_bytes = {dt: transport_bytes(n_params, dt)
+                  for dt in ("float32", "bfloat16", "int4")}
+
+    report = {
+        "config": {"k": k, "H": H, "rounds": rounds, "batch": batch,
+                   "seq": seq, "backend": jax.default_backend(),
+                   "model_params": n_params},
+        "runs": runs,
+        "replica_state_reduction": reductions,
+        "val_loss_gap_bf16_vs_f32": gap,
+        "outer_sync_bytes": sync_bytes,
+        "claims": {
+            "replica_state_reduction_ge_1p8":
+                bool(reductions["bf16"] >= 1.8),
+            "f32_bit_identical": bool(bit_identical),
+            "loss_gap_small": bool(gap <= loss_gap),
+            "all_losses_finite": bool(all(
+                np.isfinite(r["final_val_loss"])
+                for r in runs.values())),
+        },
+    }
+    print(f"bit-identical f32: {bit_identical}   "
+          f"p+m+v reductions: "
+          + "  ".join(f"{n}={v:.2f}x" for n, v in reductions.items())
+          + f"   loss gap: {gap:.4f}")
+
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1)
+    print("wrote", out)
+    C.save("memory", report)
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--H", type=int, default=6)
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--eval-batch", type=int, default=16)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--loss-gap", type=float, default=0.25,
+                    help="max |val(bf16) - val(f32)| for the "
+                         "loss_gap_small claim")
+    ap.add_argument("--out", default=OUT_PATH)
+    a = ap.parse_args(argv)
+    return run(1, k=a.k, H=a.H, rounds=a.rounds, batch=a.batch,
+               seq=a.seq, eval_batch=a.eval_batch, repeats=a.repeats,
+               seed=a.seed, loss_gap=a.loss_gap, out=a.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -48,7 +48,8 @@ import numpy as np
 from . import common as C
 from repro.configs.base import DiLoCoConfig, TrainConfig
 from repro.core import diloco, fragments, streaming
-from repro.kernels.ops import TRANSPORT_BYTES_PER_ELEM
+from repro.kernels import ops as kops
+from repro.kernels.ops import transport_bytes
 
 ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
 OUT_PATH = os.path.join(ROOT, "BENCH_streaming.json")
@@ -74,22 +75,30 @@ def stream_configs(k: int, H: int):
 
 
 def comm_profile(params, dcfg: DiLoCoConfig) -> dict:
-    """Static wire profile of one replica's outer sync per round."""
+    """Static wire profile of one replica's outer sync per round.
+    Bytes are exact per ``ops.transport_bytes``: int4 pays its f32
+    scale per started 128-element block of each contiguous leaf region
+    a fragment ships (the unit a real sender packs and quantizes)."""
     total = int(sum(l.size for l in jax.tree.leaves(params)))
     if not dcfg.streaming_fragments:
-        return {"peak_bytes_per_sync": 4.0 * total,
-                "round_bytes": 4.0 * total,
+        fb = transport_bytes(total, "float32")
+        return {"peak_bytes_per_sync": fb,
+                "round_bytes": fb,
                 "syncs_per_round": 1,
                 "fragment_elems": [total],
+                "fragment_bytes": [fb],
                 "transport": "float32"}
     part = fragments.partition_params(params, dcfg.streaming_fragments,
                                       overrides=dcfg.stream_overrides)
-    bpe = TRANSPORT_BYTES_PER_ELEM[dcfg.outer_grad_dtype]
-    return {"peak_bytes_per_sync": bpe * part.peak_fragment_elems(),
-            "round_bytes": bpe * sum(part.sizes),
+    dt = dcfg.outer_grad_dtype
+    per_frag = [sum(transport_bytes(e, dt) for e in regs)
+                for regs in part.region_sizes]
+    return {"peak_bytes_per_sync": max(per_frag),
+            "round_bytes": sum(per_frag),
             "syncs_per_round": part.n,
             "fragment_elems": list(part.sizes),
-            "transport": dcfg.outer_grad_dtype}
+            "fragment_bytes": per_frag,
+            "transport": dt}
 
 
 def bench_one(loss_fn, sampler, params, name, dcfg, tcfg, *, rounds,
@@ -132,8 +141,7 @@ def bandwidth_curve(profile, *, rounds, compute_s, H, tau) -> dict:
     t_step = compute_s / (rounds * H)
     peak = profile["peak_bytes_per_sync"]
     n_syncs = profile["syncs_per_round"]
-    per_frag = [e * TRANSPORT_BYTES_PER_ELEM[profile["transport"]]
-                for e in profile["fragment_elems"]]
+    per_frag = profile["fragment_bytes"]
     est = []
     for bw in BANDWIDTHS:
         stall = sum(max(0.0, b / bw - tau * t_step) for b in per_frag)
@@ -144,6 +152,37 @@ def bandwidth_curve(profile, *, rounds, compute_s, H, tau) -> dict:
                 (max(per_frag) / (tau * t_step) if tau > 0 else None),
             "peak_bytes_per_sync": peak,
             "syncs_per_round": n_syncs}
+
+
+def fakequant_micro(*, n_elems=1 << 18, repeats=5, seed=0) -> dict:
+    """Fused fake-quant kernel vs XLA's cast chain, per transport dtype.
+
+    ``ref`` is what XLA builds from the jnp oracle (for bf16 literally a
+    down/up cast chain; for int4 the blockwise quantize math with codes
+    and scales materialized); ``kernel`` is the fused one-VMEM-pass
+    Pallas round trip. On TPU the kernel path runs compiled
+    (mode="pallas"); elsewhere it runs the interpreter, which measures
+    correctness overhead, not speed — ``kernel_mode`` records which one
+    this report used, so only same-mode numbers are comparable."""
+    on_tpu = jax.default_backend() == "tpu"
+    kmode = "pallas" if on_tpu else "interpret"
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n_elems,))
+    out = {"n_elems": n_elems, "kernel_mode": kmode}
+    for dt in ("bfloat16", "int4"):
+        per = {}
+        for label, mode in (("ref_ms", "ref"), ("kernel_ms", kmode)):
+            fn = jax.jit(lambda y, m=mode, d=dt:
+                         kops.quant_roundtrip(y, d, mode=m))
+            jax.block_until_ready(fn(x))            # compile warmup
+            ts = []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(x))
+                ts.append(time.perf_counter() - t0)
+            per[label] = 1e3 * min(ts)
+        per["wire_bytes"] = transport_bytes(n_elems, dt)
+        out[dt] = per
+    return out
 
 
 def run(scale: int = 1, *, k=4, H=6, rounds=6, batch=2, seq=32,
@@ -199,11 +238,19 @@ def run(scale: int = 1, *, k=4, H=6, rounds=6, batch=2, seq=32,
         if r["config"]["transport"] != "float32" and red < P:
             ge_p = False
 
+    fq = fakequant_micro(repeats=repeats, seed=seed)
+    print("fakequant micro (n=%d, %s): bf16 ref=%.3fms kernel=%.3fms  "
+          "int4 ref=%.3fms kernel=%.3fms"
+          % (fq["n_elems"], fq["kernel_mode"],
+             fq["bfloat16"]["ref_ms"], fq["bfloat16"]["kernel_ms"],
+             fq["int4"]["ref_ms"], fq["int4"]["kernel_ms"]))
+
     report = {
         "config": {"k": k, "H": H, "rounds": rounds, "batch": batch,
                    "seq": seq, "backend": jax.default_backend(),
                    "model_params": int(sum(
                        l.size for l in jax.tree.leaves(params)))},
+        "fakequant_micro": fq,
         "runs": runs,
         "sync_peak_bytes_per_sync": sync_peak,
         "peak_bytes_reduction": reductions,

@@ -26,7 +26,7 @@ import numpy as np
 from repro.configs.base import DiLoCoConfig, TrainConfig
 from repro.core import diloco, fragments, streaming
 from repro.data.sharding import make_regime
-from repro.kernels.ops import TRANSPORT_BYTES_PER_ELEM
+from repro.kernels.ops import transport_bytes
 from repro.models.registry import get_smoke_arch
 
 ap = argparse.ArgumentParser()
@@ -84,9 +84,11 @@ for t in range(args.rounds):
           f"{histories['stream'][t]:11.4f}")
 
 part = fragments.partition_params(params, args.fragments)
-bpe = TRANSPORT_BYTES_PER_ELEM[args.transport]
-sync_peak = 4.0 * n_params
-stream_peak = bpe * part.peak_fragment_elems()
+sync_peak = transport_bytes(n_params, "float32")
+# exact wire bytes: int4's f32 scales charged per contiguous leaf
+# region (matches benchmarks/streaming.py and BENCH_streaming.json)
+stream_peak = max(sum(transport_bytes(e, args.transport) for e in regs)
+                  for regs in part.region_sizes)
 print(f"\nwire profile (per replica):")
 print(f"  sync   : 1 × {sync_peak / 1e6:8.2f} MB per round "
       f"(full model, f32, blocking barrier)")

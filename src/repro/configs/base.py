@@ -145,6 +145,25 @@ class DiLoCoConfig:
     #                              gradients: float32 | bfloat16 | int4
     stream_overrides: tuple = ()  # ((path-regex, fragment_idx), ...)
     #                              forcing whole leaves into a fragment
+    # Error-feedback accumulation for quantized outer gradients: each
+    # replica keeps its transport rounding residual locally and adds it
+    # to the next round's delta, driving the mean quantization bias to
+    # zero at no wire cost. Only meaningful with a low-precision
+    # outer_grad_dtype on the streaming path.
+    error_feedback: bool = False
+    # --- replica-state precision policy (see optim/precision.py) ---
+    # param_dtype:  storage dtype of the per-replica working params AND
+    #               AdamW moments ("bfloat16" halves the params+moments
+    #               donated carry).
+    # master_dtype: storage dtype of the master-side state; when wider
+    #               than param_dtype a per-replica master copy of the
+    #               params is carried in the inner AdamW state and the
+    #               outer deltas are computed master-vs-master.
+    # MUST match the TrainConfig policy of the same run (checked by the
+    # round builders). (float32, float32) is bit-identical to the
+    # historical all-f32 path.
+    param_dtype: str = "float32"
+    master_dtype: str = "float32"
 
 
 @dataclass(frozen=True)
@@ -163,3 +182,9 @@ class TrainConfig:
     seed: int = 0
     # Backend for the fused inner-AdamW kernel (see DiLoCoConfig).
     kernel_mode: str = "ref"
+    # Replica-state precision policy (see DiLoCoConfig / the full
+    # explanation in optim/precision.py). Governs the dtypes the inner
+    # AdamW step reads and writes; keep in sync with the DiLoCoConfig
+    # of the same run.
+    param_dtype: str = "float32"
+    master_dtype: str = "float32"

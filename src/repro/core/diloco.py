@@ -40,14 +40,21 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import DiLoCoConfig, TrainConfig
-from repro.optim import adamw
+from repro.optim import adamw, precision
 from repro.optim.schedule import make_warmup_cosine
 from . import outer_opt
 from .compression import sign_prune
 
 
 class DiLoCoState(NamedTuple):
-    """Carried across rounds. replica_* leaves have a leading (k,) axis."""
+    """Carried across rounds. replica_* leaves have a leading (k,) axis.
+
+    Under a mixed precision policy (``dcfg.param_dtype`` narrower than
+    ``dcfg.master_dtype``) ``replica_params`` and the inner m/v moments
+    ride at ``param_dtype`` while ``inner_state.master`` carries the
+    per-replica ``master_dtype`` master copies; ``global_params`` and
+    the outer state always stay at the caller's (f32) precision.
+    """
     global_params: Any            # θ^(t-1), the shared copy
     outer_state: outer_opt.OuterState
     replica_params: Any           # (k, ...) per-replica θ_i
@@ -64,16 +71,28 @@ def broadcast_replicas(tree, k: int):
 def init_state(params, dcfg: DiLoCoConfig) -> DiLoCoState:
     """Start DiLoCo from (possibly pretrained) ``params``.
 
+    ``params`` arrive at master precision (f32). Under a mixed policy
+    (``dcfg.param_dtype`` narrower than ``dcfg.master_dtype``) the
+    replica working params and AdamW moments are allocated at
+    ``param_dtype`` and each replica's inner state carries a
+    ``master_dtype`` master copy; the global params and outer state
+    always stay at the caller's precision.
+
     ``global_params`` is a copy, not an alias of the caller's tree —
     the scanned driver (``make_run``) donates the state's buffers, and
     donating an aliased tree would delete the caller's params.
     """
+    pol = precision.policy_of(dcfg)
     rep = broadcast_replicas(params, dcfg.k)
+    # init allocates moments at param_dtype and a master only under a
+    # mixed policy; the working replicas are the param_dtype cast
+    inner = jax.vmap(functools.partial(adamw.init, policy=pol))(rep)
+    rep = precision.cast_tree(rep, pol.param_dtype)
     return DiLoCoState(
         global_params=jax.tree.map(jnp.copy, params),
         outer_state=outer_opt.init(params),
         replica_params=rep,
-        inner_state=jax.vmap(adamw.init)(rep),
+        inner_state=inner,
         outer_t=jnp.zeros((), jnp.int32),
         inner_steps_done=jnp.zeros((), jnp.int32),
     )
@@ -89,6 +108,7 @@ def make_inner_step(loss_fn: Callable, tcfg: TrainConfig,
     (loss, metrics). Returns step(params, opt_state, batch, step_idx)."""
     sched = make_warmup_cosine(tcfg.inner_lr, tcfg.warmup_steps,
                                total_steps or tcfg.total_steps)
+    pol = precision.policy_of(tcfg)
 
     def step(params, opt_state, batch, step_idx):
         (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
@@ -98,8 +118,10 @@ def make_inner_step(loss_fn: Callable, tcfg: TrainConfig,
         params, opt_state = adamw.update(
             grads, opt_state, params, lr=lr, b1=tcfg.b1, b2=tcfg.b2,
             eps=tcfg.eps, weight_decay=tcfg.weight_decay,
-            mode=getattr(tcfg, "kernel_mode", "ref"))
-        return params, opt_state, {"loss": loss, "gnorm": gnorm, "lr": lr}
+            mode=getattr(tcfg, "kernel_mode", "ref"), policy=pol)
+        # metrics stay f32 whatever the replica dtype (no-op for f32)
+        return params, opt_state, {"loss": loss.astype(jnp.float32),
+                                   "gnorm": gnorm, "lr": lr}
 
     return step
 
@@ -162,10 +184,14 @@ def outer_step(state: DiLoCoState, dcfg: DiLoCoConfig, *,
     denom = jnp.maximum(m.sum(), 1e-9)
 
     kernel_mode = getattr(dcfg, "kernel_mode", "ref")
+    masters = state.inner_state.master       # None unless mixed policy
 
-    # Δ_i = θ^(t-1) − θ_i^(t)   (line 12)
+    # Δ_i = θ^(t-1) − θ_i^(t)   (line 12). Under a mixed policy the
+    # deltas are computed master-vs-master at full precision — the bf16
+    # working copies never enter the outer gradient.
+    rep_src = masters if masters is not None else state.replica_params
     deltas = jax.tree.map(lambda g, r: g[None] - r,
-                          state.global_params, state.replica_params)
+                          state.global_params, rep_src)
     if dcfg.prune_frac > 0:
         deltas = jax.vmap(
             lambda d: sign_prune(d, dcfg.prune_frac, mode=kernel_mode)
@@ -185,11 +211,21 @@ def outer_step(state: DiLoCoState, dcfg: DiLoCoConfig, *,
     # re-dispatch (line 3 of next phase): communicated & active replicas
     # adopt θ^(t); dropped replicas continue from their own θ_i; inactive
     # replicas park on θ^(t) (they'll be reset when re-activated anyway).
+    # The adopted copy is cast to the replica storage dtype (identity
+    # under the f32 policy); masters adopt at full precision.
     adopt = jnp.maximum(drop_mask, 1.0 - active_mask)         # (k,)
     new_replicas = jax.tree.map(
         lambda g, r: jnp.where(
-            adopt.reshape((k,) + (1,) * g.ndim) > 0, g[None], r),
+            adopt.reshape((k,) + (1,) * g.ndim) > 0,
+            g[None].astype(r.dtype), r),
         new_global, state.replica_params)
+    new_inner = state.inner_state
+    if masters is not None:
+        new_masters = jax.tree.map(
+            lambda g, w: jnp.where(
+                adopt.reshape((k,) + (1,) * g.ndim) > 0, g[None], w),
+            new_global, masters)
+        new_inner = state.inner_state._replace(master=new_masters)
 
     metrics = {
         "outer_gnorm": _tree_norm(avg),
@@ -204,7 +240,7 @@ def outer_step(state: DiLoCoState, dcfg: DiLoCoConfig, *,
         global_params=new_global,
         outer_state=new_outer,
         replica_params=new_replicas,
-        inner_state=state.inner_state,
+        inner_state=new_inner,
         outer_t=state.outer_t + 1,
         inner_steps_done=state.inner_steps_done,
     ), metrics
@@ -247,6 +283,12 @@ def _make_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
     round (fragment-scheduled outer sync, see ``core/streaming.py``);
     the state is then a ``streaming.StreamState`` (build with
     ``streaming.init_state``)."""
+    if precision.policy_of(dcfg) != precision.policy_of(tcfg):
+        raise ValueError(
+            "DiLoCoConfig and TrainConfig precision policies disagree: "
+            f"dcfg=({dcfg.param_dtype}, {dcfg.master_dtype}) vs "
+            f"tcfg=({tcfg.param_dtype}, {tcfg.master_dtype}); the state "
+            "layout (dcfg) must match the inner step (tcfg)")
     if getattr(dcfg, "streaming_fragments", 0):
         from . import streaming
         return streaming.make_stream_round_body(

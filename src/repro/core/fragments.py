@@ -45,10 +45,17 @@ class Partition(NamedTuple):
     a replica-stacked (k, ...) version of it). Summed over fragments the
     masks are exactly one everywhere.
     sizes: per-fragment element counts.
+    region_sizes: per fragment, the element counts of the contiguous
+    per-leaf *regions* it touches (a stacked leaf contributes its layer
+    band as one region, a whole non-stacked leaf is one region). A real
+    sender packs and quantizes region by region, so per-block transport
+    overheads (int4's f32 scales) are charged per region via
+    ``ops.transport_bytes`` — not per fragment total.
     """
     n: int
     masks: tuple
     sizes: tuple
+    region_sizes: tuple = ()
 
     def peak_fragment_elems(self) -> int:
         return max(self.sizes) if self.sizes else 0
@@ -116,6 +123,7 @@ def partition_params(params, n_fragments: int, *, overrides=(),
 
     mask_leaves: list[list] = [[] for _ in range(P)]
     sizes = [0] * P
+    regions: list[list] = [[] for _ in range(P)]
     for i, (path, leaf) in enumerate(zip(paths, leaves)):
         if _is_stacked(path, leaf, stack_pattern):
             L = leaf.shape[0]
@@ -131,15 +139,20 @@ def partition_params(params, n_fragments: int, *, overrides=(),
             # streaming round skips leaves a fragment doesn't touch)
             for p in range(P):
                 mask_leaves[p].append(vec[p].reshape(shape))
+                layers = int(vec[p].sum())
+                if layers:
+                    regions[p].append(layers * per)
         else:
             f = assign[(i, None)]
             sizes[f] += int(leaf.size)
+            regions[f].append(int(leaf.size))
             for p in range(P):
                 mask_leaves[p].append(
                     np.float32(1.0 if p == f else 0.0))
     masks = tuple(jax.tree_util.tree_unflatten(treedef, mask_leaves[p])
                   for p in range(P))
-    return Partition(P, masks, tuple(sizes))
+    return Partition(P, masks, tuple(sizes),
+                     tuple(tuple(r) for r in regions))
 
 
 # ---------------------------------------------------------------------------

@@ -37,6 +37,10 @@ def update(delta, state: OuterState, params, *, kind: str, lr: float,
     always use the jnp tree maps (they are off the paper's main path).
     """
     count = state.count + 1
+    # The outer step always runs at master precision: low-precision
+    # deltas (e.g. from bf16 replicas under the pure-bf16 policy) are
+    # upcast to the params' dtype first (identity for f32 deltas).
+    delta = jax.tree.map(lambda d, p: d.astype(p.dtype), delta, params)
 
     if kind == "nesterov" and kernel_mode != "ref":
         from repro.kernels import ops as kops

@@ -17,9 +17,13 @@ replaces it with a *stream* of fragment-sized collectives:
     on stale fragment params;
   * instead of hard-resetting replicas to the new global fragment, the
     synced fragment is *merged* with each replica's local progress;
-  * outer gradients take a quantize→dequantize round trip at the
-    transport precision before the simulated all-reduce
+  * outer gradients take a per-replica quantize→dequantize round trip
+    at the transport precision before the simulated all-reduce
     (``kernels/quantize.py``), cutting wire bytes another 2×–7.5×.
+    int4 scale blocks are formed over each replica's flattened leaf, so
+    they never mix two replicas' values; blocks may still span a leaf's
+    fragment-band boundary within one replica — a known approximation
+    of a sender that packs each fragment region separately.
 
 Knob ↔ paper-term map (DiLoCoConfig):
 
@@ -57,6 +61,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import DiLoCoConfig, TrainConfig
+from repro.optim import precision
 from . import diloco, fragments, outer_opt
 from .compression import sign_prune
 
@@ -69,10 +74,16 @@ class StreamState(NamedTuple):
     written at the fragment's send, consumed at its apply τ steps later.
     armed: (P,) float latch, 1 after a fragment's first send — applies
     before the first send (wrapped applies in round 0) are no-ops.
+    residual: per-replica (k, ...) error-feedback accumulator for the
+    quantized transport (``dcfg.error_feedback``): each replica keeps
+    the rounding error its quantizer introduced and adds it to the next
+    round's delta, so the mean transport bias decays to zero at no wire
+    cost. None when error feedback is off or transport is float32.
     """
     base: diloco.DiLoCoState
     pending: Any
     armed: jnp.ndarray
+    residual: Any = None
 
     # conveniences so StreamState is a drop-in for DiLoCoState readers
     @property
@@ -103,10 +114,29 @@ class StreamState(NamedTuple):
 def init_state(params, dcfg: DiLoCoConfig) -> StreamState:
     """Start streaming DiLoCo from ``params`` (cf. diloco.init_state)."""
     P = max(1, int(dcfg.streaming_fragments))
+    residual = None
+    if dcfg.error_feedback and dcfg.outer_grad_dtype != "float32":
+        residual = jax.tree.map(
+            lambda p: jnp.zeros((dcfg.k,) + p.shape, jnp.float32),
+            params)
     return StreamState(
         base=diloco.init_state(params, dcfg),
         pending=jax.tree.map(jnp.zeros_like, params),
-        armed=jnp.zeros((P,), jnp.float32))
+        armed=jnp.zeros((P,), jnp.float32),
+        residual=residual)
+
+
+def quantize_with_feedback(d, res, dtype: str, *, mode: str = "ref"):
+    """One error-feedback transport step: quantize ``d + res`` (the
+    fresh delta plus the residual the quantizer left behind last time)
+    and return (quantized, new_residual). Over repeated rounds the
+    residual re-injects every rounding error into a later transport, so
+    the *mean* transported value converges to the true mean delta —
+    the quantization bias vanishes at no wire cost."""
+    from repro.kernels import ops as kops
+    d_in = d + res
+    q = kops.quant_roundtrip(d_in, dtype, mode=mode)
+    return q, d_in - q
 
 
 def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
@@ -134,6 +164,7 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
     alpha = float(dcfg.stream_alpha)
     qdtype = dcfg.outer_grad_dtype
     kernel_mode = getattr(dcfg, "kernel_mode", "ref")
+    mixed = precision.policy_of(dcfg).mixed
     inner_step_tok = diloco.make_inner_step(
         lambda p, b: loss_fn(p, b), tcfg, total_steps)
     B = batch_size or tcfg.batch_size
@@ -168,6 +199,7 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
         count = st.outer_state.count
         pending = sstate.pending
         armed = sstate.armed
+        residual = sstate.residual
         pos = 0
         seg_ms = []
         deltas_acc = (jax.tree.map(jnp.zeros_like, rp)
@@ -197,18 +229,24 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
                 mk_l = leaves(part.masks[ev.fragment])
                 act_l = leaf_active[ev.fragment]
                 if ev.kind == "send":
-                    # snapshot Δ_i = θ_frag − θ_i,frag, quantize for the
-                    # wire, and reduce — the simulated all-reduce starts
-                    # here and lands τ steps later at the apply
+                    # snapshot Δ_i = θ_frag − θ_i,frag (master-vs-master
+                    # under a mixed policy), quantize for the wire, and
+                    # reduce — the simulated all-reduce starts here and
+                    # lands τ steps later at the apply
                     da_l = (leaves(deltas_acc) if compute_cosine
                             else [None] * len(mk_l))
-                    new_pd, new_da = [], []
-                    for on, q, g, r, pe, da in zip(
-                            act_l, mk_l, leaves(gp), leaves(rp),
-                            leaves(pending), da_l):
+                    src_l = (leaves(ist.master) if mixed
+                             else leaves(rp))
+                    res_l = (leaves(residual) if residual is not None
+                             else [None] * len(mk_l))
+                    new_pd, new_da, new_res = [], [], []
+                    for on, q, g, r, pe, da, res in zip(
+                            act_l, mk_l, leaves(gp), src_l,
+                            leaves(pending), da_l, res_l):
                         if not on:
                             new_pd.append(pe)
                             new_da.append(da)
+                            new_res.append(res)
                             continue
                         d = g[None] - r
                         if dcfg.prune_frac > 0:
@@ -216,14 +254,36 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
                                 lambda dd: sign_prune(
                                     dd, dcfg.prune_frac,
                                     mode=kernel_mode))(d)
-                        d = kops.quant_roundtrip(d, qdtype,
-                                                 mode=kernel_mode)
+                        # quantize per replica (vmap over the k axis):
+                        # a real sender's int4 scale blocks never span
+                        # two replicas' deltas, so neither do ours
+                        if res is not None:
+                            d, nres = jax.vmap(
+                                lambda dd, rr: quantize_with_feedback(
+                                    dd, rr, qdtype, mode=kernel_mode)
+                            )(d, res)
+                            # only replicas whose packet enters the
+                            # average consume their residual; dropped /
+                            # inactive replicas never sent, so their
+                            # error keeps accumulating for later rounds
+                            comm = (m > 0).reshape(
+                                (k,) + (1,) * (nres.ndim - 1))
+                            new_res.append(
+                                jnp.where((q > 0) & comm, nres, res))
+                        else:
+                            d = jax.vmap(
+                                lambda dd: kops.quant_roundtrip(
+                                    dd, qdtype, mode=kernel_mode))(d)
+                            new_res.append(res)
                         a = jnp.tensordot(m, d, axes=(0, 0)) / denom
                         new_pd.append(jnp.where(q > 0, a, pe))
                         if compute_cosine:
                             new_da.append(jnp.where(q > 0, d, da))
                     pending = jax.tree_util.tree_unflatten(treedef,
                                                            new_pd)
+                    if residual is not None:
+                        residual = jax.tree_util.tree_unflatten(
+                            treedef, new_res)
                     if compute_cosine:
                         deltas_acc = jax.tree_util.tree_unflatten(
                             treedef, new_da)
@@ -233,14 +293,17 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
                     # outer_opt.update(kind="nesterov")) on the
                     # fragment's leaves only, latched on the first send
                     ok = armed[ev.fragment] > 0
-                    new_gp, new_buf, new_rp = [], [], []
-                    for on, q, g, b, pe, r in zip(
+                    mst_l = leaves(ist.master) if mixed else None
+                    new_gp, new_buf, new_rp, new_mst = [], [], [], []
+                    for li, (on, q, g, b, pe, r) in enumerate(zip(
                             act_l, mk_l, leaves(gp), leaves(buf),
-                            leaves(pending), leaves(rp)):
+                            leaves(pending), leaves(rp))):
+                        w = mst_l[li] if mixed else None
                         if not on:
                             new_gp.append(g)
                             new_buf.append(b)
                             new_rp.append(r)
+                            new_mst.append(w)
                             continue
                         if kernel_mode != "ref":
                             g2, b2 = kops.nesterov_update_tree(
@@ -253,15 +316,26 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
                         g2 = jnp.where(sel, g2, g)
                         new_gp.append(g2)
                         new_buf.append(jnp.where(sel, b2, b))
-                        tgt = (jnp.broadcast_to(g2[None], r.shape)
+                        # merge against the high-precision copy when
+                        # one exists; the replica working copy adopts
+                        # the result at its storage dtype
+                        hp = w if mixed else r
+                        tgt = (jnp.broadcast_to(g2[None], hp.shape)
                                if alpha >= 1.0
-                               else alpha * g2[None] + (1.0 - alpha) * r)
+                               else alpha * g2[None] + (1.0 - alpha) * hp)
                         c = (sel & (adopt.reshape(
                             (k,) + (1,) * g2.ndim) > 0))
-                        new_rp.append(jnp.where(c, tgt, r))
+                        new_rp.append(jnp.where(c, tgt.astype(r.dtype),
+                                                r))
+                        if mixed:
+                            new_mst.append(jnp.where(c, tgt, w))
                     gp = jax.tree_util.tree_unflatten(treedef, new_gp)
                     buf = jax.tree_util.tree_unflatten(treedef, new_buf)
                     rp = jax.tree_util.tree_unflatten(treedef, new_rp)
+                    if mixed:
+                        ist = ist._replace(
+                            master=jax.tree_util.tree_unflatten(
+                                treedef, new_mst))
                     count = jnp.where(ok, count + 1, count)
 
         ms = {key_: jnp.concatenate([sm[key_] for sm in seg_ms], axis=1)
@@ -274,22 +348,27 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
             outer_t=st.outer_t + 1,
             inner_steps_done=st.inner_steps_done + H)
 
-        bpe = kops.TRANSPORT_BYTES_PER_ELEM[qdtype]
         om = {
             "outer_gnorm": diloco._tree_norm(pending),
             "drop_frac": 1.0 - drop_mask.mean(),
             "inner_loss": ms["loss"].mean(),
             "inner_loss_last": ms["loss"][:, -1].mean(),
             # simulated wire bytes one replica sends: peak per sync
-            # event and total over the round's P syncs
+            # event and total over the round's P syncs (exact: int4's
+            # per-block f32 scales are charged per contiguous leaf
+            # region, the unit a real sender packs and quantizes)
             "stream_peak_sync_bytes":
-                jnp.float32(part.peak_fragment_elems() * bpe),
+                jnp.float32(max(sum(kops.transport_bytes(e, qdtype)
+                                    for e in regs)
+                                for regs in part.region_sizes)),
             "stream_round_sync_bytes":
-                jnp.float32(sum(part.sizes) * bpe),
+                jnp.float32(sum(kops.transport_bytes(e, qdtype)
+                                for regs in part.region_sizes
+                                for e in regs)),
         }
         if compute_cosine:
             cm, cs = diloco._pairwise_cosine(deltas_acc, m)
             om["cos_mean"], om["cos_std"] = cm, cs
-        return StreamState(new_base, pending, armed), om
+        return StreamState(new_base, pending, armed, residual), om
 
     return round_body

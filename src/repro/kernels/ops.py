@@ -95,6 +95,35 @@ def adamw_update_tree(params, grads, m, v, *, lr, count, b1=0.9, b2=0.95,
     return leaves(0), leaves(1), leaves(2)
 
 
+def adamw_update_tree_mixed(grads, m, v, master, *, lr, count,
+                            param_dtype, b1=0.9, b2=0.95, eps=1e-8,
+                            weight_decay=0.1, mode: str = "auto"):
+    """One mixed-precision fused AdamW step over a whole tree: the
+    high-precision ``master`` tree is authoritative, grads/moments ride
+    at the replica storage dtype, and the ``param_dtype`` working copy
+    is emitted in the same pass. Returns (params, m, v, master)."""
+    use_kernel, interpret = _resolve(mode)
+    cf = jnp.asarray(count, jnp.float32)
+    c1 = 1.0 - b1 ** cf
+    c2 = 1.0 - b2 ** cf
+
+    def one(g, mm, vv, w):
+        if use_kernel:
+            return _adamw.fused_adamw_mixed(
+                g, mm, vv, w, lr=lr, c1=c1, c2=c2, b1=b1, b2=b2,
+                eps=eps, weight_decay=weight_decay,
+                param_dtype=param_dtype, interpret=interpret)
+        return ref.fused_adamw_mixed(
+            g, mm, vv, w, lr=lr, b1=b1, b2=b2, eps=eps,
+            weight_decay=weight_decay, c1=c1, c2=c2,
+            param_dtype=param_dtype)
+
+    out = jax.tree.map(one, grads, m, v, master)
+    leaves = lambda i: jax.tree.map(
+        lambda t: t[i], out, is_leaf=lambda x: isinstance(x, tuple))
+    return leaves(0), leaves(1), leaves(2), leaves(3)
+
+
 # ---------------------------------------------------------------------------
 # sign pruning — matrix + tree-level
 # ---------------------------------------------------------------------------
@@ -129,11 +158,14 @@ def sign_prune_tree(tree, frac: float, *, mode: str = "auto"):
 # ---------------------------------------------------------------------------
 
 # Wire cost of one transported element: int4 carries 0.5 B of codes
-# plus one f32 scale per 128-element block.
+# plus one f32 scale per 128-element block. The per-element figure for
+# int4 is the large-tensor amortization; exact wire bytes (with the
+# ceil'd per-block scale count) come from ``transport_bytes``.
+QUANT_BLOCK = 128
 TRANSPORT_BYTES_PER_ELEM = {
     "float32": 4.0,
     "bfloat16": 2.0,
-    "int4": 0.5 + 4.0 / 128,
+    "int4": 0.5 + 4.0 / QUANT_BLOCK,
 }
 
 
@@ -154,11 +186,11 @@ def quant_roundtrip(x, dtype: str, *, mode: str = "auto"):
     # int4 oracle on the kernel's block layout, so ref == kernel exactly
     shape, out_dtype = x.shape, x.dtype
     n = x.size
-    rows = -(-n // 128)
+    rows = -(-n // QUANT_BLOCK)
     flat = x.reshape(-1).astype(jnp.float32)
-    if rows * 128 != n:
-        flat = jnp.pad(flat, (0, rows * 128 - n))
-    out = ref.fake_quant(flat.reshape(rows, 128), dtype)
+    if rows * QUANT_BLOCK != n:
+        flat = jnp.pad(flat, (0, rows * QUANT_BLOCK - n))
+    out = ref.fake_quant(flat.reshape(rows, QUANT_BLOCK), dtype)
     return out.reshape(-1)[:n].reshape(shape).astype(out_dtype)
 
 
@@ -170,7 +202,18 @@ def quant_roundtrip_tree(tree, dtype: str, *, mode: str = "auto"):
 
 
 def transport_bytes(n_elems: int, dtype: str) -> float:
-    """Simulated wire bytes for ``n_elems`` outer-gradient elements."""
+    """Simulated wire bytes for ``n_elems`` outer-gradient elements.
+
+    int4 charges 0.5 B of codes per element plus one f32 scale per
+    (started) 128-element block of the flattened tensor — a tensor that
+    does not divide evenly still ships a scale for its ragged tail, so
+    the scale overhead is ceil(n/128) blocks, not n/128.
+    """
+    if dtype not in TRANSPORT_BYTES_PER_ELEM:
+        raise ValueError(f"unknown transport dtype {dtype!r}")
+    if dtype == "int4":
+        blocks = -(-int(n_elems) // QUANT_BLOCK)
+        return n_elems * 0.5 + 4.0 * blocks
     return n_elems * TRANSPORT_BYTES_PER_ELEM[dtype]
 
 

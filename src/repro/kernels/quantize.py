@@ -30,22 +30,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from . import compat
-
-INT4_LEVELS = 7.0
+from .fused_adamw import _to_blocks
+from .ref import INT4_LEVELS
 
 
 def _pad2d(x, block_rows):
-    """Flatten any-shape x to a padded (rows_p, 128) f32 layout.
+    """Flatten any-shape x to a padded (rows_p, 128) f32 layout —
+    the shared block scaffold of ``fused_adamw._to_blocks``.
     Returns (x2d, rows_p, br, n)."""
-    n = x.size
-    cols = 128
-    rows = -(-n // cols)
-    br = min(block_rows, rows)
-    rows_p = -(-rows // br) * br
-    flat = x.reshape(-1).astype(jnp.float32)
-    if rows_p * cols != n:
-        flat = jnp.pad(flat, (0, rows_p * cols - n))
-    return flat.reshape(rows_p, cols), rows_p, br, n
+    (x2d,), rows_p, br, n = _to_blocks(
+        (x.astype(jnp.float32),), block_rows)
+    return x2d, rows_p, br, n
 
 
 def _quantize_kernel(x_ref, q_ref, s_ref):

@@ -60,6 +60,30 @@ def fused_adamw(p, g, m, v, *, lr, b1=0.9, b2=0.95, eps=1e-8,
             v_new.astype(v.dtype))
 
 
+def fused_adamw_mixed(g, m, v, master, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                      weight_decay=0.1, c1=1.0, c2=1.0,
+                      param_dtype=jnp.bfloat16):
+    """Mixed-precision fused AdamW step on one tensor.
+
+    The master copy (typically f32) is the authoritative parameter
+    value; grads/moments arrive at the replica storage dtype (typically
+    bf16). Everything is computed in f32 and stored back at each
+    operand's own dtype; the working copy of the params is emitted at
+    ``param_dtype`` in the same pass — no separate cast chain.
+
+    Returns (p_working, m_new, v_new, master_new).
+    """
+    gf = g.astype(jnp.float32)
+    mf, vf = m.astype(jnp.float32), v.astype(jnp.float32)
+    wf = master.astype(jnp.float32)
+    m_new = b1 * mf + (1.0 - b1) * gf
+    v_new = b2 * vf + (1.0 - b2) * jnp.square(gf)
+    step = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps) + weight_decay * wf
+    w_new = wf - lr * step
+    return (w_new.astype(param_dtype), m_new.astype(m.dtype),
+            v_new.astype(v.dtype), w_new.astype(master.dtype))
+
+
 # ---------------------------------------------------------------------------
 # per-neuron sign pruning (TIES-style) of outer gradients
 # ---------------------------------------------------------------------------

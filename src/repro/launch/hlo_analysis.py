@@ -269,6 +269,37 @@ def roofline(flops: float, hbm_bytes: float, coll: CollectiveStats,
     return terms
 
 
+def memory_items(compiled) -> dict:
+    """Compiled-memory analysis of an AOT-compiled function: argument /
+    output / temp / generated-code sizes in bytes, plus the donation
+    saving (``alias_size_in_bytes`` — bytes of inputs reused as
+    outputs). Returns {} on backends that don't implement
+    ``memory_analysis`` (e.g. some CPU versions) so callers can treat
+    the numbers as best-effort."""
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+        val = getattr(ma, field, None)
+        if val is not None:
+            out[field] = int(val)
+    if out:
+        # peak live estimate: arguments + outputs + temporaries, minus
+        # the donated (aliased) bytes counted twice
+        out["peak_bytes_est"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0))
+    return out
+
+
 def cost_items(compiled) -> tuple[float, float]:
     """(flops, bytes_accessed) from compiled.cost_analysis(), robust to
     the per-backend dict/list shape differences."""

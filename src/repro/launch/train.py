@@ -35,6 +35,20 @@ from repro.models.registry import get_arch, get_smoke_arch
 def build(args):
     arch = (get_smoke_arch if args.smoke else get_arch)(args.arch)
     cfg = arch.cfg
+    if not args.stream_fragments:
+        # these knobs only act on the streaming outer path — silently
+        # running the classic full-precision outer step while the CLI
+        # says "int4" would mislabel every reported number
+        ignored = [flag for flag, on in (
+            ("--outer-grad-dtype", args.outer_grad_dtype != "float32"),
+            ("--stream-alpha", args.stream_alpha != 1.0),
+            ("--stream-tau", args.stream_tau != 0),
+            ("--error-feedback", args.error_feedback)) if on]
+        if ignored:
+            raise SystemExit(
+                f"{', '.join(ignored)} require(s) --stream-fragments "
+                ">= 1 (streaming outer sync); the classic outer step "
+                "would ignore them")
     dcfg = DiLoCoConfig(k=args.k, H=args.H, outer_opt=args.outer_opt,
                         outer_lr=args.outer_lr,
                         outer_momentum=args.outer_momentum,
@@ -45,12 +59,17 @@ def build(args):
                         streaming_fragments=args.stream_fragments,
                         stream_alpha=args.stream_alpha,
                         stream_tau=args.stream_tau,
-                        outer_grad_dtype=args.outer_grad_dtype)
+                        outer_grad_dtype=args.outer_grad_dtype,
+                        error_feedback=args.error_feedback,
+                        param_dtype=args.param_dtype,
+                        master_dtype=args.master_dtype)
     total = args.pretrain_steps + args.rounds * args.H
     tcfg = TrainConfig(inner_lr=args.inner_lr, warmup_steps=args.warmup,
                        total_steps=total, batch_size=args.batch,
                        seq_len=args.seq, seed=args.seed,
-                       kernel_mode=args.kernel_mode)
+                       kernel_mode=args.kernel_mode,
+                       param_dtype=args.param_dtype,
+                       master_dtype=args.master_dtype)
     sampler = make_regime(args.regime, k=args.k,
                           vocab_size=cfg.vocab_size, seed=args.seed,
                           imbalanced=args.weighted)
@@ -72,19 +91,27 @@ def run(args):
     if args.pretrain_steps:
         step = diloco.make_single_worker_step(loss_fn, tcfg,
                                               total_steps=tcfg.total_steps)
-        from repro.optim import adamw
-        opt = adamw.init(params)
+        from repro.optim import adamw, precision
+        pol = precision.policy_of(tcfg)
+        opt = adamw.init(params, policy=pol)
+        work = precision.cast_tree(params, pol.param_dtype)
         for i in range(args.pretrain_steps):
             key, sub = jax.random.split(key)
             batch = {"tokens": sampler.sample_validation(
                 sub, args.batch, args.seq)}
-            params, opt, m = step(params, opt, batch, jnp.asarray(i))
+            work, opt, m = step(work, opt, batch, jnp.asarray(i))
             if (i + 1) % args.log_every == 0:
-                vl = float(ev(params, val))
+                vl = float(ev(work, val))
                 history.append({"phase": "pretrain", "inner_steps": i + 1,
                                 "val_loss": vl})
                 print(f"[pretrain {i + 1}] loss={float(m['loss']):.4f} "
                       f"val={vl:.4f}", flush=True)
+        # hand the master-precision params to the DiLoCo phase (the
+        # working copy is a rounded view under a mixed policy); the
+        # upcast keeps the DiLoCo globals/outer state f32 even under
+        # the pure-bf16 policy, where no master exists
+        params = precision.cast_tree(adamw.master_params(work, opt),
+                                     jnp.float32)
 
     # ---- DiLoCo phase ----
     if dcfg.streaming_fragments:
@@ -240,6 +267,22 @@ def make_parser():
                     choices=["float32", "bfloat16", "int4"],
                     help="transport precision of outer gradients on "
                          "the simulated wire")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="streaming: keep each replica's transport "
+                         "quantization residual and add it to the next "
+                         "round's delta (kills the int4/bf16 rounding "
+                         "bias at no wire cost)")
+    ap.add_argument("--param-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="storage dtype of the per-replica working "
+                         "params + AdamW moments (bfloat16 halves the "
+                         "donated params+moments carry)")
+    ap.add_argument("--master-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="storage dtype of the master-side state; when "
+                         "wider than --param-dtype each replica carries "
+                         "a master copy in its AdamW state and outer "
+                         "deltas are computed master-vs-master")
     ap.add_argument("--legacy-loop", action="store_true",
                     help="use the per-round Python loop instead of the "
                          "scanned driver")

@@ -2,30 +2,72 @@
 
 Decoupled weight decay per Loshchilov & Hutter 2019; bias-corrected
 moments. The functional API mirrors optax: ``init`` then ``update``.
+
+Mixed precision (see ``optim/precision.py``): under a mixed policy the
+state additionally carries a high-precision ``master`` copy of the
+params, the working params and the m/v moments ride at the (narrower)
+replica dtype, and ``update`` routes through the mixed fused kernel —
+one pass that updates f32 m/v/master and emits the bf16 working copy.
+Under the default all-f32 policy ``master`` is None and both the state
+layout and the numerics are bit-identical to the historical
+implementation.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from . import precision
 
 
 class AdamWState(NamedTuple):
     m: dict
     v: dict
     count: jnp.ndarray
+    # High-precision master params under a mixed policy; None (an empty
+    # pytree node — zero leaves, zero bytes) otherwise.
+    master: Any = None
 
 
-def init(params) -> AdamWState:
-    zeros = lambda p: jnp.zeros_like(p)
-    return AdamWState(m=jax.tree.map(zeros, params),
-                      v=jax.tree.map(zeros, params),
-                      count=jnp.zeros((), jnp.int32))
+def init(params, *, policy: precision.Policy | None = None) -> AdamWState:
+    """``params`` arrive at master precision (the caller's tree). With
+    a ``policy`` the m/v moments are allocated at the replica
+    ``param_dtype`` whatever dtype the incoming params have; a mixed
+    policy additionally keeps a ``master_dtype`` master copy. Without a
+    policy the moments simply mirror the params' dtypes (the legacy
+    behavior)."""
+    if policy is None or not policy.mixed:
+        if policy is None:
+            zeros = lambda p: jnp.zeros_like(p)
+        else:
+            zeros = lambda p: jnp.zeros(p.shape, policy.param_dtype)
+        return AdamWState(m=jax.tree.map(zeros, params),
+                          v=jax.tree.map(zeros, params),
+                          count=jnp.zeros((), jnp.int32))
+    zeros = lambda p: jnp.zeros(p.shape, policy.param_dtype)
+    # jnp.array (not astype): the master must be a fresh buffer, never
+    # an alias of the caller's params — downstream steps donate the
+    # state, and donating an aliased master would delete the caller's
+    # tree (astype is the identity when the dtypes already match)
+    return AdamWState(
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        count=jnp.zeros((), jnp.int32),
+        master=jax.tree.map(
+            lambda p: jnp.array(p, dtype=policy.master_dtype), params))
+
+
+def master_params(params, state: AdamWState):
+    """The authoritative (master-precision) params: the state's master
+    copy under a mixed policy, the working params otherwise."""
+    return params if state.master is None else state.master
 
 
 def update(grads, state: AdamWState, params, *, lr, b1=0.9, b2=0.95,
-           eps=1e-8, weight_decay=0.1, mode: str = "ref"):
+           eps=1e-8, weight_decay=0.1, mode: str = "ref",
+           policy: precision.Policy | None = None):
     """One AdamW step. ``lr`` may be a scalar traced value (schedule).
 
     ``mode`` selects the backend: ``ref`` is the legacy pure-jnp tree
@@ -33,8 +75,32 @@ def update(grads, state: AdamWState, params, *, lr, b1=0.9, b2=0.95,
     single-VMEM-pass kernel in ``repro.kernels`` (one read of each of
     p/g/m/v, one write of p/m/v per step instead of XLA's split
     fusions).
+
+    Under a mixed ``policy`` the update reads the state's master copy
+    (``params`` is the derived working copy and carries no extra
+    information), runs in f32, and returns the new working params at
+    ``param_dtype`` — ``mode="ref"`` uses the jnp oracle, kernel modes
+    the mixed Pallas kernel.
     """
     count = state.count + 1
+    if state.master is not None and (policy is None or not policy.mixed):
+        # silently proceeding would drop (or desync) the f32 master and
+        # keep training from the rounded working copy
+        raise ValueError(
+            "state carries a master copy but no mixed policy was "
+            "passed: thread the same precision policy through init "
+            "and update")
+    if policy is not None and policy.mixed:
+        if state.master is None:
+            raise ValueError(
+                "mixed-policy update needs a master copy in the state: "
+                "build it with adamw.init(params, policy=policy)")
+        from repro.kernels import ops as kops
+        new_p, new_m, new_v, new_w = kops.adamw_update_tree_mixed(
+            grads, state.m, state.v, state.master, lr=lr, count=count,
+            param_dtype=policy.param_dtype, b1=b1, b2=b2, eps=eps,
+            weight_decay=weight_decay, mode=mode)
+        return new_p, AdamWState(new_m, new_v, count, new_w)
     if mode != "ref":
         from repro.kernels import ops as kops
         new_p, new_m, new_v = kops.adamw_update_tree(
@@ -45,12 +111,17 @@ def update(grads, state: AdamWState, params, *, lr, b1=0.9, b2=0.95,
     c2 = 1.0 - b2 ** count.astype(jnp.float32)
 
     def upd(p, g, m, v):
-        m = b1 * m + (1.0 - b1) * g
-        v = b2 * v + (1.0 - b2) * jnp.square(g)
-        mhat = m / c1
-        vhat = v / c2
-        step = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p
-        return p - lr * step, m, v
+        # accumulate in f32 whatever the storage dtype (identity for
+        # f32 state, same math as ref.fused_adamw / the kernels for
+        # low-precision state), then round each output back to storage
+        pf, gf = p.astype(jnp.float32), g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1.0 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1.0 - b2) * jnp.square(gf)
+        mhat = m_new / c1
+        vhat = v_new / c2
+        step = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * pf
+        return ((pf - lr * step).astype(p.dtype), m_new.astype(m.dtype),
+                v_new.astype(v.dtype))
 
     out = jax.tree.map(upd, params, grads, state.m, state.v)
     new_params = jax.tree.map(lambda t: t[0], out,
@@ -67,4 +138,6 @@ def clip_by_global_norm(grads, max_norm: float):
     gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
                       for g in leaves))
     scale = jnp.minimum(1.0, max_norm / (gn + 1e-12))
-    return jax.tree.map(lambda g: g * scale, grads), gn
+    # the cast keeps low-precision grads at their storage dtype (f32
+    # grads are untouched — scale is f32, so this is the identity)
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn

@@ -1,0 +1,101 @@
+"""Mixed-precision replica-state policy for the DiLoCo hot path.
+
+DiLoCo's per-worker memory bill is the k-fold replica state: every
+replica carries its params plus AdamW moments, all donated through the
+scanned driver. The precision policy splits that state into two tiers:
+
+  param_dtype   storage dtype of the *replica-side* state — the working
+                params the forward/backward runs on AND the AdamW m/v
+                moments. ``bfloat16`` halves the params+moments carry
+                (12 B/param -> 6 B/param per replica).
+  master_dtype  storage dtype of the *master-side* state. When it is
+                higher precision than ``param_dtype`` the inner AdamW
+                state carries a per-replica master copy of the params at
+                this dtype: the fused update reads bf16 grads/moments
+                plus the f32 master, runs the math in f32, writes the
+                f32 master back and emits the bf16 working copy — so
+                param round-off never accumulates across inner steps,
+                and the outer deltas Δ_i = θ − θ_i are computed
+                master-vs-master at full precision.
+
+Policies (the only supported combinations):
+
+  (float32, float32)   — the default; bit-identical to the historical
+                         all-f32 path (no master copy is allocated).
+  (bfloat16, float32)  — THE mixed policy: bf16 working params + bf16
+                         moments + f32 master. Replica params+moments
+                         carry halves; the f32 master adds 4 B/param,
+                         still a net reduction with full-precision
+                         outer gradients.
+  (bfloat16, bfloat16) — pure low-precision replica state (no master;
+                         the fused kernel still accumulates in f32
+                         before rounding stores). Smallest carry,
+                         outer deltas quantize at bf16.
+
+``master_dtype`` below ``param_dtype`` is rejected — a master that is
+*less* precise than the working copy is meaningless.
+
+The global parameters and the outer optimizer buffers always stay at
+the caller's precision (f32 everywhere in this repo): they exist once,
+not k times, so shrinking them saves little and costs outer-step
+accuracy.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+DTYPES = {
+    "float32": jnp.float32,
+    "bfloat16": jnp.bfloat16,
+}
+
+# storage width used for validation: master must not be narrower
+_WIDTH = {"float32": 4, "bfloat16": 2}
+
+
+class Policy(NamedTuple):
+    """Resolved precision policy. Fields are jnp dtypes."""
+    param_dtype: jnp.dtype
+    master_dtype: jnp.dtype
+
+    @property
+    def mixed(self) -> bool:
+        """True when a separate master copy is carried (param storage is
+        narrower than master storage)."""
+        return self.param_dtype != self.master_dtype
+
+
+def make_policy(param_dtype: str = "float32",
+                master_dtype: str = "float32") -> Policy:
+    for name, val in (("param_dtype", param_dtype),
+                      ("master_dtype", master_dtype)):
+        if val not in DTYPES:
+            raise ValueError(
+                f"{name} must be one of {sorted(DTYPES)}, got {val!r}")
+    if _WIDTH[master_dtype] < _WIDTH[param_dtype]:
+        raise ValueError(
+            f"master_dtype ({master_dtype}) must be at least as wide as "
+            f"param_dtype ({param_dtype})")
+    return Policy(jnp.dtype(DTYPES[param_dtype]),
+                  jnp.dtype(DTYPES[master_dtype]))
+
+
+def policy_of(cfg) -> Policy:
+    """Resolve the policy of a TrainConfig / DiLoCoConfig (missing
+    fields default to float32, i.e. the legacy path)."""
+    return make_policy(getattr(cfg, "param_dtype", "float32"),
+                       getattr(cfg, "master_dtype", "float32"))
+
+
+def cast_tree(tree, dtype):
+    """Cast every leaf to ``dtype`` (no-op leaves stay unchanged)."""
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def tree_bytes(tree) -> int:
+    """Total storage bytes of a pytree's leaves (None-safe)."""
+    return int(sum(l.size * l.dtype.itemsize
+                   for l in jax.tree.leaves(tree)))

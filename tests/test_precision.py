@@ -1,0 +1,429 @@
+"""Tests for the mixed-precision replica-state policy
+(optim/precision.py, the mixed fused-AdamW kernel, and its threading
+through the DiLoCo/streaming drivers) and the PR's satellites
+(error-feedback transport, exact int4 transport-bytes accounting).
+
+Pins the policy's contracts:
+  * (float32, float32) — the default — is bit-identical to a
+    policy-less config through the scanned driver;
+  * the mixed state layout is what the memory accounting claims:
+    bf16 working params + bf16 moments + f32 master, global/outer f32;
+  * the mixed Pallas kernel (interpret mode) matches its jnp oracle
+    elementwise, and a full mixed round matches ref numerics;
+  * the bf16 policy tracks the f32 policy's loss on the toy config;
+  * donation still holds under the new state layout;
+  * error feedback drives the mean transport quantization bias to ~0;
+  * ``transport_bytes`` charges int4's f32 scale per *started* block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import DiLoCoConfig, TrainConfig, ModelConfig
+from repro.core import diloco, streaming
+from repro.data.sharding import make_regime
+from repro.kernels import fused_adamw as kadamw
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.models.registry import Arch
+from repro.optim import adamw, precision
+
+K, H, B, S, VOCAB = 2, 4, 2, 16, 64
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ModelConfig(name="tiny", family="dense", n_layers=2,
+                      d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                      vocab_size=VOCAB, remat=False, attn_chunk=32)
+    arch = Arch(cfg=cfg)
+    loss_fn = lambda p, b: arch.loss(p, b)
+    sampler = make_regime("non_iid", k=K, vocab_size=VOCAB, seed=0)
+    params, _ = arch.init(jax.random.PRNGKey(0), cfg)
+    return arch, loss_fn, sampler, params
+
+
+def _cfgs(rounds, pd="float32", md="float32", kernel_mode="ref", **kw):
+    dcfg = DiLoCoConfig(k=K, H=H, param_dtype=pd, master_dtype=md,
+                        kernel_mode=kernel_mode, **kw)
+    tcfg = TrainConfig(inner_lr=3e-3, warmup_steps=2,
+                       total_steps=rounds * H, batch_size=B, seq_len=S,
+                       param_dtype=pd, master_dtype=md,
+                       kernel_mode=kernel_mode)
+    return dcfg, tcfg
+
+
+def _run(loss_fn, sampler, params, dcfg, tcfg, rounds, *, donate=False,
+         key=5):
+    run = diloco.make_run(loss_fn, sampler.sample_all_shards, dcfg,
+                          tcfg, rounds_per_call=rounds,
+                          total_steps=rounds * H, batch_size=B,
+                          seq_len=S, donate=donate)
+    state = (streaming.init_state(params, dcfg)
+             if dcfg.streaming_fragments
+             else diloco.init_state(params, dcfg))
+    return run(state, jax.random.PRNGKey(key))
+
+
+# ---------------------------------------------------------------------------
+# policy plumbing
+# ---------------------------------------------------------------------------
+
+def test_policy_validation():
+    pol = precision.make_policy("bfloat16", "float32")
+    assert pol.mixed
+    assert not precision.make_policy().mixed
+    assert not precision.make_policy("bfloat16", "bfloat16").mixed
+    with pytest.raises(ValueError):
+        precision.make_policy("float32", "bfloat16")   # master narrower
+    with pytest.raises(ValueError):
+        precision.make_policy("float16", "float32")    # unknown dtype
+
+
+def test_round_builder_rejects_policy_mismatch(setup):
+    arch, loss_fn, sampler, params = setup
+    dcfg, _ = _cfgs(1, pd="bfloat16")
+    _, tcfg = _cfgs(1)                 # f32 inner step vs bf16 state
+    with pytest.raises(ValueError):
+        diloco._make_round_body(loss_fn, sampler.sample_all_shards,
+                                dcfg, tcfg)
+
+
+def test_f32_policy_bit_identical_to_default(setup):
+    """Explicit (float32, float32) == a policy-less config, to the bit
+    (the new code path is a strict no-op at the default policy)."""
+    arch, loss_fn, sampler, params = setup
+    R = 3
+    dcfg_d = DiLoCoConfig(k=K, H=H)
+    tcfg_d = TrainConfig(inner_lr=3e-3, warmup_steps=2,
+                         total_steps=R * H, batch_size=B, seq_len=S)
+    st_d, ms_d = _run(loss_fn, sampler, params, dcfg_d, tcfg_d, R)
+    dcfg_f, tcfg_f = _cfgs(R, pd="float32", md="float32")
+    st_f, ms_f = _run(loss_fn, sampler, params, dcfg_f, tcfg_f, R)
+    for a, b in zip(jax.tree.leaves(st_d), jax.tree.leaves(st_f)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(ms_d["inner_loss"]),
+                                  np.asarray(ms_f["inner_loss"]))
+
+
+def test_mixed_state_layout(setup):
+    """The byte accounting the memory benchmark gates on: bf16 working
+    params + bf16 moments + f32 per-replica master; f32 global/outer;
+    no master under the uniform policies."""
+    arch, loss_fn, sampler, params = setup
+    dcfg, _ = _cfgs(1, pd="bfloat16", md="float32")
+    st = diloco.init_state(params, dcfg)
+    assert all(l.dtype == jnp.bfloat16
+               for l in jax.tree.leaves(st.replica_params))
+    assert all(l.dtype == jnp.bfloat16
+               for l in jax.tree.leaves(st.inner_state.m))
+    assert all(l.dtype == jnp.bfloat16
+               for l in jax.tree.leaves(st.inner_state.v))
+    assert all(l.dtype == jnp.float32
+               for l in jax.tree.leaves(st.inner_state.master))
+    assert all(l.dtype == jnp.float32
+               for l in jax.tree.leaves(st.global_params))
+    assert all(l.dtype == jnp.float32
+               for l in jax.tree.leaves(st.outer_state.buf))
+    # master leaves carry the replica axis and start equal to params
+    g0 = jax.tree.leaves(params)[0]
+    w0 = jax.tree.leaves(st.inner_state.master)[0]
+    assert w0.shape == (K,) + g0.shape
+    np.testing.assert_array_equal(np.asarray(w0[0]), np.asarray(g0))
+    # params+moments tier halves: 2+2+2 vs 4+4+4 bytes per element
+    st_f = diloco.init_state(params, DiLoCoConfig(k=K, H=H))
+    tb = precision.tree_bytes
+    mixed = (tb(st.replica_params) + tb(st.inner_state.m)
+             + tb(st.inner_state.v))
+    base = (tb(st_f.replica_params) + tb(st_f.inner_state.m)
+            + tb(st_f.inner_state.v))
+    assert base == 2 * mixed
+    assert st_f.inner_state.master is None
+
+
+# ---------------------------------------------------------------------------
+# mixed fused-AdamW kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(64,), (33, 7), (4, 32, 16)])
+def test_mixed_kernel_interpret_matches_oracle(shape):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    g = (jax.random.normal(ks[0], shape) * 0.1).astype(jnp.bfloat16)
+    m = (jax.random.normal(ks[1], shape) * 0.05).astype(jnp.bfloat16)
+    v = (jax.random.uniform(ks[2], shape) * 0.01).astype(jnp.bfloat16)
+    w = jax.random.normal(ks[3], shape)
+    kw = dict(lr=1e-2, c1=0.5, c2=0.3, b1=0.9, b2=0.95, eps=1e-8,
+              weight_decay=0.1, param_dtype=jnp.bfloat16)
+    ref_out = kref.fused_adamw_mixed(g, m, v, w, **kw)
+    ker_out = kadamw.fused_adamw_mixed(g, m, v, w, interpret=True, **kw)
+    assert ker_out[0].dtype == jnp.bfloat16    # working copy
+    assert ker_out[3].dtype == jnp.float32     # master
+    for r, k_ in zip(ref_out, ker_out):
+        # f32 outputs must agree to float tolerance; bf16 outputs may
+        # land one bf16 ulp apart when the f32 values straddle a
+        # rounding boundary
+        tol = dict(rtol=2e-6, atol=2e-6) if r.dtype == jnp.float32 \
+            else dict(rtol=2.0 ** -7, atol=2.0 ** -7)
+        np.testing.assert_allclose(
+            np.asarray(r, np.float32), np.asarray(k_, np.float32),
+            **tol)
+
+
+def test_mixed_update_tree_dispatch():
+    """adamw.update under a mixed policy: ref and interpret agree, the
+    master is authoritative, and the working copy is its rounding."""
+    pol = precision.make_policy("bfloat16", "float32")
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (37, 9))}
+    grads = {"w": (jax.random.normal(jax.random.PRNGKey(1), (37, 9))
+                   * 0.1).astype(jnp.bfloat16)}
+    st = adamw.init(params, policy=pol)
+    work = precision.cast_tree(params, pol.param_dtype)
+    outs = {}
+    for mode in ("ref", "interpret"):
+        p2, st2 = adamw.update(grads, st, work, lr=1e-2, mode=mode,
+                               policy=pol)
+        assert p2["w"].dtype == jnp.bfloat16
+        assert st2.master["w"].dtype == jnp.float32
+        np.testing.assert_array_equal(
+            np.asarray(p2["w"], np.float32),
+            np.asarray(st2.master["w"].astype(jnp.bfloat16), np.float32))
+        outs[mode] = (p2, st2)
+    for a, b in zip(jax.tree.leaves(outs["ref"]),
+                    jax.tree.leaves(outs["interpret"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-5, atol=2e-6)
+
+
+def test_mixed_full_round_interpret_matches_ref(setup):
+    """A full mixed-policy DiLoCo round through the mixed Pallas kernel
+    (interpret) matches the jnp oracle path."""
+    arch, loss_fn, sampler, params = setup
+    states = {}
+    for mode in ("ref", "interpret"):
+        dcfg, tcfg = _cfgs(1, pd="bfloat16", md="float32",
+                           kernel_mode=mode)
+        rnd = diloco.make_round(loss_fn, sampler.sample_all_shards,
+                                dcfg, tcfg, total_steps=H, batch_size=B,
+                                seq_len=S)
+        st, _ = rnd(diloco.init_state(params, dcfg),
+                    jax.random.PRNGKey(3))
+        states[mode] = st
+    for a, b in zip(jax.tree.leaves(states["ref"]),
+                    jax.tree.leaves(states["interpret"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# training behavior of the bf16 policy
+# ---------------------------------------------------------------------------
+
+def test_bf16_policy_loss_tracks_f32(setup):
+    """The bf16 replica policy trains: losses stay finite and the final
+    losses sit within a small gap of the f32 policy on the toy config."""
+    arch, loss_fn, sampler, params = setup
+    R = 3
+    finals = {}
+    for pd, md in (("float32", "float32"), ("bfloat16", "float32")):
+        dcfg, tcfg = _cfgs(R, pd=pd, md=md)
+        _, ms = _run(loss_fn, sampler, params, dcfg, tcfg, R)
+        losses = np.asarray(ms["inner_loss"], np.float32)
+        assert np.isfinite(losses).all()
+        finals[pd] = float(losses[-1])
+    assert abs(finals["bfloat16"] - finals["float32"]) < 0.05
+    # training actually progressed under bf16
+    dcfg, tcfg = _cfgs(R, pd="bfloat16", md="float32")
+    _, ms = _run(loss_fn, sampler, params, dcfg, tcfg, R)
+    losses = np.asarray(ms["inner_loss"], np.float32)
+    assert losses[-1] < losses[0]
+
+
+def test_mixed_outer_deltas_use_masters(setup):
+    """The outer step reads the f32 masters, not the rounded bf16
+    working copies: zero master drift ⇒ zero outer gradient even though
+    the bf16 copies differ from the global params by rounding."""
+    arch, loss_fn, sampler, params = setup
+    dcfg, _ = _cfgs(1, pd="bfloat16", md="float32")
+    st = diloco.init_state(params, dcfg)
+    st2, m = diloco.outer_step(st, dcfg)
+    # masters == global at init, so the averaged delta is exactly 0
+    assert float(m["outer_gnorm"]) == 0.0
+    for a, b in zip(jax.tree.leaves(st2.global_params),
+                    jax.tree.leaves(st.global_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_mixed_donation_and_chunking(setup):
+    """donate=True with the mixed state layout: repeated chunked calls
+    reuse the donated carry, dtypes survive, caller params stay alive."""
+    arch, loss_fn, sampler, params = setup
+    R = 2
+    dcfg, tcfg = _cfgs(2 * R, pd="bfloat16", md="float32")
+    run = diloco.make_run(loss_fn, sampler.sample_all_shards, dcfg,
+                          tcfg, rounds_per_call=R, total_steps=2 * R * H,
+                          batch_size=B, seq_len=S, donate=True)
+    state = diloco.init_state(params, dcfg)
+    state, _ = run(state, jax.random.PRNGKey(1))
+    state, ms = run(state, jax.random.PRNGKey(2))
+    assert all(l.dtype == jnp.bfloat16
+               for l in jax.tree.leaves(state.replica_params))
+    assert all(l.dtype == jnp.float32
+               for l in jax.tree.leaves(state.inner_state.master))
+    assert np.isfinite(np.asarray(ms["inner_loss"], np.float32)).all()
+    assert np.isfinite(float(jax.tree.leaves(params)[0].sum()))
+
+
+def test_mixed_streaming_round_finite(setup):
+    """Streaming (P=2, τ=1, α=0.5, int4) under the mixed policy: state
+    stays finite, replicas stay bf16, masters stay f32."""
+    arch, loss_fn, sampler, params = setup
+    R = 3
+    dcfg, tcfg = _cfgs(R, pd="bfloat16", md="float32",
+                       streaming_fragments=2, stream_alpha=0.5,
+                       stream_tau=1, outer_grad_dtype="int4")
+    ss, ms = _run(loss_fn, sampler, params, dcfg, tcfg, R)
+    assert np.all(np.asarray(ss.armed) == 1.0)
+    for leaf in jax.tree.leaves(ss):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()
+    assert all(l.dtype == jnp.bfloat16
+               for l in jax.tree.leaves(ss.replica_params))
+    assert all(l.dtype == jnp.float32
+               for l in jax.tree.leaves(ss.inner_state.master))
+    assert np.isfinite(np.asarray(ms["inner_loss"], np.float32)).all()
+
+
+def test_single_worker_mixed_step(setup):
+    """The pretraining/single-worker step under the mixed policy: the
+    f32 master in the optimizer state is authoritative and the working
+    params remain its bf16 rounding after every step."""
+    arch, loss_fn, sampler, params = setup
+    pol = precision.make_policy("bfloat16", "float32")
+    tcfg = TrainConfig(inner_lr=3e-3, warmup_steps=2, total_steps=2 * H,
+                       batch_size=B, seq_len=S, param_dtype="bfloat16",
+                       master_dtype="float32")
+    step = diloco.make_single_worker_step(loss_fn, tcfg,
+                                          total_steps=2 * H)
+    opt = adamw.init(params, policy=pol)
+    work = precision.cast_tree(params, pol.param_dtype)
+    batch = {"tokens": sampler.sample_validation(
+        jax.random.PRNGKey(3), B, S)}
+    for i in range(3):
+        work, opt, m = step(work, opt, batch, jnp.asarray(i))
+    assert np.isfinite(float(m["loss"]))
+    for w, p in zip(jax.tree.leaves(adamw.master_params(work, opt)),
+                    jax.tree.leaves(work)):
+        assert w.dtype == jnp.float32 and p.dtype == jnp.bfloat16
+        np.testing.assert_array_equal(
+            np.asarray(w.astype(jnp.bfloat16), np.float32),
+            np.asarray(p, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# satellites: error-feedback transport, exact transport bytes
+# ---------------------------------------------------------------------------
+
+def test_error_feedback_kills_quantization_bias():
+    """Sending the same delta through int4 transport over many rounds:
+    without feedback the rounding bias persists forever; with the
+    residual accumulator the *mean* transported value converges to the
+    true delta (bias → 0, bounded by one quantization step / T)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 128)) * 0.7
+    xs = np.asarray(x)
+    scale = np.abs(xs).max(axis=1, keepdims=True) / 7.0    # int4 levels
+    T = 64
+    plain = np.asarray(kops.quant_roundtrip(x, "int4", mode="ref"))
+    bias_plain = np.abs(plain - xs).max()
+    res = jnp.zeros_like(x)
+    acc = np.zeros_like(xs)
+    for _ in range(T):
+        q, res = streaming.quantize_with_feedback(x, res, "int4")
+        acc += np.asarray(q)
+    bias_ef = np.abs(acc / T - xs).max()
+    # the residual is bounded by one quantization step, so the mean
+    # bias decays like scale/T — far below the one-shot bias
+    assert bias_ef <= (scale.max() + 1e-6) / T + 1e-7
+    assert bias_ef < bias_plain / 10
+    # float32 transport: feedback is exact pass-through
+    q, res = streaming.quantize_with_feedback(x, jnp.zeros_like(x),
+                                              "float32")
+    np.testing.assert_array_equal(np.asarray(q), xs)
+    assert float(jnp.abs(res).max()) == 0.0
+
+
+def test_error_feedback_streaming_round(setup):
+    """error_feedback=True threads through the streaming driver: the
+    residual carry exists, is finite and non-zero after quantized
+    sends, and is None when disabled or transport is f32."""
+    arch, loss_fn, sampler, params = setup
+    R = 2
+    dcfg, tcfg = _cfgs(R, streaming_fragments=2, stream_alpha=0.5,
+                       outer_grad_dtype="int4", error_feedback=True)
+    ss, _ = _run(loss_fn, sampler, params, dcfg, tcfg, R)
+    assert ss.residual is not None
+    res_norm = sum(float(jnp.sum(jnp.abs(l)))
+                   for l in jax.tree.leaves(ss.residual))
+    assert np.isfinite(res_norm) and res_norm > 0.0
+    leaf = jax.tree.leaves(ss.residual)[0]
+    assert leaf.shape[0] == K                      # per-replica
+    # off by default / meaningless for f32 transport -> no carry
+    dcfg_off, _ = _cfgs(R, streaming_fragments=2,
+                        outer_grad_dtype="int4")
+    assert streaming.init_state(params, dcfg_off).residual is None
+    dcfg_f32, _ = _cfgs(R, streaming_fragments=2, error_feedback=True)
+    assert streaming.init_state(params, dcfg_f32).residual is None
+
+
+def test_error_feedback_skips_dropped_replicas(setup):
+    """A replica whose packet is dropped never sent anything, so its
+    residual must not be consumed: it stays at its initial zeros while
+    the communicating replica's residual becomes non-zero."""
+    arch, loss_fn, sampler, params = setup
+    R = 2
+    dcfg, tcfg = _cfgs(R, streaming_fragments=2, stream_alpha=0.5,
+                       outer_grad_dtype="int4", error_feedback=True)
+    run = diloco.make_run(loss_fn, sampler.sample_all_shards, dcfg,
+                          tcfg, rounds_per_call=R, total_steps=R * H,
+                          batch_size=B, seq_len=S, donate=False)
+    drops = np.ones((R, K), np.float32)
+    drops[:, 1] = 0.0                      # replica 1 always dropped
+    ss, _ = run(streaming.init_state(params, dcfg),
+                jax.random.PRNGKey(5), jnp.asarray(drops))
+    kept = sum(float(jnp.sum(jnp.abs(l[0])))
+               for l in jax.tree.leaves(ss.residual))
+    dropped = sum(float(jnp.sum(jnp.abs(l[1])))
+                  for l in jax.tree.leaves(ss.residual))
+    assert kept > 0.0
+    assert dropped == 0.0
+
+
+def test_partition_region_sizes_cover_fragments(setup):
+    """region_sizes partitions each fragment's elements into per-leaf
+    contiguous regions: regions sum to the fragment size and every
+    region is positive (the wire-byte accounting unit)."""
+    from repro.core import fragments
+    _, _, _, params = setup
+    for P in (1, 2, 4):
+        part = fragments.partition_params(params, P)
+        assert len(part.region_sizes) == P
+        for size, regs in zip(part.sizes, part.region_sizes):
+            assert sum(regs) == size
+            assert all(e > 0 for e in regs)
+
+
+def test_transport_bytes_counts_started_blocks():
+    """int4 pays one f32 scale per *started* 128-element block — the
+    ragged tail still ships a scale."""
+    assert kops.transport_bytes(128, "int4") == 128 * 0.5 + 4.0
+    assert kops.transport_bytes(129, "int4") == 129 * 0.5 + 2 * 4.0
+    assert kops.transport_bytes(1, "int4") == 0.5 + 4.0
+    assert kops.transport_bytes(256, "int4") == 256 * 0.5 + 2 * 4.0
+    # non-blocked dtypes are linear
+    assert kops.transport_bytes(1000, "float32") == 4000.0
+    assert kops.transport_bytes(1001, "bfloat16") == 2002.0
+    with pytest.raises(ValueError):
+        kops.transport_bytes(10, "fp8")
