@@ -37,9 +37,22 @@ Run:  PYTHONPATH=src python -m benchmarks.streaming [--rounds 6 ...]
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
+import sys
 import time
+
+# standalone runs get 8 fake CPU devices so the sharded-transport
+# configs exercise REAL pod-axis collectives; under benchmarks.run
+# (jax already imported by an earlier module) the sharded rows are
+# skipped instead — set the flag in the environment to include them
+if "jax" not in sys.modules and \
+        "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8 "
+        + os.environ.get("XLA_FLAGS", ""))
 
 import jax
 import jax.numpy as jnp
@@ -47,9 +60,11 @@ import numpy as np
 
 from . import common as C
 from repro.configs.base import DiLoCoConfig, TrainConfig
-from repro.core import diloco, fragments, streaming
+from repro.core import diloco, fragments, pod_collectives, streaming
 from repro.kernels import ops as kops
 from repro.kernels.ops import transport_bytes
+from repro.launch import hlo_analysis as H_hlo
+from repro.launch.mesh import make_pod_mesh
 
 ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
 OUT_PATH = os.path.join(ROOT, "BENCH_streaming.json")
@@ -59,19 +74,33 @@ BANDWIDTHS = [1e6, 1e7, 1e8, 1e9, 1e10, 1e11]   # bytes/s
 
 def stream_configs(k: int, H: int):
     """(name, DiLoCoConfig) list. The first entry is the synchronous
-    baseline; stream_P1_f32 is the bit-identity gate."""
+    baseline; stream_P1_f32 is the bit-identity gate; *_sharded rows
+    rerun a simulated config with transport="sharded" — one replica
+    per pod on a fake-device mesh, real pod-axis collectives — and
+    gate on state parity against their simulated twin."""
     tau = min(1, H - 1)
-    return [
+    P4 = min(4, H)
+    cfgs = [
         ("sync", DiLoCoConfig(k=k, H=H)),
         ("stream_P1_f32",
          DiLoCoConfig(k=k, H=H, streaming_fragments=1)),
+        ("stream_P2_f32",
+         DiLoCoConfig(k=k, H=H, streaming_fragments=2, stream_alpha=0.5,
+                      stream_tau=tau)),
         ("stream_P2_bf16",
          DiLoCoConfig(k=k, H=H, streaming_fragments=2, stream_alpha=0.5,
                       stream_tau=tau, outer_grad_dtype="bfloat16")),
         ("stream_P4_int4",
-         DiLoCoConfig(k=k, H=H, streaming_fragments=4, stream_alpha=0.5,
+         DiLoCoConfig(k=k, H=H, streaming_fragments=P4, stream_alpha=0.5,
                       stream_tau=tau, outer_grad_dtype="int4")),
     ]
+    if len(jax.devices()) % k == 0 and len(jax.devices()) >= k:
+        for src in ("stream_P2_f32", "stream_P4_int4"):
+            base = dict(cfgs)[src]
+            cfgs.append((src + "_sharded",
+                         dataclasses.replace(base,
+                                             transport="sharded")))
+    return cfgs
 
 
 def comm_profile(params, dcfg: DiLoCoConfig) -> dict:
@@ -103,16 +132,25 @@ def comm_profile(params, dcfg: DiLoCoConfig) -> dict:
 
 def bench_one(loss_fn, sampler, params, name, dcfg, tcfg, *, rounds,
               batch, seq, val, seed, repeats):
-    """Time one driver config (min-of-repeats after warmup)."""
+    """Time one driver config (min-of-repeats after warmup). Sharded
+    configs get a one-replica-band-per-pod mesh and an HLO wire
+    profile (real pod-axis all-reduce count/bytes + the interleaving
+    structure) alongside the timing."""
+    mesh = None
+    if getattr(dcfg, "transport", "simulated") == "sharded":
+        mesh = make_pod_mesh(dcfg.k)
     run = diloco.make_run(loss_fn, sampler.sample_all_shards, dcfg,
                           tcfg, rounds_per_call=rounds,
                           total_steps=rounds * dcfg.H, batch_size=batch,
                           seq_len=seq, eval_tokens=val, eval_every=1,
-                          donate=False)
+                          donate=False, mesh=mesh)
 
     def init():
         if dcfg.streaming_fragments:
-            return streaming.init_state(params, dcfg)
+            st = streaming.init_state(params, dcfg)
+            if mesh is not None:
+                st = pod_collectives.shard_stream_state(st, mesh)
+            return st
         return diloco.init_state(params, dcfg)
 
     def one():
@@ -127,10 +165,38 @@ def bench_one(loss_fn, sampler, params, name, dcfg, tcfg, *, rounds,
     results = [one() for _ in range(repeats)]
     t = min(r[0] for r in results)
     _, state, ms = results[0]
-    return {"name": name, "total_s": t,
-            "round_latency_ms": 1e3 * t / rounds,
-            "final_val_loss": float(np.asarray(ms["val_loss"])[-1]),
-            "state": state}
+    rec = {"name": name, "total_s": t,
+           "round_latency_ms": 1e3 * t / rounds,
+           "final_val_loss": float(np.asarray(ms["val_loss"])[-1]),
+           "state": state}
+    if mesh is not None:
+        # compiled-HLO wire profile — what the collective program
+        # REALLY ships. Lowered as a dedicated rounds_per_call=1
+        # program (one extra small compile) so the per-round bytes are
+        # exact by construction: the R-round program's scan trip count
+        # is not reliably recoverable from post-optimization HLO, so
+        # dividing its totals by R would silently mis-scale.
+        cpp = len(jax.devices()) // pod_collectives.pods_of(mesh)
+        run1 = diloco.make_run(
+            loss_fn, sampler.sample_all_shards, dcfg, tcfg,
+            rounds_per_call=1, total_steps=rounds * dcfg.H,
+            batch_size=batch, seq_len=seq, donate=False, mesh=mesh)
+        hlo = run1.lower(init(),
+                         jax.random.PRNGKey(seed + 2)).compile().as_text()
+        coll = H_hlo.collective_stats(hlo, chips_per_pod=cpp)
+        inter = H_hlo.stream_interleaving(hlo, chips_per_pod=cpp)
+        rec["wire"] = {
+            "pods": pod_collectives.pods_of(mesh),
+            "hlo_cross_pod_bytes_per_round": coll.cross_pod_bytes,
+            "hlo_collectives_by_op": dict(coll.by_op),
+            "pod_collectives": inter["pod_collectives"],
+            "pod_all_reduces": inter["pod_all_reduces"],
+            "sync_by_op": inter["sync_by_op"],
+            "syncs_with_compute_after":
+                inter["syncs_with_compute_after"],
+            "syncs_inside_compute": inter["syncs_inside_compute"],
+        }
+    return rec
 
 
 def bandwidth_curve(profile, *, rounds, compute_s, H, tau) -> dict:
@@ -210,10 +276,14 @@ def run(scale: int = 1, *, k=4, H=6, rounds=6, batch=2, seq=32,
         r["curve"] = bandwidth_curve(
             r["comm"], rounds=rounds, compute_s=r["total_s"], H=H,
             tau=dcfg.stream_tau if dcfg.streaming_fragments else 0)
+        # "transport" historically meant the wire dtype here; that now
+        # collides with DiLoCoConfig.transport (simulated|sharded), so
+        # the config records both under unambiguous keys instead
         r["config"] = {"P": dcfg.streaming_fragments,
                        "alpha": dcfg.stream_alpha,
                        "tau": dcfg.stream_tau,
-                       "transport": dcfg.outer_grad_dtype}
+                       "wire_dtype": dcfg.outer_grad_dtype,
+                       "backend": dcfg.transport}
         runs[name] = r
         print(f"{name:16s} {r['round_latency_ms']:8.2f} ms/round  "
               f"val={r['final_val_loss']:.4f}  "
@@ -226,6 +296,36 @@ def run(scale: int = 1, *, k=4, H=6, rounds=6, batch=2, seq=32,
         for a, b in zip(jax.tree.leaves(sync_state),
                         jax.tree.leaves(p1_state)))
 
+    # sharded-transport parity gates against each run's simulated twin
+    # (one replica per pod — see core/pod_collectives.py): the f32 row
+    # must match bit-for-bit; quantized rows match within quant-error
+    # bounds (re-fused quantize math shifts near-tie codes by one
+    # step). Every sharded row's fragment collectives must interleave
+    # into inner compute with none inside the inner-step loops.
+    sharded_identical, sharded_close, sharded_interleaved = {}, {}, True
+    for name in list(runs):
+        if not name.endswith("_sharded"):
+            continue
+        twin = name[:-len("_sharded")]
+        pairs = list(zip(jax.tree.leaves(states[twin]),
+                         jax.tree.leaves(states[name])))
+        worst = max(float(np.max(np.abs(
+            np.asarray(a, np.float64) - np.asarray(b, np.float64))))
+            for a, b in pairs)
+        if runs[name]["config"]["wire_dtype"] == "float32":
+            sharded_identical[name] = all(
+                np.array_equal(np.asarray(a), np.asarray(b))
+                for a, b in pairs)
+        else:
+            sharded_close[name] = worst <= 5e-3
+        runs[name]["vs_simulated_max_abs_diff"] = worst
+        w = runs[name]["wire"]
+        P = runs[name]["config"]["P"]
+        if (w["pod_collectives"] < P
+                or w["syncs_with_compute_after"] < P - 1
+                or w["syncs_inside_compute"] != 0):
+            sharded_interleaved = False
+
     sync_peak = runs["sync"]["comm"]["peak_bytes_per_sync"]
     reductions = {}
     ge_p = True
@@ -235,7 +335,7 @@ def run(scale: int = 1, *, k=4, H=6, rounds=6, batch=2, seq=32,
             continue
         red = sync_peak / r["comm"]["peak_bytes_per_sync"]
         reductions[name] = red
-        if r["config"]["transport"] != "float32" and red < P:
+        if r["config"]["wire_dtype"] != "float32" and red < P:
             ge_p = False
 
     fq = fakequant_micro(repeats=repeats, seed=seed)
@@ -260,11 +360,41 @@ def run(scale: int = 1, *, k=4, H=6, rounds=6, batch=2, seq=32,
             "all_losses_finite": bool(all(
                 np.isfinite(r["final_val_loss"])
                 for r in runs.values())),
+            "sharded_configs_ran": bool(sharded_identical
+                                        or sharded_close),
         },
+        "sharded_identical": {n: bool(v)
+                              for n, v in sharded_identical.items()},
+        "sharded_close": {n: bool(v)
+                          for n, v in sharded_close.items()},
     }
+    if sharded_identical or sharded_close:
+        # only meaningful when the sharded rows actually ran — an
+        # all({}) claim would read "true" on a run that never
+        # exercised the sharded transport
+        report["claims"].update({
+            "sharded_f32_bit_identical_to_simulated": bool(
+                sharded_identical
+                and all(sharded_identical.values())),
+            "sharded_quantized_within_tolerance": bool(
+                sharded_close and all(sharded_close.values())),
+            "sharded_collectives_interleaved": bool(
+                sharded_interleaved),
+        })
     print(f"bit-identical P=1: {bit_identical}   "
           f"peak-bytes reductions: "
           + "  ".join(f"{n}={v:.2f}x" for n, v in reductions.items()))
+    if sharded_identical or sharded_close:
+        print("sharded transport: "
+              + "  ".join(f"{n}: bitwise={v}"
+                          for n, v in sharded_identical.items())
+              + "  " + "  ".join(f"{n}: close={v}"
+                                 for n, v in sharded_close.items())
+              + f"  interleaved={sharded_interleaved}")
+    else:
+        print("sharded transport: skipped (device count "
+              f"{len(jax.devices())} not a k={k} pod multiple — set "
+              "--xla_force_host_platform_device_count)")
 
     with open(out, "w") as f:
         json.dump(report, f, indent=1)

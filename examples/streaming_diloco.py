@@ -10,6 +10,14 @@ run would put on a real interconnect.
 
   PYTHONPATH=src python examples/streaming_diloco.py
 
+--sharded swaps the simulated transport for the REAL pod-axis
+collective path (core/pod_collectives.py): each replica on its own
+"pod" mesh slice, every fragment reduced by a cross-pod collective
+from inside the scanned jit. Needs >= k devices, e.g.:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python examples/streaming_diloco.py --sharded
+
 The same knobs are available on the training CLI:
 
   PYTHONPATH=src python -m repro.launch.train \
@@ -36,8 +44,12 @@ ap.add_argument("--rounds", type=int, default=8)
 ap.add_argument("--fragments", type=int, default=4)
 ap.add_argument("--alpha", type=float, default=0.5)
 ap.add_argument("--tau", type=int, default=2)
-ap.add_argument("--transport", default="int4",
-                choices=["float32", "bfloat16", "int4"])
+ap.add_argument("--wire-dtype", default="int4",
+                choices=["float32", "bfloat16", "int4"],
+                help="transport precision of outer gradients")
+ap.add_argument("--sharded", action="store_true",
+                help="real pod-axis collectives on a (pod, data) mesh "
+                     "(one replica band per pod; needs >= k devices)")
 ap.add_argument("--batch", type=int, default=8)
 ap.add_argument("--seq", type=int, default=64)
 args = ap.parse_args()
@@ -58,26 +70,47 @@ configs = {
     "stream": DiLoCoConfig(
         k=args.k, H=args.H, streaming_fragments=args.fragments,
         stream_alpha=args.alpha, stream_tau=args.tau,
-        outer_grad_dtype=args.transport),
+        outer_grad_dtype=args.wire_dtype,
+        transport="sharded" if args.sharded else "simulated"),
 }
+
+mesh = None
+if args.sharded:
+    from repro.core import pod_collectives
+    from repro.launch.mesh import make_pod_mesh
+    n_dev = len(jax.devices())
+    if n_dev < args.k or n_dev % args.k != 0:
+        raise SystemExit(
+            f"--sharded wants one pod per replica: {args.k} replicas "
+            f"need a device count that is a multiple of {args.k}, "
+            f"got {n_dev}. On a CPU host set XLA_FLAGS=--xla_force_"
+            "host_platform_device_count="
+            f"{args.k * max(1, -(-8 // args.k))} (before jax starts) "
+            "— a smaller mesh would silently run zero real cross-pod "
+            "collectives")
+    mesh = make_pod_mesh(args.k)
 
 histories = {}
 for name, dcfg in configs.items():
+    sharded = getattr(dcfg, "transport", "simulated") == "sharded"
     run = diloco.make_run(loss_fn, sampler.sample_all_shards, dcfg,
                           tcfg, rounds_per_call=args.rounds,
                           total_steps=total, batch_size=args.batch,
                           seq_len=args.seq, eval_tokens=val,
-                          eval_every=1)
+                          eval_every=1, mesh=mesh if sharded else None)
     state = (streaming.init_state(params, dcfg)
              if dcfg.streaming_fragments
              else diloco.init_state(params, dcfg))
+    if sharded:
+        state = pod_collectives.shard_stream_state(state, mesh)
     state, ms = run(state, jax.random.PRNGKey(7))
     histories[name] = np.asarray(ms["val_loss"])
 
 print(f"\nmodel: {arch.cfg.name} ({n_params / 1e6:.2f}M params), "
       f"k={args.k} H={args.H} rounds={args.rounds}")
 print(f"streaming: P={args.fragments} alpha={args.alpha} "
-      f"tau={args.tau} transport={args.transport}\n")
+      f"tau={args.tau} wire={args.wire_dtype} "
+      f"transport={'sharded' if args.sharded else 'simulated'}\n")
 print(f"{'round':>5s} {'sync val':>10s} {'stream val':>11s}")
 for t in range(args.rounds):
     print(f"{t + 1:5d} {histories['sync'][t]:10.4f} "
@@ -87,13 +120,13 @@ part = fragments.partition_params(params, args.fragments)
 sync_peak = transport_bytes(n_params, "float32")
 # exact wire bytes: int4's f32 scales charged per contiguous leaf
 # region (matches benchmarks/streaming.py and BENCH_streaming.json)
-stream_peak = max(sum(transport_bytes(e, args.transport) for e in regs)
+stream_peak = max(sum(transport_bytes(e, args.wire_dtype) for e in regs)
                   for regs in part.region_sizes)
 print(f"\nwire profile (per replica):")
 print(f"  sync   : 1 × {sync_peak / 1e6:8.2f} MB per round "
       f"(full model, f32, blocking barrier)")
 print(f"  stream : {args.fragments} × ≤{stream_peak / 1e6:8.2f} MB per "
-      f"round ({args.transport}, each with {args.tau} inner steps of "
+      f"round ({args.wire_dtype}, each with {args.tau} inner steps of "
       f"overlap)")
 print(f"  peak bytes-per-sync reduction: "
       f"{sync_peak / stream_peak:.1f}x")

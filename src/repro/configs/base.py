@@ -151,6 +151,19 @@ class DiLoCoConfig:
     # zero at no wire cost. Only meaningful with a low-precision
     # outer_grad_dtype on the streaming path.
     error_feedback: bool = False
+    # Transport backend of the streaming outer sync:
+    #   simulated — replica-stacked averaging on one device (the CPU
+    #               benchmark path; the historical PR 2 semantics);
+    #   sharded   — each replica lives on its own "pod" mesh slice
+    #               (core/pod_collectives.py) and every fragment is
+    #               reduced by a real pod-axis collective issued from
+    #               inside the scanned round: float32 rides a weighted
+    #               psum all-reduce; quantized transports all-gather the
+    #               per-pod payloads (scale blocks stay pod-local) and
+    #               reduce locally in the simulated path's exact op
+    #               order. Requires a mesh with a "pod" axis at
+    #               round-build time (make_round/make_run mesh=...).
+    transport: str = "simulated"
     # --- replica-state precision policy (see optim/precision.py) ---
     # param_dtype:  storage dtype of the per-replica working params AND
     #               AdamW moments ("bfloat16" halves the params+moments

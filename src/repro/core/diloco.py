@@ -274,7 +274,8 @@ def _pairwise_cosine(deltas, mask):
 
 def _make_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
                      tcfg: TrainConfig, *, total_steps=None,
-                     compute_cosine=False, batch_size=None, seq_len=None):
+                     compute_cosine=False, batch_size=None, seq_len=None,
+                     mesh=None):
     """Un-jitted round: the computation shared by ``make_round`` (one
     jit dispatch per round) and ``make_run`` (R rounds scanned inside
     one jit).
@@ -282,7 +283,10 @@ def _make_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
     When ``dcfg.streaming_fragments > 0`` the round is the *streaming*
     round (fragment-scheduled outer sync, see ``core/streaming.py``);
     the state is then a ``streaming.StreamState`` (build with
-    ``streaming.init_state``)."""
+    ``streaming.init_state``). With ``dcfg.transport == "sharded"`` the
+    streaming round runs under shard_map over ``mesh``'s "pod" axis
+    and the fragment reductions are real cross-pod collectives
+    (``core/pod_collectives.py``)."""
     if precision.policy_of(dcfg) != precision.policy_of(tcfg):
         raise ValueError(
             "DiLoCoConfig and TrainConfig precision policies disagree: "
@@ -294,7 +298,13 @@ def _make_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
         return streaming.make_stream_round_body(
             loss_fn, sample_fn, dcfg, tcfg, total_steps=total_steps,
             compute_cosine=compute_cosine, batch_size=batch_size,
-            seq_len=seq_len)
+            seq_len=seq_len, mesh=mesh)
+    if getattr(dcfg, "transport", "simulated") != "simulated":
+        raise ValueError(
+            "transport='sharded' is a streaming-path feature: set "
+            "streaming_fragments >= 1 (the classic synchronous outer "
+            "step gets its cross-pod all-reduce from GSPMD — see "
+            "launch/dryrun.py build_outer_step)")
     inner_step_tok = make_inner_step(
         lambda p, b: loss_fn(p, b), tcfg, total_steps)
     B = batch_size or tcfg.batch_size
@@ -327,19 +337,21 @@ def make_round(loss_fn, sample_fn, dcfg: DiLoCoConfig, tcfg: TrainConfig,
                *, total_steps: int | None = None,
                compute_cosine: bool = False,
                batch_size: int | None = None,
-               seq_len: int | None = None):
+               seq_len: int | None = None,
+               mesh=None):
     """Build the jitted DiLoCo round.
 
     sample_fn(key, batch, seq_len) -> (k, B, S) int32 tokens, one batch
     per shard. Returns round(state, key, drop_mask, active_mask, weights)
     -> (state, metrics). Data for all H steps is sampled *inside* the
     round via fold_in so the jitted function stays closed over the
-    sampler constants only.
+    sampler constants only. ``mesh`` is required (and only used) by the
+    sharded streaming transport.
     """
     round_body = _make_round_body(
         loss_fn, sample_fn, dcfg, tcfg, total_steps=total_steps,
         compute_cosine=compute_cosine, batch_size=batch_size,
-        seq_len=seq_len)
+        seq_len=seq_len, mesh=mesh)
     return jax.jit(round_body)
 
 
@@ -364,7 +376,7 @@ def make_run(loss_fn, sample_fn, dcfg: DiLoCoConfig, tcfg: TrainConfig,
              batch_size: int | None = None,
              seq_len: int | None = None,
              eval_tokens=None, eval_every: int = 1,
-             donate: bool = True):
+             donate: bool = True, mesh=None):
     """Build the scanned multi-round driver: R = ``rounds_per_call``
     full DiLoCo rounds execute inside ONE jitted call via ``lax.scan``,
     so the host dispatches once per R rounds instead of once per round
@@ -394,12 +406,17 @@ def make_run(loss_fn, sample_fn, dcfg: DiLoCoConfig, tcfg: TrainConfig,
 
     When ``dcfg.streaming_fragments > 0`` the scanned rounds are
     streaming rounds (``core/streaming.py``): pass/expect a
-    ``streaming.StreamState`` instead of a ``DiLoCoState``.
+    ``streaming.StreamState`` instead of a ``DiLoCoState``. With
+    ``dcfg.transport == "sharded"`` pass ``mesh`` (a mesh with a "pod"
+    axis) and place the state with
+    ``pod_collectives.shard_stream_state`` first — the scanned rounds
+    then issue real per-fragment pod-axis collectives from inside the
+    one jit.
     """
     round_body = _make_round_body(
         loss_fn, sample_fn, dcfg, tcfg, total_steps=total_steps,
         compute_cosine=compute_cosine, batch_size=batch_size,
-        seq_len=seq_len)
+        seq_len=seq_len, mesh=mesh)
     R = int(rounds_per_call)
     ev_toks = None if eval_tokens is None else jnp.asarray(eval_tokens)
 

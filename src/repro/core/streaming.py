@@ -44,6 +44,13 @@ Knob ↔ paper-term map (DiLoCoConfig):
                        collectives).
   stream_overrides     ((path-regex, fragment), ...) pattern overrides
                        for the fragment partitioner.
+  transport            collective backend: "simulated" (replica-stacked
+                       averaging on one device — this module's original
+                       semantics) or "sharded" (each replica on its own
+                       "pod" mesh slice, fragments reduced by real
+                       pod-axis collectives under shard_map — see
+                       core/pod_collectives.py; pass mesh=... to
+                       make_round/make_run).
 
 The streaming round plugs into the scanned driver: ``diloco.make_run``
 (and ``make_round``) dispatch here when ``streaming_fragments > 0``, so
@@ -62,7 +69,7 @@ import numpy as np
 
 from repro.configs.base import DiLoCoConfig, TrainConfig
 from repro.optim import precision
-from . import diloco, fragments, outer_opt
+from . import diloco, fragments, outer_opt, pod_collectives
 from .compression import sign_prune
 
 
@@ -142,7 +149,7 @@ def quantize_with_feedback(d, res, dtype: str, *, mode: str = "ref"):
 def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
                            tcfg: TrainConfig, *, total_steps=None,
                            compute_cosine: bool = False,
-                           batch_size=None, seq_len=None):
+                           batch_size=None, seq_len=None, mesh=None):
     """Un-jitted streaming round, signature-compatible with
     ``diloco._make_round_body``: round_body(StreamState, key, drop_mask,
     active_mask, weights) -> (StreamState, metrics).
@@ -151,6 +158,13 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
     the fragment schedule's send/apply events; with P=1, α=1, τ=0 and
     float32 transport it is one full-H segment followed by a full-tree
     send+apply — bit-identical to the synchronous round (tested).
+
+    ``dcfg.transport`` selects the collective backend: "simulated"
+    averages the replica-stacked arrays on one device; "sharded" runs
+    the round under ``shard_map`` over ``mesh``'s "pod" axis — each pod
+    carries a contiguous band of k/pods replicas, inner steps are pure
+    pod-local compute, and every fragment is reduced by a real pod-axis
+    collective (``core/pod_collectives.py``) at its staggered offset.
     """
     P = int(dcfg.streaming_fragments)
     if P < 1:
@@ -160,6 +174,21 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
         raise NotImplementedError(
             "streaming outer sync supports outer_opt='nesterov' only "
             f"(got {dcfg.outer_opt!r})")
+    transport = getattr(dcfg, "transport", "simulated")
+    if transport not in ("simulated", "sharded"):
+        raise ValueError(f"unknown transport {transport!r}: expected "
+                         "'simulated' or 'sharded'")
+    sharded = transport == "sharded"
+    if sharded:
+        n_pods = pod_collectives.validate_mesh(mesh, dcfg.k)
+        if compute_cosine:
+            raise NotImplementedError(
+                "compute_cosine needs cross-pod delta gathers; run it "
+                "on transport='simulated'")
+        axis = pod_collectives.POD_AXIS
+    else:
+        n_pods, axis = 1, None
+    k_loc = dcfg.k // n_pods
     sched = fragments.schedule(P, dcfg.H, dcfg.stream_tau)
     alpha = float(dcfg.stream_alpha)
     qdtype = dcfg.outer_grad_dtype
@@ -170,25 +199,37 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
     B = batch_size or tcfg.batch_size
     S = seq_len or tcfg.seq_len
 
-    def round_body(sstate: StreamState, key, drop_mask=None,
-                   active_mask=None, weights=None):
+    def round_core(sstate: StreamState, key, drop_mask,
+                   active_mask, weights):
         from repro.kernels import ops as kops
 
         st = sstate.base
         part = fragments.partition_params(
             st.global_params, P, overrides=dcfg.stream_overrides)
         k, H = dcfg.k, dcfg.H
-        ones = jnp.ones((k,), jnp.float32)
-        drop_mask = ones if drop_mask is None else drop_mask
-        active_mask = ones if active_mask is None else active_mask
-        weights = ones if weights is None else weights
+        # masks/weights stay full (k,) on every pod — the mask algebra
+        # (denom, drop_frac) is then the exact op sequence of the
+        # simulated path; only replica-banded tensors go local
         m = drop_mask * active_mask * weights
         denom = jnp.maximum(m.sum(), 1e-9)
         adopt = jnp.maximum(drop_mask, 1.0 - active_mask)
+        if axis is not None:
+            m_loc = pod_collectives.band_slice(m, k_loc, axis)
+            act_loc = pod_collectives.band_slice(active_mask, k_loc,
+                                                 axis)
+            adopt_loc = pod_collectives.band_slice(adopt, k_loc, axis)
+        else:
+            m_loc, act_loc, adopt_loc = m, active_mask, adopt
 
         keys = jax.random.split(key, H)
         toks = jax.vmap(lambda kk: sample_fn(kk, B, S))(keys)
-        toks = jnp.swapaxes(toks, 0, 1)[:k]                 # (k,H,B,S)
+        toks = jnp.swapaxes(toks, 0, 1)                    # (k',H,B,S)
+        if axis is not None:
+            # every pod samples the full shard set (replicated compute,
+            # bitwise the simulated data) and keeps its own band
+            toks = pod_collectives.band_slice(toks, k_loc, axis)
+        else:
+            toks = toks[:k]                                 # (k,H,B,S)
         batches = {"tokens": toks}
 
         gp = st.global_params
@@ -222,7 +263,7 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
                                    batches)
                 rp, ist, ms = diloco.inner_phase(
                     inner_step_tok, rp, ist, seg,
-                    st.inner_steps_done + pos, active_mask=active_mask)
+                    st.inner_steps_done + pos, active_mask=act_loc)
                 seg_ms.append(ms)
                 pos += steps
             for ev in acts:
@@ -266,8 +307,8 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
                             # average consume their residual; dropped /
                             # inactive replicas never sent, so their
                             # error keeps accumulating for later rounds
-                            comm = (m > 0).reshape(
-                                (k,) + (1,) * (nres.ndim - 1))
+                            comm = (m_loc > 0).reshape(
+                                (k_loc,) + (1,) * (nres.ndim - 1))
                             new_res.append(
                                 jnp.where((q > 0) & comm, nres, res))
                         else:
@@ -275,7 +316,16 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
                                 lambda dd: kops.quant_roundtrip(
                                     dd, qdtype, mode=kernel_mode))(d)
                             new_res.append(res)
-                        a = jnp.tensordot(m, d, axes=(0, 0)) / denom
+                        if axis is not None:
+                            # THE cross-pod collective: psum for f32,
+                            # gather + local dequant-reduce for the
+                            # quantized wire (pod-local scale blocks)
+                            a = pod_collectives.fragment_mean(
+                                d, m, m_loc, denom, dtype=qdtype,
+                                axis=axis)
+                        else:
+                            a = (jnp.tensordot(m, d, axes=(0, 0))
+                                 / denom)
                         new_pd.append(jnp.where(q > 0, a, pe))
                         if compute_cosine:
                             new_da.append(jnp.where(q > 0, d, da))
@@ -323,8 +373,8 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
                         tgt = (jnp.broadcast_to(g2[None], hp.shape)
                                if alpha >= 1.0
                                else alpha * g2[None] + (1.0 - alpha) * hp)
-                        c = (sel & (adopt.reshape(
-                            (k,) + (1,) * g2.ndim) > 0))
+                        c = (sel & (adopt_loc.reshape(
+                            (k_loc,) + (1,) * g2.ndim) > 0))
                         new_rp.append(jnp.where(c, tgt.astype(r.dtype),
                                                 r))
                         if mixed:
@@ -348,11 +398,21 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
             outer_t=st.outer_t + 1,
             inner_steps_done=st.inner_steps_done + H)
 
+        if axis is not None:
+            # loss metrics live per local replica band: fold the bands
+            # into the global replica mean (equal bands, exact mean)
+            loss_mean = pod_collectives.replica_mean(ms["loss"],
+                                                     axis=axis)
+            loss_last = pod_collectives.replica_mean(ms["loss"][:, -1],
+                                                     axis=axis)
+        else:
+            loss_mean = ms["loss"].mean()
+            loss_last = ms["loss"][:, -1].mean()
         om = {
             "outer_gnorm": diloco._tree_norm(pending),
             "drop_frac": 1.0 - drop_mask.mean(),
-            "inner_loss": ms["loss"].mean(),
-            "inner_loss_last": ms["loss"][:, -1].mean(),
+            "inner_loss": loss_mean,
+            "inner_loss_last": loss_last,
             # simulated wire bytes one replica sends: peak per sync
             # event and total over the round's P syncs (exact: int4's
             # per-block f32 scales are charged per contiguous leaf
@@ -370,5 +430,18 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
             cm, cs = diloco._pairwise_cosine(deltas_acc, m)
             om["cos_mean"], om["cos_std"] = cm, cs
         return StreamState(new_base, pending, armed, residual), om
+
+    def round_body(sstate: StreamState, key, drop_mask=None,
+                   active_mask=None, weights=None):
+        ones = jnp.ones((dcfg.k,), jnp.float32)
+        drop_mask = ones if drop_mask is None else drop_mask
+        active_mask = ones if active_mask is None else active_mask
+        weights = ones if weights is None else weights
+        if not sharded:
+            return round_core(sstate, key, drop_mask, active_mask,
+                              weights)
+        specs = pod_collectives.stream_state_specs(sstate)
+        fn = pod_collectives.shard_round_body(round_core, mesh, specs)
+        return fn(sstate, key, drop_mask, active_mask, weights)
 
     return round_body

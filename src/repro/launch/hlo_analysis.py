@@ -156,19 +156,41 @@ def computation_multipliers(hlo_text: str) -> dict:
         if mult.get(name, 0) >= m:
             return
         mult[name] = m
-        body = comps.get(name, "")
-        for cm in _CALLEE_RE.finditer(body):
-            callee = cm.group(1)
+        # branch computations carry trips.get(...) == 1, so one walk
+        # over the shared callee map covers whiles and branches alike
+        for callee in _callees(comps.get(name, "")):
             visit(callee, m * trips.get(callee, 1))
-        for bm in _BRANCHES_RE.finditer(body):
-            for callee in re.findall(r"%?([\w.\-]+)", bm.group(1)):
-                visit(callee, m)
 
     # seed: entry text is keyed under its own name too
     for name, body in comps.items():
         if body is entry or body == entry:
             visit(name, 1)
     return mult
+
+
+def _groups_cross_pods(line: str, chips_per_pod: int | None) -> bool:
+    """Pod-crossing classification of one collective op line, shared by
+    the byte accounting (``collective_stats``) and the schedule gate
+    (``stream_interleaving``) so the two can never disagree: device ids
+    [p*cpp, (p+1)*cpp) belong to pod p, a group spanning two pods is
+    cross-pod traffic, and no replica_groups means all devices
+    participate."""
+    if not chips_per_pod:
+        return False
+    groups = _line_groups(line)
+    if not groups:
+        return True
+    return any(len({d // chips_per_pod for d in grp}) > 1
+               for grp in groups)
+
+
+def _callees(body: str) -> set:
+    """Computation names referenced by a computation body (while
+    cond/body, calls/to_apply, conditional branches)."""
+    out = set(_CALLEE_RE.findall(body))
+    for bm in _BRANCHES_RE.finditer(body):
+        out.update(re.findall(r"%?([\w.\-]+)", bm.group(1)))
+    return out
 
 
 @dataclasses.dataclass
@@ -213,19 +235,7 @@ def collective_stats(hlo_text: str, *, chips_per_pod: int | None = None
             st.total_bytes += nbytes
             st.count += mult
             st.by_op[op] = st.by_op.get(op, 0) + nbytes
-            crossing = False
-            if chips_per_pod:
-                groups = _line_groups(line)
-                if groups:
-                    for grp in groups:
-                        pods = {d // chips_per_pod for d in grp}
-                        if len(pods) > 1:
-                            crossing = True
-                            break
-                else:
-                    # no groups ⇒ all devices participate
-                    crossing = True
-            if crossing:
+            if _groups_cross_pods(line, chips_per_pod):
                 st.cross_pod_bytes += nbytes
             else:
                 st.intra_pod_bytes += nbytes
@@ -267,6 +277,137 @@ def roofline(flops: float, hbm_bytes: float, coll: CollectiveStats,
         ("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k])
     terms["total_s"] = max(compute_s, memory_s, collective_s)
     return terms
+
+
+_DOT_RE = re.compile(r"\b(?:dot|convolution)\(")
+
+
+def _dot_closure(comps: dict) -> dict:
+    """name -> True if the computation (or anything it calls,
+    transitively) contains a dot/convolution — i.e. it is "inner-step
+    compute" for scheduling purposes."""
+    callees = {name: _callees(body) for name, body in comps.items()}
+    memo: dict = {}
+
+    def visit(name, stack):
+        if name in memo:
+            return memo[name]
+        if name in stack:
+            return False
+        body = comps.get(name, "")
+        hit = bool(_DOT_RE.search(body)) or any(
+            visit(c, stack | {name}) for c in callees.get(name, ()))
+        memo[name] = hit
+        return hit
+
+    for name in comps:
+        visit(name, set())
+    return memo
+
+
+_SYNC_OPS = ("all-reduce", "all-gather", "reduce-scatter")
+
+
+def _crossing_collective(line: str, chips_per_pod: int | None
+                         ) -> str | None:
+    """The pod-crossing collective op on this line (None otherwise).
+    The f32 streaming transport all-reduces; the quantized transports
+    all-gather their per-pod payloads — both are fragment syncs."""
+    m = _OP_RE.search(line)
+    if not m or "-done(" in line or m.group(2) not in _SYNC_OPS:
+        return None
+    # chips_per_pod=None means "no pod structure": no collective is
+    # pod-crossing — the same convention as collective_stats, via the
+    # same predicate, so the two entry points cannot disagree
+    return m.group(2) if _groups_cross_pods(line, chips_per_pod) \
+        else None
+
+
+def stream_interleaving(hlo_text: str, *, chips_per_pod: int | None
+                        ) -> dict:
+    """Schedule-structure check for the sharded streaming round: do the
+    per-fragment pod-axis all-reduces *interleave* with inner-step
+    compute, or did something re-serialize the overlap?
+
+    Finds the computation holding the most pod-crossing collectives
+    (the scanned round body), then walks its lines in program order,
+    marking each as a sync event (a pod-crossing all-reduce /
+    all-gather / reduce-scatter — the f32 transport all-reduces, the
+    quantized transports all-gather their per-pod payloads) or a
+    compute event (a dot, or an op — while/call/fusion/conditional —
+    whose callee transitively contains a dot). Also counts pod-crossing
+    collectives hiding *inside* compute callees: the inner-step scans
+    must contain none (the paper's no-communication-during-inner-steps
+    property, definitional under shard_map).
+
+    Returns {computation, pod_collectives, pod_all_reduces,
+    sync_by_op, compute_events, syncs_with_compute_after,
+    syncs_inside_compute, events}. A healthy P-fragment round shows
+    pod_collectives >= P (one per touched leaf per fragment),
+    syncs_with_compute_after covering all but the round-final
+    fragment's leaves, and syncs_inside_compute == 0.
+    """
+    comps = _split_computations(hlo_text)
+    dotc = _dot_closure(comps)
+
+    best = (None, [], -1, {})             # name, events, #syncs, by_op
+    for name, body in comps.items():
+        if name == "__entry__":
+            continue
+        events, by_op = [], {}
+        for line in body.splitlines():
+            op = _crossing_collective(line, chips_per_pod)
+            if op:
+                events.append("sync")
+                by_op[op] = by_op.get(op, 0) + 1
+                continue
+            if _DOT_RE.search(line):
+                events.append("compute")
+                continue
+            callees = _CALLEE_RE.findall(line)
+            if callees and any(dotc.get(c) for c in callees):
+                events.append("compute")
+        n_sync = events.count("sync")
+        if n_sync > best[2]:
+            best = (name, events, n_sync, by_op)
+    best_name, best_events, best_syncs, best_by_op = best
+
+    # pod-crossing collectives nested inside this computation's
+    # dot-containing callees (transitively): must be zero — inner-step
+    # loops communicate nothing across pods
+    nested = 0
+    seen = set()
+
+    def count_nested(name):
+        nonlocal nested
+        if name in seen:
+            return
+        seen.add(name)
+        body = comps.get(name, "")
+        for line in body.splitlines():
+            if _crossing_collective(line, chips_per_pod):
+                nested += 1
+            for c in _CALLEE_RE.findall(line):
+                count_nested(c)
+
+    for line in comps.get(best_name, "").splitlines():
+        callees = _CALLEE_RE.findall(line)
+        if callees and any(dotc.get(c) for c in callees):
+            for c in callees:
+                count_nested(c)
+
+    after = 0
+    for i, ev in enumerate(best_events):
+        if ev == "sync" and "compute" in best_events[i + 1:]:
+            after += 1
+    return {"computation": best_name,
+            "pod_collectives": best_syncs,
+            "pod_all_reduces": best_by_op.get("all-reduce", 0),
+            "sync_by_op": best_by_op,
+            "compute_events": best_events.count("compute"),
+            "syncs_with_compute_after": after,
+            "syncs_inside_compute": nested,
+            "events": best_events}
 
 
 def memory_items(compiled) -> dict:

@@ -25,6 +25,20 @@ def make_mesh(shape, axes):
     return jax.make_mesh(tuple(shape), tuple(axes))
 
 
+def make_pod_mesh(pods: int, *, n_devices: int | None = None):
+    """(pod=pods, data=rest) mesh over the visible devices — the home
+    of the sharded streaming transport (transport="sharded"): one
+    contiguous band of DiLoCo replicas per pod slice, fragment
+    collectives over the "pod" axis. On a CPU host, fake the device
+    count with --xla_force_host_platform_device_count=N first."""
+    n = n_devices or len(jax.devices())
+    if pods < 1 or n % pods != 0:
+        raise ValueError(
+            f"cannot lay {pods} pods over {n} devices: pods must "
+            "divide the device count")
+    return jax.make_mesh((pods, n // pods), ("pod", "data"))
+
+
 def pods_of(mesh) -> int:
     names = dict(zip(mesh.axis_names, mesh.devices.shape))
     return names.get("pod", 1)

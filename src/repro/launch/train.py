@@ -43,12 +43,18 @@ def build(args):
             ("--outer-grad-dtype", args.outer_grad_dtype != "float32"),
             ("--stream-alpha", args.stream_alpha != 1.0),
             ("--stream-tau", args.stream_tau != 0),
-            ("--error-feedback", args.error_feedback)) if on]
+            ("--error-feedback", args.error_feedback),
+            ("--transport", args.transport != "simulated"),
+            ("--pods", args.pods != 0)) if on]
         if ignored:
             raise SystemExit(
                 f"{', '.join(ignored)} require(s) --stream-fragments "
                 ">= 1 (streaming outer sync); the classic outer step "
                 "would ignore them")
+    if args.pods and args.transport != "sharded":
+        # --pods only shapes the sharded-transport mesh; accepting it
+        # on the simulated path would fake a multi-pod layout
+        raise SystemExit("--pods requires --transport sharded")
     dcfg = DiLoCoConfig(k=args.k, H=args.H, outer_opt=args.outer_opt,
                         outer_lr=args.outer_lr,
                         outer_momentum=args.outer_momentum,
@@ -61,6 +67,7 @@ def build(args):
                         stream_tau=args.stream_tau,
                         outer_grad_dtype=args.outer_grad_dtype,
                         error_feedback=args.error_feedback,
+                        transport=args.transport,
                         param_dtype=args.param_dtype,
                         master_dtype=args.master_dtype)
     total = args.pretrain_steps + args.rounds * args.H
@@ -114,9 +121,34 @@ def run(args):
                                      jnp.float32)
 
     # ---- DiLoCo phase ----
+    mesh = None
     if dcfg.streaming_fragments:
         from repro.core import streaming
         state = streaming.init_state(params, dcfg)
+        if dcfg.transport == "sharded":
+            from repro.core import pod_collectives
+            from repro.launch.mesh import make_pod_mesh
+            # default: the largest pod count that bands k evenly AND
+            # tiles the visible devices (min(k, devices) alone crashes
+            # on e.g. k=4 over 6 devices although pods=2 works)
+            n_dev = jax.device_count()
+            pods = args.pods or max(
+                (p for p in range(2, args.k + 1)
+                 if args.k % p == 0 and n_dev % p == 0), default=1)
+            if pods < 2:
+                raise SystemExit(
+                    "--transport sharded needs >= 2 pods, but no pod "
+                    f"count >= 2 divides both k={args.k} and the "
+                    f"{jax.device_count()} visible device(s) — a "
+                    "1-pod mesh would silently run zero real "
+                    "cross-pod collectives. On a CPU host set "
+                    "XLA_FLAGS=--xla_force_host_platform_device_"
+                    "count=N (a multiple of k) before jax starts")
+            mesh = make_pod_mesh(pods)
+            state = pod_collectives.shard_stream_state(state, mesh)
+            print(f"sharded transport: {pod_collectives.pods_of(mesh)} "
+                  f"pods × {args.k // pod_collectives.pods_of(mesh)} "
+                  "replicas/pod", flush=True)
     else:
         state = diloco.init_state(params, dcfg)
     rng = np.random.default_rng(args.seed)
@@ -160,7 +192,8 @@ def run(args):
         rnd = diloco.make_round(loss_fn, sampler.sample_all_shards, dcfg,
                                 tcfg, total_steps=tcfg.total_steps,
                                 compute_cosine=args.cosine_stats,
-                                batch_size=args.batch, seq_len=args.seq)
+                                batch_size=args.batch, seq_len=args.seq,
+                                mesh=mesh)
         for t in range(args.rounds):
             key, sub = jax.random.split(key)
             state, m = rnd(state, sub, jnp.asarray(drops[t]),
@@ -183,7 +216,8 @@ def run(args):
                     rounds_per_call=n, total_steps=tcfg.total_steps,
                     compute_cosine=args.cosine_stats,
                     batch_size=args.batch, seq_len=args.seq,
-                    eval_tokens=val, eval_every=args.eval_every)
+                    eval_tokens=val, eval_every=args.eval_every,
+                    mesh=mesh)
             # round_offset keeps the in-graph eval cadence globally
             # aligned across chunk boundaries (traced: chunks of equal
             # size share one compiled function)
@@ -272,6 +306,16 @@ def make_parser():
                          "quantization residual and add it to the next "
                          "round's delta (kills the int4/bf16 rounding "
                          "bias at no wire cost)")
+    ap.add_argument("--transport", default="simulated",
+                    choices=["simulated", "sharded"],
+                    help="streaming collective backend: 'sharded' runs "
+                         "each replica on its own pod mesh slice and "
+                         "reduces every fragment with a real pod-axis "
+                         "collective (needs >= --pods devices; on CPU "
+                         "set --xla_force_host_platform_device_count)")
+    ap.add_argument("--pods", type=int, default=0,
+                    help="pod count of the sharded-transport mesh "
+                         "(0 = min(k, device count); must divide k)")
     ap.add_argument("--param-dtype", default="float32",
                     choices=["float32", "bfloat16"],
                     help="storage dtype of the per-replica working "

@@ -116,7 +116,22 @@ def batch_pspec(mesh: Mesh, batch_size: int, ndim: int,
 
 
 def constrain(x, pspec: P):
-    """with_sharding_constraint that is a no-op outside a mesh context."""
+    """with_sharding_constraint that is a no-op outside a mesh context
+    AND inside manual-sharding contexts (shard_map): when the spec's
+    axes are manual the arrays are already device-local shards — a
+    GSPMD constraint is meaningless there and rejected by jax, so the
+    sharded streaming round (core/pod_collectives.py) can run the same
+    model code the auto-sharded paths use."""
+    try:
+        from jax._src.core import get_axis_env
+        manual = set(getattr(get_axis_env(), "axis_sizes", {}))
+    except Exception:                               # pragma: no cover
+        manual = set()
+    if manual:
+        named = {a for part in pspec if part is not None
+                 for a in (part if isinstance(part, tuple) else (part,))}
+        if named & manual:
+            return x
     try:
         return jax.lax.with_sharding_constraint(x, pspec)
     except (ValueError, RuntimeError):

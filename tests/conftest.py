@@ -1,8 +1,21 @@
 import os
 
-# Tests see the single real CPU device (the dry-run, and ONLY the
-# dry-run, forces 512 fake devices — in its own process).
+# Tests see the CPU platform with 8 fake host devices. The device-count
+# flag MUST be set here (before anything imports jax): XLA reads it at
+# backend initialization, so a module-level os.environ write in a test
+# file silently no-ops whenever another test module initialized jax
+# first (the old tests/test_dryrun_lite.py footgun). Centralizing it in
+# conftest makes every multi-device test (tests/test_pod_collectives.py,
+# in-process dry-run lowerings) compose regardless of collection order.
+# Single-device tests are unaffected: un-sharded computations still run
+# on device 0. (launch/dryrun.py forces 512 fake devices — in its own
+# process.)
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+if "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8 "
+        + os.environ.get("XLA_FLAGS", ""))
 
 import jax
 

@@ -131,6 +131,10 @@ def test_jaxpr_cost_grad_counts_backward():
 
 MINI = r"""
 import os
+# subprocess: tests/conftest.py does not apply here, so the fake-device
+# flag is set before the first jax import (the in-process tests get the
+# same flag from conftest — the old module-level-in-a-test-file footgun
+# is gone)
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys, json
 sys.path.insert(0, "src")
@@ -141,15 +145,17 @@ from repro.launch.mesh import make_mesh
 mesh_single = make_mesh((2, 2), ("data", "model"))
 mesh_multi = make_mesh((2, 2, 2), ("pod", "data", "model"))
 out = []
-for mesh, mp in [(mesh_single, False), (mesh_multi, True)]:
+for mesh, mp, fns in [(mesh_single, False, ("main",)),
+                      (mesh_multi, True, ("main", "stream"))]:
     recs = DR.dryrun_pair("diloco_60m", "train_4k", multi_pod=mp,
-                          microbatches=2, mesh=mesh)
+                          microbatches=2, mesh=mesh, fns=fns)
     out.extend(recs)
 recs = DR.dryrun_pair("diloco_60m", "decode_32k", multi_pod=False,
                       mesh=mesh_single)
 out.extend(recs)
 print(json.dumps([{k: v for k, v in r.items()
-                   if k in ("fn", "flops", "collectives", "error")}
+                   if k in ("fn", "flops", "collectives",
+                            "stream_interleaving", "error")}
                   for r in out]))
 """
 
@@ -162,7 +168,7 @@ def test_mini_dryrun_subprocess():
     recs = json.loads(res.stdout.splitlines()[-1])
     fns = {r["fn"] for r in recs}
     assert {"inner_train_step", "diloco_inner_step", "diloco_outer_step",
-            "ddp_train_step", "serve_step"} <= fns
+            "ddp_train_step", "diloco_stream_round", "serve_step"} <= fns
     for r in recs:
         assert "error" not in r, r
         if r["fn"] == "diloco_inner_step":
@@ -171,4 +177,16 @@ def test_mini_dryrun_subprocess():
         if r["fn"] == "diloco_outer_step":
             assert r["collectives"]["cross_pod_bytes"] > 0
         if r["fn"] == "ddp_train_step":
+            assert r["collectives"]["cross_pod_bytes"] > 0
+        if r["fn"] == "diloco_stream_round":
+            # Streaming DiLoCo's structural property: >= P pod-axis
+            # all-reduces INTERLEAVED with inner-step compute (a
+            # re-serialized schedule would cluster them at round end),
+            # and zero cross-pod collectives inside inner-step loops
+            P_frag = 2          # dryrun.STREAM_FRAGMENTS
+            st = r["stream_interleaving"]
+            assert st["pod_all_reduces"] >= P_frag, st
+            assert st["syncs_with_compute_after"] >= P_frag - 1, st
+            assert st["compute_events"] > 0, st
+            assert st["syncs_inside_compute"] == 0, st
             assert r["collectives"]["cross_pod_bytes"] > 0

@@ -1,0 +1,106 @@
+"""Hypothesis property tests for ``fragments.Partition`` × pod
+sharding: for arbitrary fragment counts P, round lengths H that P does
+not divide, τ-overlap, override patterns, pod bandings and 0/1 drop
+masks, every leaf element of every communicating replica is reduced by
+exactly one fragment collective per round — the invariant the sharded
+transport (core/pod_collectives.py) relies on to never double-reduce
+or skip a parameter.
+
+(Separate from tests/test_pod_collectives.py so the module-level
+hypothesis importorskip cannot take the multi-device suite with it.)
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import fragments  # noqa: E402
+
+
+def _toy_tree():
+    return {"embed": np.zeros((7, 4), np.float32),
+            "stack_w": np.zeros((5, 3, 2), np.float32),
+            "stack_b": np.zeros((5, 2), np.float32),
+            "head": np.zeros((4, 3), np.float32)}
+
+
+@st.composite
+def _pod_cases(draw):
+    Hh = draw(st.integers(1, 8))
+    P = draw(st.integers(1, min(6, Hh)))
+    tau = draw(st.integers(0, Hh - 1))
+    pods = draw(st.sampled_from([1, 2, 4]))
+    k = pods * draw(st.integers(1, 2))
+    over = draw(st.sampled_from(
+        [(), ((r"embed", 0),), ((r"head", P - 1),),
+         ((r"embed", P - 1), (r"stack_b", 0))]))
+    drop = draw(st.lists(st.sampled_from([0.0, 1.0]), min_size=k,
+                         max_size=k))
+    return Hh, P, tau, pods, k, tuple(over), tuple(drop)
+
+
+def _count_band(c, mk, p, band, m):
+    add = np.broadcast_to(np.asarray(mk, np.float32), p.shape)
+    sel = m[band].reshape((-1,) + (1,) * p.ndim)
+    c = c.copy()
+    c[band] += sel * add[None]
+    return c
+
+
+@given(_pod_cases())
+@settings(max_examples=40, deadline=None)
+def test_every_element_reduced_exactly_once_per_round(case):
+    """Summed over one round's send events, every leaf element of every
+    communicating replica enters exactly one fragment collective, and
+    dropped replicas' elements enter none — per pod band, covering all
+    k replicas exactly once."""
+    Hh, P, tau, pods, k, over, drop = case
+    params = _toy_tree()
+    part = fragments.partition_params(params, P, overrides=over)
+    sched = fragments.schedule(P, Hh, tau)
+
+    sends = [e.fragment for _, acts in sched.phases
+             for e in acts if e.kind == "send"]
+    assert sorted(sends) == list(range(P))   # each fragment sends once
+
+    k_loc = k // pods
+    m = np.asarray(drop, np.float32)
+    counts = jax.tree.map(
+        lambda p: np.zeros((k,) + p.shape, np.float32), params)
+    for pod in range(pods):
+        band = slice(pod * k_loc, (pod + 1) * k_loc)
+        for frag in sends:
+            counts = jax.tree.map(
+                lambda c, mk, p: _count_band(c, mk, p, band, m),
+                counts, part.masks[frag], params)
+    for c in jax.tree.leaves(counts):
+        comm = m.reshape((k,) + (1,) * (c.ndim - 1))
+        np.testing.assert_array_equal(
+            c, np.broadcast_to(comm, c.shape))
+
+
+@given(st.integers(1, 6), st.integers(1, 8))
+@settings(max_examples=30, deadline=None)
+def test_partition_masks_tile_exactly_once(P, seed):
+    """Fragment masks are a partition of unity on every leaf for any P
+    (the per-element guarantee the reduce-once property builds on)."""
+    params = _toy_tree()
+    rng = np.random.default_rng(seed)
+    over = ()
+    if seed % 3 == 0:
+        over = ((r"embed", int(rng.integers(P))),)
+    part = fragments.partition_params(params, P, overrides=over)
+    total = jax.tree.map(lambda p: np.zeros_like(p), params)
+    for mk in part.masks:
+        total = jax.tree.map(
+            lambda t, q, p: t + np.broadcast_to(
+                np.asarray(q, np.float32), p.shape),
+            total, mk, params)
+    for leaf in jax.tree.leaves(total):
+        np.testing.assert_array_equal(leaf, np.ones_like(leaf))
