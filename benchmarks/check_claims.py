@@ -1,0 +1,125 @@
+"""CI claims gate: every ``BENCH_*.json`` claim must be true, and no
+previously-present claim may silently disappear.
+
+Each benchmark writes a ``claims`` dict of named booleans — the
+regression gates (bit-identity, byte reductions, HLO-measured wire
+matches, ...). Two failure modes this script closes:
+
+  * a claim flips to false — the benchmark itself only *records* it;
+    nothing fails CI without this gate;
+  * a claim (or a whole benchmark file) silently vanishes — e.g. a
+    refactor renames the key or a guard starts skipping the rows that
+    produce it, and the gate would "pass" by checking nothing.
+
+``benchmarks/claims_manifest.json`` is the committed record of which
+claims each BENCH file is expected to carry. The gate fails if a
+manifest claim is missing from the file (or the file is missing
+entirely) and warns on new unmanifested claims so they get committed.
+
+Run:    PYTHONPATH=src python -m benchmarks.check_claims
+Update: PYTHONPATH=src python -m benchmarks.check_claims \
+            --update-manifest   (after intentionally adding claims)
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+MANIFEST = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "claims_manifest.json")
+
+
+def load_claims(root: str) -> dict:
+    """{bench-file-name: {claim: bool}} for every BENCH_*.json in
+    ``root`` (files without a claims dict map to {})."""
+    out = {}
+    for path in sorted(glob.glob(os.path.join(root, "BENCH_*.json"))):
+        with open(path) as f:
+            data = json.load(f)
+        claims = data.get("claims", {})
+        if not isinstance(claims, dict):
+            raise ValueError(f"{path}: 'claims' is not a dict")
+        out[os.path.basename(path)] = claims
+    return out
+
+
+def check(claims_by_file: dict, manifest: dict) -> list:
+    """All gate violations, as human-readable strings (empty = pass)."""
+    errors = []
+    for fname, claims in claims_by_file.items():
+        for name, val in claims.items():
+            # claims are named booleans, but some benchmarks keep the
+            # measured figure next to the gate (e.g. wallclock's
+            # speedup_x) — any FALSY entry fails, truthy records pass
+            if not val:
+                errors.append(f"{fname}: claim '{name}' is "
+                              f"{val!r} (must be true)")
+    for fname, expected in manifest.items():
+        claims = claims_by_file.get(fname)
+        if claims is None:
+            errors.append(f"{fname}: benchmark file missing but listed "
+                          "in the claims manifest")
+            continue
+        for name in expected:
+            if name not in claims:
+                errors.append(
+                    f"{fname}: claim '{name}' disappeared (present in "
+                    "benchmarks/claims_manifest.json; regenerate the "
+                    "benchmark or update the manifest deliberately)")
+    return errors
+
+
+def unmanifested(claims_by_file: dict, manifest: dict) -> list:
+    return [f"{fname}: '{name}'"
+            for fname, claims in claims_by_file.items()
+            for name in claims
+            if name not in manifest.get(fname, [])]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default=ROOT,
+                    help="directory holding the BENCH_*.json files")
+    ap.add_argument("--manifest", default=MANIFEST)
+    ap.add_argument("--update-manifest", action="store_true",
+                    help="rewrite the manifest from the current files "
+                         "(claims may be added, never dropped)")
+    args = ap.parse_args(argv)
+
+    claims_by_file = load_claims(args.root)
+    manifest = {}
+    if os.path.exists(args.manifest):
+        with open(args.manifest) as f:
+            manifest = json.load(f)
+
+    if args.update_manifest:
+        # merge, never drop: a claim once manifested stays required
+        for fname, claims in claims_by_file.items():
+            manifest[fname] = sorted(set(manifest.get(fname, []))
+                                     | set(claims))
+        with open(args.manifest, "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.manifest}")
+
+    errors = check(claims_by_file, manifest)
+    for fname, claims in claims_by_file.items():
+        ok = sum(1 for v in claims.values() if v)
+        print(f"{fname}: {ok}/{len(claims)} claims true")
+    for miss in unmanifested(claims_by_file, manifest):
+        print(f"note: unmanifested claim {miss} (run with "
+              "--update-manifest to pin it)")
+    if errors:
+        for e in errors:
+            print(f"FAIL: {e}", file=sys.stderr)
+        return 1
+    print("claims gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

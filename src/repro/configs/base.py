@@ -164,6 +164,18 @@ class DiLoCoConfig:
     #               order. Requires a mesh with a "pod" axis at
     #               round-build time (make_round/make_run mesh=...).
     transport: str = "simulated"
+    # Packed wire on the sharded transport (quantized dtypes only):
+    # True (default) ships the REAL payload — int4 nibble-packs two
+    # codes per int8 byte and lays codes + per-block f32 scales out in
+    # ONE byte buffer per fragment (all leaf regions coalesced), bf16
+    # ships one coalesced bf16 buffer — so the lowered collective
+    # carries exactly the bytes ops.transport_bytes(..., packed=True)
+    # charges, with one pod-axis all-gather per fragment per sync.
+    # False keeps the legacy transport for comparison: per-leaf gathers
+    # of the dequantized f32 payload, bytes charged by the static model
+    # only. Ignored by transport="simulated" (no wire) and by the f32
+    # dtype (which rides the psum all-reduce either way).
+    pack_wire: bool = True
     # --- replica-state precision policy (see optim/precision.py) ---
     # param_dtype:  storage dtype of the per-replica working params AND
     #               AdamW moments ("bfloat16" halves the params+moments

@@ -156,6 +156,79 @@ def partition_params(params, n_fragments: int, *, overrides=(),
 
 
 # ---------------------------------------------------------------------------
+# contiguous region index (the unit the packed wire flattens)
+# ---------------------------------------------------------------------------
+
+
+class Region(NamedTuple):
+    """One contiguous piece of a fragment: a layer band [start, stop)
+    of a stacked leaf, or a whole non-stacked leaf (start is None).
+    ``elems`` counts the region's elements WITHOUT any leading replica
+    axis — the per-replica payload size the wire accounting charges."""
+    leaf: int
+    start: int | None
+    stop: int | None
+    elems: int
+
+
+def fragment_regions(part: Partition, params) -> tuple:
+    """Per fragment, the ordered ``Region`` list its masks cover —
+    derived from the (static, host-side) masks, so the packed transport
+    ships exactly the elements the mask algebra selects. Region order
+    and element counts match ``Partition.region_sizes`` entry for
+    entry (asserted), so per-region wire accounting and the wire layout
+    can never disagree."""
+    leaves = jax.tree_util.tree_leaves(params)
+    out = []
+    for p in range(part.n):
+        mask_leaves = jax.tree_util.tree_leaves(part.masks[p])
+        regs = []
+        for i, (mk, leaf) in enumerate(zip(mask_leaves, leaves)):
+            mk = np.asarray(mk)
+            if mk.ndim == 0:
+                if mk:
+                    regs.append(Region(i, None, None, int(leaf.size)))
+                continue
+            idx = np.nonzero(mk.reshape(-1))[0]
+            if not idx.size:
+                continue
+            s, e = int(idx[0]), int(idx[-1]) + 1
+            if idx.size != e - s:
+                raise ValueError(
+                    f"fragment {p} leaf {i}: non-contiguous layer band "
+                    f"{idx.tolist()} — the packed wire flattens one "
+                    "contiguous slice per region")
+            per = int(leaf.size) // int(leaf.shape[0])
+            regs.append(Region(i, s, e, (e - s) * per))
+        if tuple(r.elems for r in regs) != tuple(part.region_sizes[p]):
+            raise AssertionError(
+                f"fragment {p}: region index {[r.elems for r in regs]} "
+                f"disagrees with region_sizes {part.region_sizes[p]}")
+        out.append(tuple(regs))
+    return tuple(out)
+
+
+def region_take(leaf, region: Region, lead_axes: int = 0):
+    """Slice ``region`` out of ``leaf`` (which may carry ``lead_axes``
+    leading replica axes) and flatten it to (*lead, elems)."""
+    if region.start is not None:
+        sl = (slice(None),) * lead_axes + (slice(region.start,
+                                                 region.stop),)
+        leaf = leaf[sl]
+    return leaf.reshape(leaf.shape[:lead_axes] + (-1,))
+
+
+def region_put(leaf, region: Region, flat, lead_axes: int = 0):
+    """Inverse of ``region_take``: write the flat region values back
+    into ``leaf`` (static slice update; whole-leaf regions reshape)."""
+    if region.start is None:
+        return flat.reshape(leaf.shape).astype(leaf.dtype)
+    sl = (slice(None),) * lead_axes + (slice(region.start, region.stop),)
+    return leaf.at[sl].set(
+        flat.reshape(leaf[sl].shape).astype(leaf.dtype))
+
+
+# ---------------------------------------------------------------------------
 # per-round sync schedule
 # ---------------------------------------------------------------------------
 

@@ -24,11 +24,18 @@ Per transport precision the fragment reduction is:
             in bf16, so the wire carries real bf16: ``all_gather`` the
             bf16 fragment over the pod axis, upcast (exact), and reduce
             locally with the simulated path's op sequence.
-  int4      per-replica fake-quant payloads (scale blocks are formed on
-            each pod's local shard, so they can never mix two pods'
-            values) are all-gathered and reduced locally. The gathered
-            array rides at f32 in the HLO; real code/scale packing is
-            charged by the static wire model (``ops.transport_bytes``).
+  int4      per-replica payloads (scale blocks are formed on each pod's
+            local shard, so they can never mix two pods' values) are
+            all-gathered and reduced locally. With ``pack_wire`` (the
+            default) the gather ships the REAL packed pair — nibble-
+            packed int8 codes + per-block f32 scales laid out in ONE
+            byte buffer per fragment (``ops.wire_encode``), all leaf
+            regions coalesced, so the lowered HLO carries exactly the
+            bytes ``ops.transport_bytes(..., packed=True)`` charges and
+            issues one pod-axis all-gather per fragment per sync.
+            ``pack_wire=False`` keeps the legacy fake-quant transport:
+            the gather ships dequantized f32 (≈7.5× the packed bytes)
+            and the wire is charged by the static model only.
 
 Quantized transports agree with the simulated path within quant-error
 bounds rather than bitwise: the payload *values* are identical, but XLA
@@ -119,6 +126,16 @@ def fragment_mean(d_local, m_full, m_local, denom, *, dtype: str,
     return jnp.tensordot(m_full, gathered, axes=(0, 0)) / denom
 
 
+def gather_wire(wire_local, *, axis: str = POD_AXIS):
+    """THE packed-wire collective: all-gather one fragment's coalesced
+    per-replica wire buffers over the pod axis. wire_local:
+    (k_local, W) — every leaf region's packed payload concatenated —
+    returns (k, W) with every pod's band in replica order. One call per
+    fragment per sync is the whole cross-pod bill of the quantized
+    sharded transport."""
+    return jax.lax.all_gather(wire_local, axis, axis=0, tiled=True)
+
+
 def replica_mean(x_local, *, axis: str = POD_AXIS):
     """Global mean of a metric carried per local replica band."""
     return jax.lax.pmean(x_local.mean(), axis)
@@ -155,13 +172,22 @@ def stream_state_specs(state, axis: str = POD_AXIS):
 def shard_stream_state(state, mesh, axis: str = POD_AXIS):
     """Place a StreamState on ``mesh``: replica state banded over the
     pod axis, shared state replicated. Use before the first sharded
-    ``make_run`` call so the donated carry starts resident."""
+    ``make_run`` call so the donated carry starts resident.
+
+    Every returned leaf is a FRESH buffer: ``jax.device_put`` is the
+    identity when a leaf already carries the target sharding, and
+    handing an aliased leaf to the donated run would delete the
+    caller's array with it (the donated-carry footgun) — so identity
+    placements are copied explicitly."""
     validate_mesh(mesh, jax.tree.leaves(state.base.replica_params)[0]
                   .shape[0])
     specs = stream_state_specs(state, axis)
-    return jax.tree.map(
-        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
-        state, specs)
+
+    def place(x, s):
+        y = jax.device_put(x, NamedSharding(mesh, s))
+        return y.copy() if y is x else y
+
+    return jax.tree.map(place, state, specs)
 
 
 def shard_round_body(core, mesh, state_specs):

@@ -51,6 +51,14 @@ Knob ↔ paper-term map (DiLoCoConfig):
                        pod-axis collectives under shard_map — see
                        core/pod_collectives.py; pass mesh=... to
                        make_round/make_run).
+  pack_wire            sharded quantized transport only: True (default)
+                       ships the real packed payload — every leaf
+                       region's int4 codes+scales (or bf16 elements)
+                       coalesced into ONE wire buffer per fragment,
+                       reduced by a single pod-axis all-gather — so the
+                       lowered HLO carries exactly the bytes the packed
+                       static model charges; False keeps the legacy
+                       per-leaf dequantized-f32 gathers for comparison.
 
 The streaming round plugs into the scanned driver: ``diloco.make_run``
 (and ``make_round``) dispatch here when ``streaming_fragments > 0``, so
@@ -188,6 +196,10 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
         axis = pod_collectives.POD_AXIS
     else:
         n_pods, axis = 1, None
+    # packed wire: the sharded quantized transport ships real
+    # codes+scales bytes, one coalesced all-gather per fragment
+    packed = (sharded and getattr(dcfg, "pack_wire", True)
+              and dcfg.outer_grad_dtype in ("bfloat16", "int4"))
     k_loc = dcfg.k // n_pods
     sched = fragments.schedule(P, dcfg.H, dcfg.stream_tau)
     alpha = float(dcfg.stream_alpha)
@@ -256,6 +268,66 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
         leaf_active = [tuple(bool(np.any(np.asarray(l))) for l in
                              leaves(mk)) for mk in part.masks]
         lr_, mu = dcfg.outer_lr, dcfg.outer_momentum
+        frag_regions = (fragments.fragment_regions(part, gp)
+                        if packed else None)
+
+        def packed_send(frag, gp_, src_, residual_, pending_):
+            """One packed-wire fragment sync: per leaf region, quantize
+            the local band's delta (+ error-feedback residual) to the
+            real wire format (``kops.wire_encode``), concatenate every
+            region's buffer, issue ONE pod-axis all-gather of the
+            coalesced bytes, then dequantize and mask-reduce locally in
+            the simulated path's op order. Scale blocks are formed per
+            replica per region on the local shard (pod-local by
+            construction); residuals never touch the wire. Returns
+            (pending, residual)."""
+            regs = frag_regions[frag]
+            if not regs:          # override-emptied fragment: no wire
+                return pending_, residual_
+            gp_l, src_l = leaves(gp_), leaves(src_)
+            res_l = (list(leaves(residual_))
+                     if residual_ is not None else None)
+            pend_l = list(leaves(pending_))
+            comm = (m_loc > 0)[:, None]
+            wires, res_entries = [], []
+            for r in regs:
+                d = gp_l[r.leaf][None] - src_l[r.leaf]
+                if dcfg.prune_frac > 0:
+                    d = jax.vmap(lambda dd: sign_prune(
+                        dd, dcfg.prune_frac, mode=kernel_mode))(d)
+                d_r = fragments.region_take(d, r, lead_axes=1)
+                if res_l is not None:
+                    res_r = fragments.region_take(res_l[r.leaf], r,
+                                                  lead_axes=1)
+                    d_r = d_r + res_r
+                wire, local = jax.vmap(lambda v: kops.wire_encode(
+                    v, qdtype, mode=kernel_mode))(d_r)
+                wires.append(wire)
+                if res_l is not None:
+                    # communicating replicas consume their residual;
+                    # dropped/inactive ones keep accumulating (their
+                    # payload never enters the mean)
+                    res_entries.append((r, jnp.where(
+                        comm, d_r - local, res_r)))
+            gathered = pod_collectives.gather_wire(
+                jnp.concatenate(wires, axis=1), axis=axis)
+            off = 0
+            for r in regs:
+                W = kops.wire_elems(r.elems, qdtype)
+                vals = jax.vmap(lambda w: kops.wire_decode(
+                    w, r.elems, qdtype, mode=kernel_mode))(
+                    gathered[:, off:off + W])
+                off += W
+                # the simulated transport's reduction op, verbatim
+                a = jnp.tensordot(m, vals, axes=(0, 0)) / denom
+                pend_l[r.leaf] = fragments.region_put(
+                    pend_l[r.leaf], r, a)
+            for r, nres in res_entries:
+                res_l[r.leaf] = fragments.region_put(
+                    res_l[r.leaf], r, nres, lead_axes=1)
+            new_res = (jax.tree_util.tree_unflatten(treedef, res_l)
+                       if res_l is not None else None)
+            return jax.tree_util.tree_unflatten(treedef, pend_l), new_res
 
         for steps, acts in sched.phases:
             if steps:
@@ -269,7 +341,12 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
             for ev in acts:
                 mk_l = leaves(part.masks[ev.fragment])
                 act_l = leaf_active[ev.fragment]
-                if ev.kind == "send":
+                if ev.kind == "send" and packed:
+                    pending, residual = packed_send(
+                        ev.fragment, gp,
+                        ist.master if mixed else rp, residual, pending)
+                    armed = armed.at[ev.fragment].set(1.0)
+                elif ev.kind == "send":
                     # snapshot Δ_i = θ_frag − θ_i,frag (master-vs-master
                     # under a mixed policy), quantize for the wire, and
                     # reduce — the simulated all-reduce starts here and
@@ -413,16 +490,20 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
             "drop_frac": 1.0 - drop_mask.mean(),
             "inner_loss": loss_mean,
             "inner_loss_last": loss_last,
-            # simulated wire bytes one replica sends: peak per sync
-            # event and total over the round's P syncs (exact: int4's
-            # per-block f32 scales are charged per contiguous leaf
-            # region, the unit a real sender packs and quantizes)
+            # wire bytes one replica sends: peak per sync event and
+            # total over the round's P syncs (exact: int4's per-block
+            # f32 scales are charged per contiguous leaf region, the
+            # unit the sender packs and quantizes; on the packed
+            # transport this is the byte-exact size of the gathered
+            # buffers, on the simulated paths the legacy static model)
             "stream_peak_sync_bytes":
-                jnp.float32(max(sum(kops.transport_bytes(e, qdtype)
+                jnp.float32(max(sum(kops.transport_bytes(e, qdtype,
+                                                         packed=packed)
                                     for e in regs)
                                 for regs in part.region_sizes)),
             "stream_round_sync_bytes":
-                jnp.float32(sum(kops.transport_bytes(e, qdtype)
+                jnp.float32(sum(kops.transport_bytes(e, qdtype,
+                                                     packed=packed)
                                 for regs in part.region_sizes
                                 for e in regs)),
         }

@@ -162,6 +162,10 @@ def sign_prune_tree(tree, frac: float, *, mode: str = "auto"):
 # int4 is the large-tensor amortization; exact wire bytes (with the
 # ceil'd per-block scale count) come from ``transport_bytes``.
 QUANT_BLOCK = 128
+# Packed int4 wire sections are padded to this byte boundary so the f32
+# scale section that follows the nibble-packed codes stays word-aligned
+# (what a real sender's framing would do; charged by the packed model).
+WIRE_ALIGN = 4
 TRANSPORT_BYTES_PER_ELEM = {
     "float32": 4.0,
     "bfloat16": 2.0,
@@ -201,20 +205,170 @@ def quant_roundtrip_tree(tree, dtype: str, *, mode: str = "auto"):
                         tree)
 
 
-def transport_bytes(n_elems: int, dtype: str) -> float:
-    """Simulated wire bytes for ``n_elems`` outer-gradient elements.
+def transport_bytes(n_elems: int, dtype: str, *,
+                    packed: bool = False) -> float:
+    """Wire bytes for ``n_elems`` outer-gradient elements.
 
+    ``packed=False`` (the legacy fake-quant model, kept for comparison):
     int4 charges 0.5 B of codes per element plus one f32 scale per
     (started) 128-element block of the flattened tensor — a tensor that
     does not divide evenly still ships a scale for its ragged tail, so
     the scale overhead is ceil(n/128) blocks, not n/128.
+
+    ``packed=True`` is the EXACT byte count of the packed wire buffer
+    ``wire_encode`` builds (and the sharded transport all-gathers):
+    int4 nibble-packs two codes per int8 byte — an odd element count
+    still ships its ragged final byte, so the code section is
+    ceil(n/2) bytes, padded to the ``WIRE_ALIGN`` word boundary —
+    followed by one f32 scale per started 128-element block. float32 /
+    bfloat16 ship whole elements, so their packed and legacy models
+    coincide.
     """
     if dtype not in TRANSPORT_BYTES_PER_ELEM:
         raise ValueError(f"unknown transport dtype {dtype!r}")
     if dtype == "int4":
-        blocks = -(-int(n_elems) // QUANT_BLOCK)
-        return n_elems * 0.5 + 4.0 * blocks
+        n = int(n_elems)
+        blocks = -(-n // QUANT_BLOCK)
+        if packed:
+            code_bytes = -(-n // 2)
+            code_bytes += (-code_bytes) % WIRE_ALIGN
+            return float(code_bytes + 4 * blocks)
+        return n * 0.5 + 4.0 * blocks
     return n_elems * TRANSPORT_BYTES_PER_ELEM[dtype]
+
+
+# ---------------------------------------------------------------------------
+# packed int4 wire: codes+scales as one byte buffer (sharded transport)
+# ---------------------------------------------------------------------------
+
+def _block_pad(flat, rows):
+    if rows * QUANT_BLOCK != flat.shape[0]:
+        flat = jnp.pad(flat, (0, rows * QUANT_BLOCK - flat.shape[0]))
+    return flat.reshape(rows, QUANT_BLOCK)
+
+
+def pack_int4(codes, *, mode: str = "auto"):
+    """Nibble-pack flat (n,) int8 codes in [-7, 7] -> (ceil(n/2),) int8
+    wire bytes (two 4-bit two's-complement codes per byte, element
+    order). Exact inverse: ``unpack_int4``."""
+    n = codes.shape[0]
+    use_kernel, interpret = _resolve(mode)
+    if not use_kernel:
+        return ref.pack_int4(codes)
+    rows = -(-n // QUANT_BLOCK)
+    c2d = _block_pad(codes, rows)
+    out = _quant.pack_int4(c2d, interpret=interpret)
+    return out.reshape(-1)[:-(-n // 2)]
+
+
+def unpack_int4(packed, n: int, *, mode: str = "auto"):
+    """Inverse of ``pack_int4``: (ceil(n/2),) int8 bytes -> (n,) int8
+    codes with 4-bit two's-complement sign extension."""
+    use_kernel, interpret = _resolve(mode)
+    if not use_kernel:
+        return ref.unpack_int4(packed, n)
+    rows = -(-n // QUANT_BLOCK)
+    half = QUANT_BLOCK // 2
+    p = packed
+    if p.shape[0] != rows * half:
+        p = jnp.pad(p, (0, rows * half - p.shape[0]))
+    out = _quant.unpack_int4(p.reshape(rows, half), interpret=interpret)
+    return out.reshape(-1)[:n]
+
+
+def wire_dtype(dtype: str):
+    """Element dtype of the wire buffer ``wire_encode`` builds. bf16
+    rides as bit-cast uint16: shipping raw bits denies XLA the
+    convert-hoisting rewrite that would widen the collective back to
+    f32 (observed on the CPU backend — the convert is free to cross an
+    all-gather, a bitcast is not)."""
+    if dtype == "int4":
+        return jnp.uint8
+    if dtype == "bfloat16":
+        return jnp.uint16
+    raise ValueError(f"no packed wire for transport dtype {dtype!r}")
+
+
+def wire_elems(n_elems: int, dtype: str) -> int:
+    """Length of the wire buffer for one region of ``n_elems``
+    (elements of ``wire_dtype``; for int4 that is exactly
+    ``transport_bytes(n, 'int4', packed=True)`` bytes)."""
+    if dtype == "int4":
+        return int(transport_bytes(n_elems, dtype, packed=True))
+    if dtype == "bfloat16":
+        return int(n_elems)
+    raise ValueError(f"no packed wire for transport dtype {dtype!r}")
+
+
+def wire_encode(x, dtype: str, *, mode: str = "auto"):
+    """Encode one flat (n,) region for the packed wire.
+
+    Returns ``(wire, local)``: ``wire`` is what the collective ships —
+    bf16 the raw bf16 elements, int4 ONE uint8 buffer laying out the
+    nibble-packed codes (ceil(n/2) bytes, zero-padded to the
+    ``WIRE_ALIGN`` boundary) followed by the per-128-block f32 scales
+    bit-cast to bytes; ``local`` is the dequantized f32 value of the
+    sender's own payload (what ``wire_decode`` will recover on every
+    receiver — used for the error-feedback residual without a second
+    decode).
+    """
+    if dtype == "bfloat16":
+        w = x.reshape(-1).astype(jnp.bfloat16)
+        # ship the raw bf16 bits as uint16 (see wire_dtype)
+        return (jax.lax.bitcast_convert_type(w, jnp.uint16),
+                w.astype(jnp.float32))
+    if dtype != "int4":
+        raise ValueError(f"no packed wire for transport dtype {dtype!r}")
+    n = x.shape[0]
+    rows = -(-n // QUANT_BLOCK)
+    x2d = _block_pad(x.reshape(-1).astype(jnp.float32), rows)
+    use_kernel, interpret = _resolve(mode)
+    if use_kernel:
+        codes, scales = _quant.quantize_int4(x2d, interpret=interpret)
+        local2d = _quant.dequantize_int4(codes, scales,
+                                         interpret=interpret)
+    else:
+        codes, scales = ref.quantize_int4(x2d)
+        local2d = ref.dequantize_int4(codes, scales)
+    code_bytes = pack_int4(codes.reshape(-1)[:n], mode=mode)
+    pad = (-code_bytes.shape[0]) % WIRE_ALIGN
+    if pad:
+        code_bytes = jnp.pad(code_bytes, (0, pad))
+    scale_bytes = jax.lax.bitcast_convert_type(
+        scales.reshape(rows), jnp.uint8).reshape(-1)
+    wire = jnp.concatenate(
+        [jax.lax.bitcast_convert_type(code_bytes, jnp.uint8),
+         scale_bytes])
+    local = local2d.reshape(-1)[:n]
+    return wire, local
+
+
+def wire_decode(wire, n_elems: int, dtype: str, *, mode: str = "auto"):
+    """Decode one region's wire buffer back to (n,) f32 — the exact
+    value the sender's ``wire_encode`` reported as ``local`` (pack →
+    unpack is the identity on the int4 code grid, and the f32 scales
+    ride bit-exact)."""
+    if dtype == "bfloat16":
+        return jax.lax.bitcast_convert_type(
+            wire, jnp.bfloat16).astype(jnp.float32)
+    if dtype != "int4":
+        raise ValueError(f"no packed wire for transport dtype {dtype!r}")
+    n = int(n_elems)
+    rows = -(-n // QUANT_BLOCK)
+    cb = -(-n // 2)
+    pad = (-cb) % WIRE_ALIGN
+    codes = unpack_int4(
+        jax.lax.bitcast_convert_type(wire[:cb], jnp.int8), n, mode=mode)
+    scales = jax.lax.bitcast_convert_type(
+        wire[cb + pad:].reshape(rows, 4), jnp.float32)
+    use_kernel, interpret = _resolve(mode)
+    c2d = _block_pad(codes, rows)
+    if use_kernel:
+        vals = _quant.dequantize_int4(c2d, scales.reshape(rows, 1),
+                                      interpret=interpret)
+    else:
+        vals = ref.dequantize_int4(c2d, scales.reshape(rows, 1))
+    return vals.reshape(-1)[:n]
 
 
 # ---------------------------------------------------------------------------

@@ -7,18 +7,24 @@ the gradient takes a quantize→dequantize round trip before the in-graph
 replica average, so the *numerics* of the low-precision collective are
 exact while the bytes saved are accounted analytically.
 
-Three kernels, all on the (blocks, 128) layout every optimizer kernel
+Five kernels, all on the (blocks, 128) layout every optimizer kernel
 in this package uses (one f32 scale per 128-element block):
 
   * ``quantize_int4``   — codes int8 in [-7, 7] + per-block f32 scale
                           (the wire format: 0.5 B/elem + 4 B/block);
   * ``dequantize_int4`` — codes × scale back to f32;
+  * ``pack_int4``       — nibble-pack (R, 128) codes into (R, 64) wire
+                          bytes (two 4-bit two's-complement codes per
+                          int8 byte; flattening the output row-major
+                          gives bytes in element order);
+  * ``unpack_int4``     — the exact inverse, with sign extension;
   * ``fake_quant``      — the fused round trip in ONE VMEM pass (codes
                           and scales never touch HBM), used on the
                           simulated transport path. Also serves bf16
                           (cast down/up in-register).
 
-The jnp oracles live in ``ref.py``; ``ops.quant_roundtrip`` dispatches
+The jnp oracles live in ``ref.py``; ``ops.quant_roundtrip`` (and the
+packed-wire codecs ``ops.wire_encode``/``ops.wire_decode``) dispatch
 between them and these kernels via ``kernel_mode``.
 """
 from __future__ import annotations
@@ -55,6 +61,22 @@ def _quantize_kernel(x_ref, q_ref, s_ref):
 def _dequantize_kernel(q_ref, s_ref, o_ref):
     o_ref[...] = (q_ref[...].astype(jnp.float32)
                   * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def _pack_kernel(c_ref, o_ref):
+    # (br, 128) codes -> (br, 64) bytes: lane pairs (2j, 2j+1) fold into
+    # byte j, so the row-major flatten of the output is in element order
+    c = c_ref[...].astype(jnp.int32) & 0xF
+    pairs = c.reshape(c.shape[0], -1, 2)
+    o_ref[...] = (pairs[..., 0] | (pairs[..., 1] << 4)).astype(jnp.int8)
+
+
+def _unpack_kernel(p_ref, o_ref):
+    p = p_ref[...].astype(jnp.int32) & 0xFF
+    nib = jnp.stack([p & 0xF, (p >> 4) & 0xF], axis=-1)
+    nib = nib.reshape(nib.shape[0], -1)
+    # 4-bit two's complement sign extension
+    o_ref[...] = ((nib ^ 8) - 8).astype(jnp.int8)
 
 
 def _fake_quant_kernel(x_ref, o_ref, *, dtype):
@@ -114,6 +136,54 @@ def dequantize_int4(codes, scales, *, block_rows: int = 256,
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(codes, scales)
+    return out[:rows]
+
+
+def pack_int4(codes, *, block_rows: int = 256, interpret: bool = False):
+    """Nibble-pack (R, 128) int8 codes -> (R, 64) int8 wire bytes (two
+    4-bit two's-complement codes per byte; row-major flatten of the
+    output is element-ordered — ``ref.pack_int4`` on the flat codes)."""
+    rows, cols = codes.shape
+    br = min(block_rows, rows)
+    rows_p = -(-rows // br) * br
+    if rows_p != rows:
+        codes = jnp.pad(codes, ((0, rows_p - rows), (0, 0)))
+    tile = pl.BlockSpec((br, cols), lambda i: (i, 0))
+    otile = pl.BlockSpec((br, cols // 2), lambda i: (i, 0))
+    out = pl.pallas_call(
+        _pack_kernel,
+        grid=(rows_p // br,),
+        in_specs=[tile],
+        out_specs=otile,
+        out_shape=jax.ShapeDtypeStruct((rows_p, cols // 2), jnp.int8),
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(codes)
+    return out[:rows]
+
+
+def unpack_int4(packed, *, block_rows: int = 256,
+                interpret: bool = False):
+    """Inverse of ``pack_int4``: (R, 64) int8 bytes -> (R, 128) int8
+    codes in [-7, 7]."""
+    rows, cols = packed.shape
+    br = min(block_rows, rows)
+    rows_p = -(-rows // br) * br
+    if rows_p != rows:
+        packed = jnp.pad(packed, ((0, rows_p - rows), (0, 0)))
+    tile = pl.BlockSpec((br, cols), lambda i: (i, 0))
+    otile = pl.BlockSpec((br, cols * 2), lambda i: (i, 0))
+    out = pl.pallas_call(
+        _unpack_kernel,
+        grid=(rows_p // br,),
+        in_specs=[tile],
+        out_specs=otile,
+        out_shape=jax.ShapeDtypeStruct((rows_p, cols * 2), jnp.int8),
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(packed)
     return out[:rows]
 
 

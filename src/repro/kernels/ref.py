@@ -146,6 +146,27 @@ def dequantize_int4(codes, scales):
     return codes.astype(jnp.float32) * scales
 
 
+def pack_int4(codes):
+    """Nibble-pack int4 codes: flat (n,) int8 in [-7, 7] -> (ceil(n/2),)
+    int8 wire bytes. Byte b holds element 2b in its low nibble and
+    element 2b+1 in its high nibble (4-bit two's complement); an odd
+    tail pads one zero nibble. This IS the wire format the packed
+    transport all-gathers — 2 codes per byte."""
+    n = codes.shape[0]
+    if n % 2:
+        codes = jnp.pad(codes, (0, 1))
+    c = codes.reshape(-1, 2).astype(jnp.int32) & 0xF
+    return (c[:, 0] | (c[:, 1] << 4)).astype(jnp.int8)
+
+
+def unpack_int4(packed, n: int):
+    """Inverse of ``pack_int4``: (ceil(n/2),) int8 wire bytes -> (n,)
+    int8 codes in [-7, 7] (4-bit two's complement sign extension)."""
+    p = packed.astype(jnp.int32) & 0xFF
+    nib = jnp.stack([p & 0xF, (p >> 4) & 0xF], axis=-1).reshape(-1)[:n]
+    return ((nib ^ 8) - 8).astype(jnp.int8)
+
+
 def fake_quant(x, dtype: str):
     """Quantize→dequantize round trip simulating low-precision
     transport of outer gradients. x: (R, C) blocks (int4) or any shape

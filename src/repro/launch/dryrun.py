@@ -252,11 +252,15 @@ def build_stream_run(arch: Arch, cfg, *, k: int, mesh, batch: int,
                      seq_len: int, fragments_: int = STREAM_FRAGMENTS,
                      H_inner: int = STREAM_H,
                      rounds: int = STREAM_ROUNDS,
-                     kernel_mode: str = "auto"):
+                     kernel_mode: str = "auto",
+                     wire_dtype: str = "float32"):
     """The sharded streaming DiLoCo round on the multi-pod mesh: the
     scanned ``make_run`` driver with ``transport="sharded"`` — inner
     steps are pod-local shard_map compute and every fragment's outer
     gradient is a real pod-axis collective at its staggered offset.
+    ``wire_dtype`` selects the transport precision: quantized dtypes
+    lower the PACKED wire (one coalesced codes+scales all-gather per
+    fragment) so the dry-run's collective bytes are the real ones.
     Returns (jitted_run, abstract_state, abstract_key). The HLO is
     checked for the paper's overlap structure via
     ``hlo_analysis.stream_interleaving``."""
@@ -265,7 +269,8 @@ def build_stream_run(arch: Arch, cfg, *, k: int, mesh, batch: int,
     from repro.core import streaming as core_streaming
 
     dcfg = DiLoCoConfig(k=k, H=H_inner, streaming_fragments=fragments_,
-                        transport="sharded", kernel_mode=kernel_mode)
+                        transport="sharded", kernel_mode=kernel_mode,
+                        outer_grad_dtype=wire_dtype)
     total = rounds * H_inner
     tcfg = TrainConfig(total_steps=total, warmup_steps=1,
                        batch_size=batch, seq_len=seq_len,
@@ -367,7 +372,8 @@ def dryrun_pair(arch_name: str, shape_name: str, *, multi_pod: bool,
                 microbatches: int = TRAIN_MICROBATCHES,
                 fns: tuple = ("main",), mesh=None,
                 variant: dict | None = None,
-                kernel_mode: str = "auto") -> list[dict]:
+                kernel_mode: str = "auto",
+                stream_wire: str = "float32") -> list[dict]:
     """Lower+compile the pair; returns one record per lowered fn.
 
     ``variant`` (perf hillclimbing; recorded in each record):
@@ -548,8 +554,11 @@ def dryrun_pair(arch_name: str, shape_name: str, *, multi_pod: bool,
                     srun, sstate, skey = build_stream_run(
                         arch, cfg, k=k, mesh=mesh,
                         batch=max(1, tok_shape[0] // k),
-                        seq_len=shape.seq_len, kernel_mode=kernel_mode)
-                    record("diloco_stream_round", srun, (sstate, skey))
+                        seq_len=shape.seq_len, kernel_mode=kernel_mode,
+                        wire_dtype=stream_wire)
+                    rec = record("diloco_stream_round", srun,
+                                 (sstate, skey))
+                    rec["stream_wire"] = stream_wire
                 if "main" in fns or "ddp" in fns:
                     # synchronous DDP baseline: params replicated across
                     # pods, batch over (pod, data) -> per-step cross-pod
@@ -608,6 +617,12 @@ def main():
                     choices=["auto", "pallas", "interpret", "ref"],
                     help="fused optimizer kernels in the lowered steps "
                          "(auto = Pallas on TPU, jnp oracle elsewhere)")
+    ap.add_argument("--stream-wire", default="float32",
+                    choices=["float32", "bfloat16", "int4"],
+                    help="transport precision of the --fns stream "
+                         "round: quantized dtypes lower the packed "
+                         "wire (coalesced codes+scales all-gathers), "
+                         "so the analyzed cross-pod bytes are real")
     ap.add_argument("--out", default="")
     args = ap.parse_args()
 
@@ -622,7 +637,8 @@ def main():
                                    fns=tuple(args.fns.split(",")),
                                    variant=json.loads(args.variant)
                                    if args.variant else None,
-                                   kernel_mode=args.kernel_mode)
+                                   kernel_mode=args.kernel_mode,
+                                   stream_wire=args.stream_wire)
             except Exception as e:
                 recs = [{"arch": a, "shape": s,
                          "multi_pod": args.multi_pod,

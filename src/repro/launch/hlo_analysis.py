@@ -200,12 +200,19 @@ class CollectiveStats:
     intra_pod_bytes: int = 0
     by_op: dict = dataclasses.field(default_factory=dict)
     count: int = 0
+    # pod-crossing traffic only, split by op — what the packed-wire
+    # benchmark gates against the static byte model (the all-gather
+    # entry IS the quantized transport's measured wire)
+    cross_by_op: dict = dataclasses.field(default_factory=dict)
+    cross_count_by_op: dict = dataclasses.field(default_factory=dict)
 
     def as_dict(self):
         return {"total_bytes": self.total_bytes,
                 "cross_pod_bytes": self.cross_pod_bytes,
                 "intra_pod_bytes": self.intra_pod_bytes,
-                "count": self.count, "by_op": dict(self.by_op)}
+                "count": self.count, "by_op": dict(self.by_op),
+                "cross_by_op": dict(self.cross_by_op),
+                "cross_count_by_op": dict(self.cross_count_by_op)}
 
 
 def collective_stats(hlo_text: str, *, chips_per_pod: int | None = None
@@ -237,6 +244,9 @@ def collective_stats(hlo_text: str, *, chips_per_pod: int | None = None
             st.by_op[op] = st.by_op.get(op, 0) + nbytes
             if _groups_cross_pods(line, chips_per_pod):
                 st.cross_pod_bytes += nbytes
+                st.cross_by_op[op] = st.cross_by_op.get(op, 0) + nbytes
+                st.cross_count_by_op[op] = (
+                    st.cross_count_by_op.get(op, 0) + mult)
             else:
                 st.intra_pod_bytes += nbytes
     return st

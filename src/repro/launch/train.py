@@ -45,6 +45,7 @@ def build(args):
             ("--stream-tau", args.stream_tau != 0),
             ("--error-feedback", args.error_feedback),
             ("--transport", args.transport != "simulated"),
+            ("--no-pack-wire", not args.pack_wire),
             ("--pods", args.pods != 0)) if on]
         if ignored:
             raise SystemExit(
@@ -68,6 +69,7 @@ def build(args):
                         outer_grad_dtype=args.outer_grad_dtype,
                         error_feedback=args.error_feedback,
                         transport=args.transport,
+                        pack_wire=args.pack_wire,
                         param_dtype=args.param_dtype,
                         master_dtype=args.master_dtype)
     total = args.pretrain_steps + args.rounds * args.H
@@ -101,7 +103,9 @@ def run(args):
         from repro.optim import adamw, precision
         pol = precision.policy_of(tcfg)
         opt = adamw.init(params, policy=pol)
-        work = precision.cast_tree(params, pol.param_dtype)
+        # fresh=True: the step donates (work, opt); an identity cast
+        # would alias params and the donation would delete them
+        work = precision.cast_tree(params, pol.param_dtype, fresh=True)
         for i in range(args.pretrain_steps):
             key, sub = jax.random.split(key)
             batch = {"tokens": sampler.sample_validation(
@@ -313,6 +317,13 @@ def make_parser():
                          "reduces every fragment with a real pod-axis "
                          "collective (needs >= --pods devices; on CPU "
                          "set --xla_force_host_platform_device_count)")
+    ap.add_argument("--no-pack-wire", dest="pack_wire",
+                    action="store_false", default=True,
+                    help="sharded quantized transport: gather the "
+                         "legacy dequantized-f32 payload per leaf "
+                         "instead of the packed int4 codes+scales / "
+                         "bf16 wire buffer (default: packed — the "
+                         "collective ships what the accounting charges)")
     ap.add_argument("--pods", type=int, default=0,
                     help="pod count of the sharded-transport mesh "
                          "(0 = min(k, device count); must divide k)")

@@ -90,8 +90,16 @@ def policy_of(cfg) -> Policy:
                        getattr(cfg, "master_dtype", "float32"))
 
 
-def cast_tree(tree, dtype):
-    """Cast every leaf to ``dtype`` (no-op leaves stay unchanged)."""
+def cast_tree(tree, dtype, *, fresh: bool = False):
+    """Cast every leaf to ``dtype`` (no-op leaves stay unchanged).
+
+    ``fresh=True`` guarantees every returned leaf is a NEW buffer even
+    when the cast is the identity (``astype`` to the leaf's own dtype
+    returns the same array). Use it whenever the result is handed to a
+    donated jit argument: donating an aliased leaf deletes the
+    caller's array with it."""
+    if fresh:
+        return jax.tree.map(lambda x: jnp.array(x, dtype=dtype), tree)
     return jax.tree.map(lambda x: x.astype(dtype), tree)
 
 

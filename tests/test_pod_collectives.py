@@ -24,6 +24,12 @@ What is pinned here:
     all-reduces *interleaved* with inner-step compute (not clustered at
     round end), and zero cross-pod collectives inside the inner-step
     scan bodies (launch/hlo_analysis.stream_interleaving).
+  * PACKED WIRE — the default quantized sharded transport coalesces
+    every fragment's leaf regions into ONE packed codes+scales buffer
+    and all-gathers it once per fragment per sync; the gathered bytes
+    in the lowered HLO equal k × the packed static model, the values
+    match the simulated transport within the quant-error bound (bf16
+    bitwise), and the pack_wire=False legacy transport stays live.
   * SCHEDULE × PARTITION properties (hypothesis) — every parameter
     element of every communicating replica is reduced exactly once per
     round for arbitrary P, non-divisible H, override patterns and pod
@@ -365,6 +371,158 @@ def test_hlo_pod_all_reduces_interleave(setup):
     # and the generic collective accounting sees cross-pod bytes
     coll = H_hlo.collective_stats(hlo, chips_per_pod=4)
     assert coll.cross_pod_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# packed wire: coalesced per-fragment gathers of real codes+scales
+# ---------------------------------------------------------------------------
+
+def _toy_tree(seed=0):
+    rng = np.random.default_rng(seed)
+    mk = lambda *s: jnp.asarray(rng.normal(size=s).astype(np.float32))
+    return {"embed": mk(7, 4), "stack_w": mk(5, 3, 2),
+            "stack_b": mk(5, 2), "head": mk(4, 3)}
+
+
+def _packed_mean_tree(params, d, m, P, pods, dt):
+    """Pending tree from the packed transport: per fragment, encode
+    every region of the local band, concatenate, ONE gather_wire,
+    decode + masked mean — the exact op sequence of
+    streaming.packed_send, at the wire level."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as Pspec
+
+    part = fragments.partition_params(params, P)
+    regions = fragments.fragment_regions(part, params)
+    denom = jnp.maximum(m.sum(), 1e-9)
+    mesh = _pod_mesh(pods)
+    treedef = jax.tree_util.tree_structure(params)
+
+    def body(d_loc):
+        leaves_d = jax.tree_util.tree_leaves(d_loc)
+        pend = [jnp.zeros(l.shape[1:], jnp.float32) for l in leaves_d]
+        for regs in regions:
+            wires = [jax.vmap(lambda v: kops.wire_encode(
+                v, dt, mode="ref")[0])(
+                fragments.region_take(leaves_d[r.leaf], r, lead_axes=1))
+                for r in regs]
+            g = pod_collectives.gather_wire(
+                jnp.concatenate(wires, axis=1))
+            off = 0
+            for r in regs:
+                W = kops.wire_elems(r.elems, dt)
+                vals = jax.vmap(lambda w: kops.wire_decode(
+                    w, r.elems, dt, mode="ref"))(g[:, off:off + W])
+                off += W
+                a = jnp.tensordot(m, vals, axes=(0, 0)) / denom
+                pend[r.leaf] = fragments.region_put(pend[r.leaf], r, a)
+        return jax.tree_util.tree_unflatten(treedef, pend)
+
+    fn = jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: Pspec("pod"), d),),
+        out_specs=jax.tree.map(lambda _: Pspec(), params),
+        check_rep=False))
+    return fn(d)
+
+
+@pytest.mark.parametrize("pods", [2, 4])
+@pytest.mark.parametrize("P", [1, 2, 4])
+def test_packed_wire_mean_matches_simulated(P, pods):
+    """Packed-wire reduction vs the simulated transport across
+    P ∈ {1,2,4} × pods ∈ {2,4}: bf16 payload values are exact on the
+    wire, so the reduced means agree to reassociation (XLA lowers the
+    (k,)·(k,region) dot with a different accumulation blocking than
+    the (k,)·(k,leaf-shape) reference — ~1 ulp); int4 agrees within
+    the transport's own quant-error bound — region-wise scale blocks
+    may cut a leaf's 128-block lattice differently than the simulated
+    whole-leaf blocks, shifting each side at most amax/14 from the
+    true delta."""
+    params = _toy_tree()
+    k = pods
+    rng = np.random.default_rng(P * 10 + pods)
+    d = jax.tree.map(lambda l: jnp.asarray(
+        rng.normal(size=(k,) + l.shape).astype(np.float32)), params)
+    m = jnp.asarray((rng.random(k) > 0.3).astype(np.float32))
+    m = m.at[0].set(1.0)
+    denom = jnp.maximum(m.sum(), 1e-9)
+
+    def simulated(dt):
+        q = jax.tree.map(lambda l: jax.vmap(
+            lambda v: kops.quant_roundtrip(v, dt, mode="ref"))(l), d)
+        return jax.tree.map(
+            lambda l: jnp.tensordot(m, l, axes=(0, 0)) / denom, q)
+
+    got = _packed_mean_tree(params, d, m, P, pods, "bfloat16")
+    for a, b in zip(jax.tree.leaves(simulated("bfloat16")),
+                    jax.tree.leaves(got)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+
+    got = _packed_mean_tree(params, d, m, P, pods, "int4")
+    for leaf, a, b in zip(jax.tree.leaves(d),
+                          jax.tree.leaves(simulated("int4")),
+                          jax.tree.leaves(got)):
+        bound = float(jnp.max(jnp.abs(leaf))) / 7.0 + 1e-7
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=bound)
+
+
+def test_packed_wire_is_default_and_legacy_still_works(setup):
+    """pack_wire=False keeps the PR 4 fake-quant transport alive for
+    comparison: the legacy int4 sharded run still matches simulated
+    within quant tolerance, and the config default is packed."""
+    assert DiLoCoConfig(k=2, H=4).pack_wire is True
+    arch, loss_fn, params = setup
+    R, k, pods, P = 2, 2, 2, 2
+    drops, acts = _masks(R, k)
+    kw = dict(k=k, H=H, streaming_fragments=P, stream_tau=1,
+              stream_alpha=0.5, outer_grad_dtype="int4",
+              error_feedback=True, pack_wire=False)
+    sim, sh = _run_pair(loss_fn, params, kw, _tcfg(R), pods=pods, R=R,
+                        drops=drops, acts=acts)
+    for la, lb in zip(jax.tree.leaves(sim[0]), jax.tree.leaves(sh[0])):
+        np.testing.assert_allclose(np.asarray(la, np.float32),
+                                   np.asarray(lb, np.float32),
+                                   rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.slow
+def test_packed_wire_hlo_one_gather_byte_exact(setup):
+    """The acceptance gate, on the lowered HLO itself: the packed int4
+    round issues EXACTLY one pod-axis all-gather per fragment per sync,
+    the gathered bytes equal k × the packed static model (measured,
+    not modeled), and the real wire is ≥ 5× smaller than the same
+    regions at f32."""
+    arch, loss_fn, params = setup
+    k = pods = 2
+    P_frag = 2
+    sampler = make_regime("non_iid", k=k, vocab_size=VOCAB, seed=0)
+    dcfg = DiLoCoConfig(k=k, H=H, streaming_fragments=P_frag,
+                        stream_tau=1, stream_alpha=0.5,
+                        outer_grad_dtype="int4", transport="sharded")
+    mesh = _pod_mesh(pods)
+    run = diloco.make_run(loss_fn, sampler.sample_all_shards, dcfg,
+                          _tcfg(1), rounds_per_call=1, total_steps=H,
+                          batch_size=B, seq_len=S, donate=False,
+                          mesh=mesh)
+    state = pod_collectives.shard_stream_state(
+        streaming.init_state(params, dcfg), mesh)
+    hlo = run.lower(state, jax.random.PRNGKey(5)).compile().as_text()
+    cpp = 8 // pods
+    inter = H_hlo.stream_interleaving(hlo, chips_per_pod=cpp)
+    assert inter["sync_by_op"].get("all-gather", 0) == P_frag, inter
+    coll = H_hlo.collective_stats(hlo, chips_per_pod=cpp)
+    part = fragments.partition_params(params, P_frag)
+    model = k * sum(kops.transport_bytes(e, "int4", packed=True)
+                    for regs in part.region_sizes for e in regs)
+    meas = coll.cross_by_op.get("all-gather", 0)
+    # two-sided: under-shipping the model is as much a regression as
+    # over-shipping (the gather output is k×W bytes by construction)
+    assert 0.95 * model <= meas <= 1.35 * model, (meas, model)
+    f32_model = k * sum(kops.transport_bytes(e, "float32")
+                        for regs in part.region_sizes for e in regs)
+    assert f32_model / meas >= 5.0, (f32_model, meas)
 
 
 # Hypothesis property tests for Partition × schedule × pod banding live

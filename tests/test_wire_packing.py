@@ -1,0 +1,352 @@
+"""Packed-wire subsystem units: int4 nibble pack/unpack (oracle ≡
+kernel, roundtrip identity), the one-buffer wire codec
+(codes+scales layout, byte-exact against the packed accounting),
+``transport_bytes(packed=True)`` accounting, the fragment region index
+the coalesced gather flattens, the donated-carry aliasing regression
+(every state-building path must hand the donated jit FRESH buffers,
+even where ``astype``/``device_put`` would be the identity), and the
+CI claims gate script.
+
+Multi-device pieces (shard_stream_state) run on the 8 fake CPU devices
+tests/conftest.py forces.
+"""
+from __future__ import annotations
+
+import importlib.util
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fragments, pod_collectives, streaming
+from repro.configs.base import DiLoCoConfig
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.launch.mesh import make_mesh
+from repro.optim import adamw, precision
+
+# ---------------------------------------------------------------------------
+# transport_bytes: exact packed accounting (satellite 1)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,expected", [
+    (1, 4 + 4),            # 1 code byte -> aligned to 4, 1 scale
+    (2, 4 + 4),            # ragged final byte shared by 2 codes
+    (8, 4 + 4),            # 4 code bytes, already aligned
+    (127, 64 + 4),         # ceil(127/2)=64 code bytes, 1 block
+    (128, 64 + 4),
+    (129, 68 + 8),         # 65 -> pad to 68; 2 started blocks
+    (255, 128 + 8),
+    (256, 128 + 8),
+    (300, 152 + 12),       # 150 -> 152; 3 started blocks
+])
+def test_packed_int4_accounting(n, expected):
+    assert kops.transport_bytes(n, "int4", packed=True) == expected
+    # and it is exactly the wire buffer length the codec builds
+    assert kops.wire_elems(n, "int4") == expected
+
+
+def test_packed_vs_legacy_models():
+    # even, block-aligned sizes: the packed model equals the legacy
+    # fake-quant model (0.5 B/elem + 4 B/block); ragged/odd sizes pay
+    # real bytes (whole final byte + alignment) the fraction hides
+    assert kops.transport_bytes(256, "int4", packed=True) == \
+        kops.transport_bytes(256, "int4")
+    assert kops.transport_bytes(255, "int4", packed=True) > \
+        kops.transport_bytes(255, "int4")
+    # f32 / bf16 ship whole elements: packed == legacy
+    for dt in ("float32", "bfloat16"):
+        assert kops.transport_bytes(123, dt, packed=True) == \
+            kops.transport_bytes(123, dt)
+    with pytest.raises(ValueError):
+        kops.transport_bytes(10, "int3", packed=True)
+
+
+# ---------------------------------------------------------------------------
+# pack/unpack: oracle ≡ kernel, roundtrip identity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 127, 128, 129, 257, 1000])
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+def test_pack_unpack_roundtrip(n, mode):
+    rng = np.random.default_rng(n)
+    codes = jnp.asarray(rng.integers(-7, 8, size=(n,)).astype(np.int8))
+    packed = kops.pack_int4(codes, mode=mode)
+    assert packed.shape == (-(-n // 2),) and packed.dtype == jnp.int8
+    out = kops.unpack_int4(packed, n, mode=mode)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(codes))
+
+
+@pytest.mark.parametrize("n", [5, 128, 1000])
+def test_pack_kernel_matches_oracle_bitwise(n):
+    rng = np.random.default_rng(n + 7)
+    codes = jnp.asarray(rng.integers(-7, 8, size=(n,)).astype(np.int8))
+    np.testing.assert_array_equal(
+        np.asarray(kops.pack_int4(codes, mode="ref")),
+        np.asarray(kops.pack_int4(codes, mode="interpret")))
+    packed = kops.pack_int4(codes, mode="ref")
+    np.testing.assert_array_equal(
+        np.asarray(kops.unpack_int4(packed, n, mode="ref")),
+        np.asarray(kops.unpack_int4(packed, n, mode="interpret")))
+
+
+def test_pack_nibble_layout():
+    """Byte b = elem 2b low nibble | elem 2b+1 high nibble (two's
+    complement) — the exact layout a receiver must assume."""
+    codes = jnp.asarray([1, -1, 7, -7, 0], jnp.int8)
+    packed = np.asarray(ref.pack_int4(codes))
+    assert packed[0] == np.int8((1 | (0xF << 4)) - (1 << 8))  # 0xF1
+    assert packed[1] == np.int8(0x97 - (1 << 8))              # 7 | 9<<4
+    assert packed[2] == 0x00                                  # 0 | pad
+
+
+# ---------------------------------------------------------------------------
+# wire codec: one buffer, byte-exact, value-preserving
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 3, 128, 129, 300, 1000])
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+def test_int4_wire_codec_roundtrip(n, mode):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    wire, local = kops.wire_encode(x, "int4", mode=mode)
+    assert wire.dtype == jnp.uint8
+    assert wire.shape == (kops.wire_elems(n, "int4"),)
+    dec = kops.wire_decode(wire, n, "int4", mode=mode)
+    # decode recovers the sender's own dequantized value bit-for-bit
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(local))
+    # and the payload is the fake-quant roundtrip of the same region
+    rt = kops.quant_roundtrip(x, "int4", mode=mode)
+    np.testing.assert_array_equal(np.asarray(local), np.asarray(rt))
+
+
+@pytest.mark.parametrize("n", [1, 255, 256])
+def test_bf16_wire_codec(n):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    wire, local = kops.wire_encode(x, "bfloat16")
+    # raw bf16 bits as uint16: 2 B/elem on the wire, and XLA cannot
+    # hoist a widening convert across the collective (no convert)
+    assert wire.dtype == jnp.uint16 and wire.shape == (n,)
+    dec = kops.wire_decode(wire, n, "bfloat16")
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(local))
+    np.testing.assert_array_equal(
+        np.asarray(local),
+        np.asarray(x.astype(jnp.bfloat16).astype(jnp.float32)))
+
+
+def test_wire_codec_rejects_f32():
+    with pytest.raises(ValueError):
+        kops.wire_encode(jnp.ones((4,)), "float32")
+    with pytest.raises(ValueError):
+        kops.wire_dtype("float32")
+
+
+# ---------------------------------------------------------------------------
+# fragment regions: the static index the coalesced wire flattens
+# ---------------------------------------------------------------------------
+
+
+def _toy_params():
+    return {"embed": jnp.arange(28.0).reshape(7, 4),
+            "stack_w": jnp.arange(30.0).reshape(5, 3, 2),
+            "stack_b": jnp.arange(10.0).reshape(5, 2),
+            "head": jnp.arange(12.0).reshape(4, 3)}
+
+
+@pytest.mark.parametrize("P", [1, 2, 3, 4])
+def test_fragment_regions_match_region_sizes(P):
+    params = _toy_params()
+    part = fragments.partition_params(params, P)
+    regions = fragments.fragment_regions(part, params)
+    assert len(regions) == P
+    for p in range(P):
+        assert tuple(r.elems for r in regions[p]) == \
+            tuple(part.region_sizes[p])
+    # every region take/put roundtrips and covers each element once
+    leaves = jax.tree_util.tree_leaves(params)
+    covered = [np.zeros(l.shape, np.int32) for l in leaves]
+    for regs in regions:
+        for r in regs:
+            flat = fragments.region_take(leaves[r.leaf], r)
+            assert flat.shape == (r.elems,)
+            zero = jnp.zeros_like(leaves[r.leaf])
+            put = fragments.region_put(zero, r, flat)
+            got = np.asarray(fragments.region_take(put, r))
+            np.testing.assert_array_equal(got, np.asarray(flat))
+            ones = fragments.region_put(
+                jnp.zeros_like(leaves[r.leaf]), r, jnp.ones((r.elems,)))
+            covered[r.leaf] += np.asarray(ones, np.int32)
+    for c in covered:
+        np.testing.assert_array_equal(c, np.ones_like(c))
+
+
+def test_region_take_with_leading_replica_axis():
+    params = _toy_params()
+    part = fragments.partition_params(params, 2)
+    regions = fragments.fragment_regions(part, params)
+    leaf = jnp.stack([params["stack_w"], params["stack_w"] + 100.0])
+    for regs in regions:
+        for r in regs:
+            if r.leaf == 1 and r.start is not None:  # stack_w band
+                flat = fragments.region_take(leaf, r, lead_axes=1)
+                assert flat.shape == (2, r.elems)
+                back = fragments.region_put(
+                    jnp.zeros_like(leaf), r, flat, lead_axes=1)
+                np.testing.assert_array_equal(
+                    np.asarray(fragments.region_take(back, r,
+                                                     lead_axes=1)),
+                    np.asarray(flat))
+
+
+# ---------------------------------------------------------------------------
+# donated-carry aliasing regression (satellite 3): every state-building
+# path hands the donated jit FRESH buffers
+# ---------------------------------------------------------------------------
+
+
+def _donate_all(tree):
+    """Donate every leaf of ``tree`` to a trivial jit (the scanned
+    driver's donation pattern) — any leaf aliasing a caller buffer
+    deletes that buffer."""
+    f = jax.jit(lambda t: jax.tree.map(lambda x: x * 1, t),
+                donate_argnums=0)
+    return f(tree)
+
+
+def _assert_alive(tree):
+    for leaf in jax.tree_util.tree_leaves(tree):
+        np.asarray(leaf)  # raises RuntimeError if deleted
+
+
+def test_adamw_init_master_is_fresh_even_when_astype_is_identity():
+    """Mixed policy with f32 incoming params: the f32 master would be
+    an alias under ``astype`` (same dtype ⇒ identity) — ``init`` must
+    copy so donating the state leaves the caller's params alive."""
+    params = {"w": jnp.arange(12.0).reshape(3, 4)}
+    pol = precision.make_policy("bfloat16", "float32")
+    st = adamw.init(params, policy=pol)
+    _donate_all(st)
+    _assert_alive(params)
+
+
+def test_shard_stream_state_is_fresh_even_when_device_put_is_identity():
+    """``jax.device_put`` returns its argument unchanged when the leaf
+    already carries the target sharding — re-placing an already-sharded
+    state must still hand back fresh buffers (donating the result would
+    otherwise delete the caller's state)."""
+    params = {"w": jnp.arange(64.0).reshape(8, 8)}
+    dcfg = DiLoCoConfig(k=2, H=4, streaming_fragments=2,
+                        transport="sharded")
+    mesh = make_mesh((2, 4), ("pod", "data"))
+    state = streaming.init_state(params, dcfg)
+    placed = pod_collectives.shard_stream_state(state, mesh)
+    # second placement: every device_put is now the identity
+    placed2 = pod_collectives.shard_stream_state(placed, mesh)
+    for a, b in zip(jax.tree_util.tree_leaves(placed),
+                    jax.tree_util.tree_leaves(placed2)):
+        assert a is not b
+    _donate_all(placed2)
+    _assert_alive(placed)
+    _assert_alive(params)
+
+
+def test_precision_cast_fresh_survives_donation():
+    """``cast_tree(..., fresh=True)`` (the pretrain handoff path) must
+    copy even when the cast is the identity."""
+    params = {"w": jnp.arange(6.0)}
+    work = precision.cast_tree(params, jnp.float32, fresh=True)
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(work)):
+        assert a is not b
+    _donate_all(work)
+    _assert_alive(params)
+    # the plain cast IS the identity for matching dtypes — the very
+    # footgun fresh=True exists for
+    alias = precision.cast_tree(params, jnp.float32)
+    assert jax.tree_util.tree_leaves(alias)[0] is \
+        jax.tree_util.tree_leaves(params)[0]
+
+
+def test_stream_init_state_survives_donation():
+    """streaming.init_state (global copy, replica broadcast, zeros)
+    must never alias the caller's params."""
+    params = {"w": jnp.arange(12.0).reshape(3, 4)}
+    dcfg = DiLoCoConfig(k=2, H=4, streaming_fragments=2,
+                        outer_grad_dtype="int4", error_feedback=True)
+    st = streaming.init_state(params, dcfg)
+    _donate_all(st)
+    _assert_alive(params)
+
+
+# ---------------------------------------------------------------------------
+# CI claims gate (satellite 4)
+# ---------------------------------------------------------------------------
+
+
+def _load_check_claims():
+    """benchmarks/ is not a package on sys.path under pytest — load
+    the gate script by file path."""
+    path = (pathlib.Path(__file__).resolve().parents[1]
+            / "benchmarks" / "check_claims.py")
+    spec = importlib.util.spec_from_file_location("check_claims", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_claims_gate(tmp_path):
+    cc = _load_check_claims()
+
+    bench = {"claims": {"a_true": True, "b_true": True}}
+    (tmp_path / "BENCH_x.json").write_text(json.dumps(bench))
+    claims = cc.load_claims(str(tmp_path))
+    assert claims == {"BENCH_x.json": bench["claims"]}
+
+    # all true + manifest satisfied -> no errors
+    manifest = {"BENCH_x.json": ["a_true", "b_true"]}
+    assert cc.check(claims, manifest) == []
+
+    # a false claim fails
+    bad = {"BENCH_x.json": {"a_true": False}}
+    assert any("'a_true'" in e for e in cc.check(bad, {}))
+
+    # a manifested claim that disappeared fails
+    assert any("disappeared" in e for e in cc.check(
+        {"BENCH_x.json": {"a_true": True}}, manifest))
+
+    # a manifested FILE that disappeared fails
+    assert any("missing" in e for e in cc.check({}, manifest))
+
+    # unmanifested claims are reported (for --update-manifest)
+    assert cc.unmanifested(claims, {}) == \
+        ["BENCH_x.json: 'a_true'", "BENCH_x.json: 'b_true'"]
+
+
+def test_claims_gate_main(tmp_path):
+    cc = _load_check_claims()
+
+    (tmp_path / "BENCH_ok.json").write_text(
+        json.dumps({"claims": {"fine": True}}))
+    man = tmp_path / "manifest.json"
+    man.write_text(json.dumps({"BENCH_ok.json": ["fine"]}))
+    assert cc.main(["--root", str(tmp_path),
+                    "--manifest", str(man)]) == 0
+    # flip the claim -> exit 1
+    (tmp_path / "BENCH_ok.json").write_text(
+        json.dumps({"claims": {"fine": False}}))
+    assert cc.main(["--root", str(tmp_path),
+                    "--manifest", str(man)]) == 1
+    # --update-manifest merges but never drops
+    (tmp_path / "BENCH_ok.json").write_text(
+        json.dumps({"claims": {"fine": True, "extra": True}}))
+    assert cc.main(["--root", str(tmp_path), "--manifest", str(man),
+                    "--update-manifest"]) == 0
+    merged = json.loads(man.read_text())
+    assert sorted(merged["BENCH_ok.json"]) == ["extra", "fine"]
