@@ -1,0 +1,277 @@
+"""Barrier-free outer sync vs the synchronous baseline — the tentpole
+benchmark for the async + gossip transports. Writes
+``BENCH_async.json`` at the repo root (superseding the old
+``beyond_async`` results module, which is now a thin wrapper over
+this) — the regression record every future PR measures the barrier-free
+tier against.
+
+Three measured comparisons, each with a gated claim:
+
+  equal tokens    sync DiLoCo, async (uniform speeds, λ=1) and gossip
+                  (butterfly, mix=0.5) train on the SAME total token
+                  budget (k·H·R inner steps). Barrier-free application
+                  and pairwise mixing must stay within 1.10× of the
+                  synchronous perplexity — removing the barrier is a
+                  scheduling change, not a model-quality change.
+  stragglers      heterogeneous speeds (1,1,2,4): the synchronous
+                  barrier paces the fleet at the SLOWEST island, the
+                  async engine applies every finished delta
+                  immediately. At equal wall-clock, async must deliver
+                  more outer updates and a better perplexity, and the
+                  λ=0.7 staleness discount must not hurt (§5's
+                  "waiting ... is rather inefficient").
+  faults          a drop/retry scenario (p=0.5, two retries): every
+                  applied delta must match the fault timeline's
+                  exactly-once contract, and graceful degradation must
+                  hold — ≤1.10× the perplexity of a fault-free async
+                  run with a MATCHED number of applied deltas (drops
+                  cost wall-clock; they must not poison the model the
+                  surviving deltas build — Fig 8's finding, carried to
+                  the barrier-free tier).
+
+Plus the wire accounting claim: an int4+error-feedback async
+application ships one packed transfer ≥5× smaller than raw f32.
+
+Run:  PYTHONPATH=src python -m benchmarks.async_sync [--rounds 16 ...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.configs.base import DiLoCoConfig, TrainConfig
+from repro.core import diloco, faults, gossip
+from repro.core.async_diloco import AsyncEngine
+from . import common as C
+
+ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+OUT_PATH = os.path.join(ROOT, "BENCH_async.json")
+
+STRAGGLER_SPEEDS = (1, 1, 2, 4)
+
+# last in-process result, so the superseded beyond_async wrapper can
+# re-export the straggler slice without re-running the whole benchmark
+LAST_RESULT: dict | None = None
+
+
+def _tcfg(p, total):
+    return TrainConfig(inner_lr=p["inner_lr"], warmup_steps=p["warmup"],
+                       total_steps=total, batch_size=p["batch"],
+                       seq_len=p["seq"])
+
+
+def _async_run(loss_fn, sampler, params0, p, *, k, lam, scenario,
+               ticks, total, pre, dcfg_kw=None, seed=0):
+    """One AsyncEngine run; returns (final ppl, history, engine)."""
+    dcfg = DiLoCoConfig(k=k, H=p["H"], transport="async",
+                        staleness_lambda=lam, **(dcfg_kw or {}))
+    eng = AsyncEngine(
+        loss_fn,
+        tuple((lambda i: lambda kk, B, S: sampler.sample_shard(
+            kk, i, B, S))(i) for i in range(k)),
+        dcfg, _tcfg(p, total), scenario=scenario, total_steps=total,
+        seed=seed)
+    state = eng.init_state(params0)
+    state.inner_done = pre           # lr schedule continues the pretrain
+    state, hist = eng.run(state, ticks=ticks)
+    ev = diloco.make_eval(loss_fn)
+    val = sampler.sample_validation(jax.random.PRNGKey(10_000), 64,
+                                    p["seq"])
+    vl = float(ev(state.global_params, val))
+    return float(np.exp(vl)), hist, eng
+
+
+def _gossip_run(loss_fn, sampler, params0, p, *, k, rounds, total, pre):
+    dcfg = DiLoCoConfig(k=k, H=p["H"], transport="gossip",
+                        gossip_pairing="butterfly", gossip_mix=0.5)
+    val = sampler.sample_validation(jax.random.PRNGKey(10_000), 64,
+                                    p["seq"])
+    run = diloco.make_run(loss_fn, sampler.sample_all_shards, dcfg,
+                          _tcfg(p, total), rounds_per_call=rounds,
+                          total_steps=total, batch_size=p["batch"],
+                          seq_len=p["seq"], eval_tokens=val,
+                          eval_every=rounds)
+    state = gossip.init_state(params0, dcfg)
+    state = state._replace(inner_steps_done=jax.numpy.asarray(pre))
+    state, ms = run(state, jax.random.PRNGKey(p["seed"] + 2), None,
+                    None, None)
+    return float(np.exp(float(np.asarray(ms["val_loss"])[-1])))
+
+
+def run(scale: int = 1, *, k=4, rounds=16, straggler_ticks=24,
+        drop_prob=0.5, pretrain=150, seed=0, out=OUT_PATH, **overrides):
+    p = dict(C.DEFAULTS, k=k, seed=seed, pretrain=pretrain, **overrides)
+    rounds = rounds * scale
+    straggler_ticks = straggler_ticks * scale
+    H = p["H"]
+    arch, loss_fn, sampler = C.make_setup("non_iid", k=k, seed=seed)
+    budget = max(rounds * H * k, straggler_ticks * H * k)
+    params0, pre = C.pretrain(arch, loss_fn, sampler, p["pretrain"],
+                              batch=p["batch"], seq=p["seq"],
+                              lr=p["inner_lr"], warmup=p["warmup"],
+                              total=p["pretrain"] + budget, seed=seed)
+    total = pre + budget
+
+    # --- equal token budget: sync vs async (uniform, λ=1) vs gossip ---
+    h, _ = C.run_diloco(arch, loss_fn, sampler, params0, k=k, H=H,
+                        rounds=rounds, step0=pre, batch=p["batch"],
+                        seq=p["seq"], inner_lr=p["inner_lr"],
+                        warmup=p["warmup"], eval_every=rounds, seed=seed)
+    sync_ppl = C.final_ppl(h)
+    async_ppl, _, _ = _async_run(
+        loss_fn, sampler, params0, p, k=k, lam=1.0,
+        scenario=faults.Scenario.uniform(k), ticks=rounds, total=total,
+        pre=pre, seed=seed)
+    gossip_ppl = _gossip_run(loss_fn, sampler, params0, p, k=k,
+                             rounds=rounds, total=total, pre=pre)
+
+    # --- stragglers at equal wall-clock ---
+    scen_str = faults.Scenario(speeds=STRAGGLER_SPEEDS[:k])
+    barrier = scen_str.sync_round_ticks(k)
+    sync_str_rounds = max(1, straggler_ticks // barrier)
+    h, _ = C.run_diloco(arch, loss_fn, sampler, params0, k=k, H=H,
+                        rounds=sync_str_rounds, step0=pre,
+                        batch=p["batch"], seq=p["seq"],
+                        inner_lr=p["inner_lr"], warmup=p["warmup"],
+                        eval_every=sync_str_rounds, seed=seed)
+    sync_str_ppl = C.final_ppl(h)
+    straggler = {"sync": {"ppl": sync_str_ppl,
+                          "outer_updates": sync_str_rounds,
+                          "barrier_ticks": barrier}}
+    for lam in (0.7, 1.0):
+        ppl, hist, _ = _async_run(
+            loss_fn, sampler, params0, p, k=k, lam=lam,
+            scenario=scen_str, ticks=straggler_ticks, total=total,
+            pre=pre, seed=seed)
+        arr = [r for r in hist if r["event"] == "arrival"]
+        straggler[f"async_lam{lam}"] = {
+            "ppl": ppl, "outer_updates": len(arr),
+            "mean_staleness": float(np.mean(
+                [r["staleness"] for r in arr])) if arr else 0.0}
+
+    # --- drop/retry faults: exactly-once + graceful degradation ---
+    # two retries: each transfer independently drops with p, so ~p^3 of
+    # phases are lost outright — degradation-with-retry, not blackout
+    scen_drop = faults.Scenario(speeds=(1,) * k, drop_prob=drop_prob,
+                                max_retries=2, seed=seed)
+    drop_ppl, hist, _ = _async_run(
+        loss_fn, sampler, params0, p, k=k, lam=1.0, scenario=scen_drop,
+        ticks=rounds, total=total, pre=pre, seed=seed)
+    ev_stream = scen_drop.timeline(k, rounds)
+    want = sorted(e.uid for e in ev_stream
+                  if isinstance(e, faults.Arrival))
+    got = sorted(r["uid"] for r in hist if r["event"] == "arrival")
+    lost = sum(1 for r in hist if r["event"] == "lost")
+    # retries/losses cost wall-clock, so the drop run applies fewer
+    # deltas than the full fault-free run — the degradation claim
+    # compares against a fault-free run with a MATCHED applied count
+    # (faults must not poison what the surviving deltas build)
+    ref_ticks = max(1, round(len(got) / k))
+    ref_ppl, _, _ = _async_run(
+        loss_fn, sampler, params0, p, k=k, lam=1.0,
+        scenario=faults.Scenario.uniform(k), ticks=ref_ticks,
+        total=total, pre=pre, seed=seed)
+    # and the synchronous transport under the same drop rate — Fig 8's
+    # graceful-degradation finding, pinned here so the claim rides the
+    # gated BENCH file (fig8_async_drop keeps the full drop sweep)
+    h, _ = C.run_diloco(arch, loss_fn, sampler, params0, k=k, H=H,
+                        rounds=rounds, step0=pre, drop_prob=drop_prob,
+                        batch=p["batch"], seq=p["seq"],
+                        inner_lr=p["inner_lr"], warmup=p["warmup"],
+                        eval_every=rounds, seed=seed)
+    sync_drop_ppl = C.final_ppl(h)
+
+    # --- packed wire accounting (one transfer per application) ---
+    _, whist, eng_q = _async_run(
+        loss_fn, sampler, params0, p, k=k, lam=1.0,
+        scenario=faults.Scenario.uniform(k), ticks=2, total=total,
+        pre=pre, dcfg_kw=dict(outer_grad_dtype="int4",
+                              error_feedback=True), seed=seed)
+    int4_bytes = eng_q.wire_bytes()
+    f32_bytes = 4 * eng_q._n_elems
+
+    a7, a10 = straggler["async_lam0.7"], straggler["async_lam1.0"]
+    payload = {
+        "config": {"k": k, "H": H, "rounds": rounds,
+                   "straggler_speeds": STRAGGLER_SPEEDS[:k],
+                   "straggler_ticks": straggler_ticks,
+                   "drop_prob": drop_prob, "pretrain": pre,
+                   "batch": p["batch"], "seq": p["seq"], "seed": seed},
+        "equal_tokens": {"sync_ppl": sync_ppl, "async_ppl": async_ppl,
+                         "gossip_ppl": gossip_ppl},
+        "straggler": straggler,
+        "drop": {"ppl": drop_ppl, "fault_free_matched_ppl": ref_ppl,
+                 "matched_ticks": ref_ticks,
+                 "applied": len(got), "lost": lost,
+                 "sync_drop_ppl": sync_drop_ppl},
+        "wire": {"int4_bytes_per_apply": int4_bytes,
+                 "f32_bytes_per_apply": f32_bytes,
+                 "applies_recorded": len(
+                     [r for r in whist if r["event"] == "arrival"])},
+        "claims": {
+            "async_ppl_within_1p10_of_sync_equal_tokens":
+                async_ppl <= 1.10 * sync_ppl,
+            "gossip_ppl_within_1p10_of_sync_equal_tokens":
+                gossip_ppl <= 1.10 * sync_ppl,
+            "async_beats_straggler_paced_sync":
+                a7["ppl"] < sync_str_ppl,
+            "async_more_updates_per_wallclock":
+                a7["outer_updates"] > sync_str_rounds,
+            "staleness_discount_not_harmful":
+                a7["ppl"] < a10["ppl"] * 1.05,
+            "async_graceful_under_50pct_drop":
+                drop_ppl <= 1.10 * ref_ppl,
+            "sync_graceful_under_50pct_drop_noniid":
+                sync_drop_ppl <= 1.10 * sync_ppl,
+            "async_exactly_once_under_drop": got == want,
+            "async_int4_wire_reduction_ge5x":
+                f32_bytes >= 5 * int4_bytes,
+        }}
+
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print("wrote", out)
+    C.save("async_sync", payload)
+    global LAST_RESULT
+    LAST_RESULT = payload
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--H", type=int, default=C.DEFAULTS["H"])
+    ap.add_argument("--rounds", type=int, default=16)
+    ap.add_argument("--straggler-ticks", type=int, default=24)
+    ap.add_argument("--drop-prob", type=float, default=0.5)
+    ap.add_argument("--batch", type=int, default=C.DEFAULTS["batch"])
+    ap.add_argument("--seq", type=int, default=C.DEFAULTS["seq"])
+    ap.add_argument("--pretrain", type=int, default=150)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=OUT_PATH)
+    a = ap.parse_args(argv)
+    res = run(1, k=a.k, rounds=a.rounds,
+              straggler_ticks=a.straggler_ticks, drop_prob=a.drop_prob,
+              pretrain=a.pretrain, seed=a.seed, out=a.out,
+              H=a.H, batch=a.batch, seq=a.seq)
+    eq = res["equal_tokens"]
+    print(f"equal tokens: sync={eq['sync_ppl']:.2f} "
+          f"async={eq['async_ppl']:.2f} gossip={eq['gossip_ppl']:.2f}")
+    st = res["straggler"]
+    print(f"stragglers:   sync={st['sync']['ppl']:.2f} "
+          f"({st['sync']['outer_updates']} upd)  "
+          f"async λ=0.7 {st['async_lam0.7']['ppl']:.2f} "
+          f"({st['async_lam0.7']['outer_updates']} upd)")
+    print(f"drop p={res['config']['drop_prob']}: "
+          f"ppl={res['drop']['ppl']:.2f} applied={res['drop']['applied']} "
+          f"lost={res['drop']['lost']}")
+    print(res["claims"])
+    return 0 if all(v for v in res["claims"].values()) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

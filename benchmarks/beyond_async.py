@@ -1,86 +1,34 @@
 """Beyond-paper: asynchronous DiLoCo (the paper's §5 future work).
 
-Heterogeneous islands (speeds 1x/2x/4x) never wait for each other: a
-finished worker's outer gradient is applied immediately with a
-staleness discount λ^τ and the worker re-dispatches from the fresh
-global copy.
-
-Comparisons at equal WALL-CLOCK:
-  * synchronous DiLoCo paced by the SLOWEST island (the paper's §5
-    complaint: "waiting for all workers ... is rather inefficient");
-  * async with λ=0.7 (staleness-discounted);
-  * async with λ=1.0 (no compensation — ablation).
-
-Expectation: async beats the straggler-paced synchronous run at equal
-wall-clock, and the staleness discount is what keeps it stable.
+Superseded by ``benchmarks.async_sync``, which owns the straggler
+comparison (plus equal-token, fault, and wire sections) and writes the
+gated ``BENCH_async.json``. This module stays registered so existing
+``run.py`` invocations and saved-result consumers keep working — it
+just runs the tentpole benchmark and re-exports the straggler slice
+under the old result name.
 """
 from __future__ import annotations
 
-import jax
-import numpy as np
-
-from repro.configs.base import TrainConfig
-from repro.core import diloco
-from repro.core.async_diloco import AsyncConfig, run_async
+from . import async_sync
 from . import common as C
-
-SPEEDS = (1, 1, 1, 1, 2, 2, 4, 4)     # heterogeneous islands
 
 
 def run(scale: int = 1):
-    p = dict(C.DEFAULTS)
-    k, H = len(SPEEDS), p["H"]
-    ticks = 24 * scale                # wall-clock budget
-    arch, loss_fn, sampler = C.make_setup("non_iid", k=k)
-    params0, pre = C.pretrain(arch, loss_fn, sampler, p["pretrain"],
-                              batch=p["batch"], seq=p["seq"],
-                              lr=p["inner_lr"], warmup=p["warmup"],
-                              total=p["pretrain"] + ticks * H)
-    ev = diloco.make_eval(loss_fn)
-    val = sampler.sample_validation(jax.random.PRNGKey(10_000), 64,
-                                    p["seq"])
-    tcfg = TrainConfig(inner_lr=p["inner_lr"], warmup_steps=p["warmup"],
-                       total_steps=pre + ticks * H,
-                       batch_size=p["batch"], seq_len=p["seq"])
-
-    # --- synchronous DiLoCo paced by the slowest island: one outer
-    # round per max(SPEEDS) ticks ---
-    sync_rounds = ticks // max(SPEEDS)
-    h, _ = C.run_diloco(arch, loss_fn, sampler, params0, k=k, H=H,
-                        rounds=sync_rounds, step0=pre, batch=p["batch"],
-                        seq=p["seq"], eval_every=sync_rounds)
-    sync_ppl = C.final_ppl(h)
-
-    # --- async variants ---
-    out = {}
-    for lam in (0.7, 1.0):
-        acfg = AsyncConfig(k=k, H=H, staleness_lambda=lam, speeds=SPEEDS)
-        sample_one = lambda key, B, S: sampler.sample_validation(key, B,
-                                                                 S)
-        gp, hist = run_async(
-            lambda pp, bb: loss_fn(pp, bb),
-            lambda key, B, S: sampler.sample_shard(
-                key, jax.random.randint(key, (), 0, k), B, S),
-            params0, acfg, tcfg, ticks=ticks, eval_fn=ev,
-            eval_tokens=val)
-        out[lam] = {"ppl": hist[-1]["ppl"],
-                    "outer_updates": hist[-1]["version"],
-                    "mean_staleness": float(np.mean(
-                        [r["staleness"] for r in hist]))}
-
+    res = async_sync.LAST_RESULT or async_sync.run(scale)
+    st = res["straggler"]
     payload = {
-        "speeds": SPEEDS, "ticks": ticks,
-        "sync_straggler_ppl": sync_ppl,
-        "sync_outer_updates": sync_rounds,
-        "async": {str(k2): v for k2, v in out.items()},
+        "superseded_by": "async_sync",
+        "speeds": res["config"]["straggler_speeds"],
+        "ticks": res["config"]["straggler_ticks"],
+        "sync_straggler_ppl": st["sync"]["ppl"],
+        "sync_outer_updates": st["sync"]["outer_updates"],
+        "async": {lam: st[f"async_lam{lam}"] for lam in ("0.7", "1.0")},
         "claims": {
-            "async_beats_straggler_paced_sync":
-                out[0.7]["ppl"] < sync_ppl,
-            "async_more_updates_per_wallclock":
-                out[0.7]["outer_updates"] > sync_rounds,
-            "staleness_discount_not_harmful":
-                out[0.7]["ppl"] < out[1.0]["ppl"] * 1.05,
-        }}
+            name: res["claims"][name]
+            for name in ("async_beats_straggler_paced_sync",
+                         "async_more_updates_per_wallclock",
+                         "staleness_discount_not_harmful")},
+    }
     C.save("beyond_async", payload)
     return payload
 

@@ -28,7 +28,8 @@ MODULES = [
     "table3_replicas",
     "table6_pruning",
     "fig10_cosine_similarity",
-    "beyond_async",           # beyond-paper: async DiLoCo (paper §5)
+    "async_sync",             # barrier-free transports (async + gossip)
+    "beyond_async",           # superseded wrapper over async_sync
     "roofline",               # §Roofline aggregation over dry-run JSON
     "wallclock",              # perf: scanned driver vs legacy loop
     "streaming",              # comm: fragment-scheduled outer sync

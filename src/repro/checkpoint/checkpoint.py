@@ -16,6 +16,13 @@ import numpy as np
 
 _SEP = "//"
 
+# npz cannot represent the ml_dtypes extension types (bfloat16 leaves
+# of a mixed-precision state serialize as raw void bytes that nothing
+# can cast back) — such leaves ride the wire as a uint16 bit-view, with
+# their true dtype names recorded under this sentinel key.
+_DTYPES_KEY = "__leaf_dtypes__"
+_VIEW_OF = {"bfloat16": np.uint16}
+
 
 def _flatten(tree) -> dict[str, np.ndarray]:
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
@@ -24,6 +31,33 @@ def _flatten(tree) -> dict[str, np.ndarray]:
         key = _SEP.join(_path_str(p) for p in path)
         out[key] = np.asarray(leaf)
     return out
+
+
+def _encode_extension_dtypes(flat: dict) -> dict:
+    """Bit-view extension-typed arrays to a native dtype and append the
+    ``_DTYPES_KEY`` manifest (absent when every leaf is native)."""
+    names = []
+    for key, arr in list(flat.items()):
+        dt = str(arr.dtype)
+        if dt in _VIEW_OF:
+            flat[key] = arr.view(_VIEW_OF[dt])
+            names.append(f"{key}={dt}")
+    if names:
+        flat[_DTYPES_KEY] = np.asarray(names)
+    return flat
+
+
+def _decode_leaf(data, key: str, views: dict) -> np.ndarray:
+    arr = data[key]
+    if key in views:
+        arr = arr.view(jnp.dtype(views[key]))
+    return arr
+
+
+def _views_of(data) -> dict:
+    if _DTYPES_KEY not in getattr(data, "files", ()):
+        return {}
+    return dict(s.rsplit("=", 1) for s in data[_DTYPES_KEY].tolist())
 
 
 def _path_str(p) -> str:
@@ -38,7 +72,7 @@ def _path_str(p) -> str:
 
 def save(path: str, tree, metadata: dict | None = None) -> None:
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    flat = _flatten(tree)
+    flat = _encode_extension_dtypes(_flatten(tree))
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
                                suffix=".tmp")
     os.close(fd)
@@ -57,6 +91,7 @@ def save(path: str, tree, metadata: dict | None = None) -> None:
 def restore(path: str, example_tree):
     """Restore into the structure of ``example_tree``."""
     with np.load(path) as data:
+        views = _views_of(data)
         flat_example, treedef = jax.tree_util.tree_flatten_with_path(
             example_tree)
         leaves = []
@@ -64,13 +99,62 @@ def restore(path: str, example_tree):
             key = _SEP.join(_path_str(q) for q in p)
             if key not in data:
                 raise KeyError(f"checkpoint missing key {key!r}")
-            arr = data[key]
+            arr = _decode_leaf(data, key, views)
             if tuple(arr.shape) != tuple(np.shape(ex)):
                 raise ValueError(
                     f"shape mismatch for {key}: ckpt {arr.shape} vs "
                     f"example {np.shape(ex)}")
             leaves.append(jnp.asarray(arr, dtype=ex.dtype
                                       if hasattr(ex, "dtype") else None))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def restore_tree(path: str) -> dict:
+    """Structure-free restore: rebuild a nested dict straight from the
+    flat checkpoint keys, no example tree needed.
+
+    Every path segment becomes a dict key — including list/tuple
+    indices, which come back as ``"[i]"`` string keys — so the result
+    is a dicts-only *view* of whatever tree was saved. Use it when the
+    saved structure is dynamic (e.g. the async engine's live-snapshot
+    table, whose version keys differ run to run); re-shape any subtree
+    whose true structure you know with ``reshape_like``.
+    """
+    out: dict = {}
+    with np.load(path) as data:
+        views = _views_of(data)
+        for key in data.files:
+            if key == _DTYPES_KEY:
+                continue
+            node = out
+            parts = key.split(_SEP)
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = jnp.asarray(_decode_leaf(data, key, views))
+    return out
+
+
+def reshape_like(tree, example):
+    """Re-shape a dicts-only view (from ``restore_tree``) onto the real
+    structure of ``example`` — NamedTuples, lists, custom nodes and
+    all. Works because ``_path_str`` renders a dict key ``"[0]"`` and a
+    list index 0 identically: the two trees flatten to the same flat
+    keys, so leaves transfer by key and re-assemble under the example's
+    treedef. Leaf dtypes follow the checkpoint (the example only
+    supplies structure); shapes must match."""
+    by_key = _flatten(tree)
+    flat_ex, treedef = jax.tree_util.tree_flatten_with_path(example)
+    leaves = []
+    for p, ex in flat_ex:
+        key = _SEP.join(_path_str(q) for q in p)
+        if key not in by_key:
+            raise KeyError(f"restored tree missing key {key!r}")
+        arr = by_key[key]
+        if tuple(np.shape(arr)) != tuple(np.shape(ex)):
+            raise ValueError(
+                f"shape mismatch for {key}: restored {np.shape(arr)} "
+                f"vs example {np.shape(ex)}")
+        leaves.append(jnp.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 

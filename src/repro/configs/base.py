@@ -163,7 +163,34 @@ class DiLoCoConfig:
     #               reduce locally in the simulated path's exact op
     #               order. Requires a mesh with a "pod" axis at
     #               round-build time (make_round/make_run mesh=...).
+    #   async     — barrier-free (core/async_diloco.py): no round
+    #               structure at all; each worker's outer gradient is
+    #               applied the moment it arrives at the parameter
+    #               server, discounted by staleness_lambda^τ / k.
+    #               Driven by AsyncEngine + a faults.Scenario, not by
+    #               make_round (which rejects it).
+    #   gossip    — NoLoCo-style pairwise partial averaging
+    #               (core/gossip.py): no collective spans all k
+    #               workers; each round every worker averages its
+    #               global estimate with ONE partner's. Round-shaped,
+    #               so it routes through make_round/make_run.
     transport: str = "simulated"
+    # --- async transport (transport="async") ---
+    # Delay compensation: an outer gradient applied τ outer steps after
+    # its dispatch is weighted λ^τ / k (λ=1 disables discounting; the
+    # 1/k is each worker's share of a synchronous round's evidence).
+    staleness_lambda: float = 1.0
+    # --- gossip transport (transport="gossip") ---
+    #   butterfly — partner(i, t) = i XOR 2^(t mod log2 k): pairwise
+    #               averaging along hypercube dimensions; log2(k)
+    #               consecutive rounds mix any initial disagreement to
+    #               the exact global mean (proven in tests).
+    #   random    — a fresh uniform perfect matching each round.
+    gossip_pairing: str = "butterfly"
+    # Fraction of the partner's global estimate adopted per pairwise
+    # exchange: g_i ← (1−mix)·g_i + mix·g_j. 0.5 (symmetric averaging)
+    # is what the butterfly exactness proof assumes.
+    gossip_mix: float = 0.5
     # Packed wire on the sharded transport (quantized dtypes only):
     # True (default) ships the REAL payload — int4 nibble-packs two
     # codes per int8 byte and lays codes + per-block f32 scales out in

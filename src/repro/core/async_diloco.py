@@ -3,25 +3,50 @@ limitation): "extend DiLoCo to the asynchronous setting, whereby
 workers update the global parameter without ever waiting for any other
 worker."
 
-Design (beyond-paper, kept deliberately close to Algorithm 1):
+The barrier-free engine (``AsyncEngine``), event-driven:
 
-* Workers are heterogeneous: worker i takes ``speed_i`` rounds of
-  wall-clock to finish its H inner steps (speed 1 = fastest).
+* A ``faults.Scenario`` scripts the failure model — heterogeneous
+  worker speeds, per-link WAN latency, outer-gradient drop with
+  retry/backoff, preemption leave/join — and compiles it to a
+  deterministic timeline of Arrival / Lost / Leave / Join events.
 * A parameter server holds the global copy θ and the outer-optimizer
-  state. Whenever ANY worker finishes, its outer gradient
-  Δ_i = θ^(dispatch) − θ_i is applied IMMEDIATELY — no barrier — at
-  weight λ^τ / k: the 1/k is each worker's share of a round's evidence
-  (synchronous DiLoCo averages k deltas; applying each at full weight
-  over-steps k-fold), and λ^τ (τ = outer steps since dispatch) is the
-  staleness discount for delay compensation.
-* With all speeds equal and λ=1 a tick applies the same total update
-  mass as one synchronous round (k deltas × 1/k), just sequentially
-  through the momentum buffer (tested).
+  state. Whenever ANY worker's outer gradient arrives, it is applied
+  IMMEDIATELY — no barrier — at weight λ^τ / k: the 1/k is each
+  worker's share of a round's evidence (synchronous DiLoCo averages k
+  deltas; applying each at full weight over-steps k-fold), and λ^τ
+  (τ = outer steps since dispatch) is the staleness discount for delay
+  compensation (``cfg.staleness_lambda``).
+* The delta Δ_i = θ^(dispatch) − θ_i is computed against the server's
+  snapshot of the dispatch point; snapshots are version-keyed and
+  pruned to live dispatch versions only.
+* Under a quantized ``outer_grad_dtype`` (int4/bf16) each application
+  ships as ONE flattened wire buffer through the PR 5 packed codec
+  (``kernels.ops.wire_encode``/``wire_decode``) — the exact bytes a
+  real pod→server transfer would carry — with a per-worker
+  error-feedback residual (when ``cfg.error_feedback``) surviving
+  across arbitrarily delayed applications. Float32 ships raw.
+* A payload whose every send attempt drops is Lost: the worker keeps
+  its own params under the SAME dispatch version (Fig 8 semantics), so
+  its next successful delta spans both phases and recovers the mass.
+* All state transitions live in TWO jitted functions whose carries are
+  donated (``donate=True``): ``run_phase`` consumes (params, opt) in
+  place and ``apply_arrival`` consumes (global, outer state, worker
+  masters, residual) in place — dispatch snapshots are the only copies
+  (they are real transfers in a deployment anyway).
+* With all speeds equal and λ=1 an engine tick applies the same total
+  update mass as one synchronous round (k deltas × 1/k), sequentially
+  through the momentum buffer, and the f32 fault-free path is
+  bit-identical to a reference sequential application (both tested).
 
-This module simulates the asynchrony on one host with a wall-clock
-tick loop; the collective structure matches the sharded deployment
-(each application is a single pod→global transfer of one outer
-gradient — even less coupled than synchronous DiLoCo's all-reduce).
+State is checkpointable mid-run: ``state_to_tree`` flattens the full
+bookkeeping (per-worker params + AdamW moments + residual + dispatch
+version, live snapshots, outer state, event cursor) into a pure
+nested-dict pytree for ``checkpoint.save``; a preempted-and-restored
+run replays the identical event suffix (per-phase RNG is keyed by the
+timeline's stable uid, not by host call order) and is bit-identical to
+an uninterrupted one (tested).
+
+``run_async`` keeps the seed's one-call simulation API on top.
 """
 from __future__ import annotations
 
@@ -31,11 +56,380 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.flatten_util import ravel_pytree
 
 from repro.configs.base import DiLoCoConfig, TrainConfig
-from repro.optim import adamw
-from . import diloco, outer_opt
+from repro.optim import adamw, precision
+from . import diloco, faults, outer_opt
 
+
+# ---------------------------------------------------------------------------
+# state
+# ---------------------------------------------------------------------------
+
+@dataclass
+class WorkerSlot:
+    """One worker's server-side bookkeeping."""
+    params: Any                 # working params (param_dtype)
+    opt: adamw.AdamWState       # inner AdamW moments (+ master if mixed)
+    residual: jnp.ndarray       # flat f32 error-feedback residual
+    version: int                # outer version of the dispatch point
+    active: bool                # False between Leave and Join
+
+
+@dataclass
+class AsyncState:
+    """Everything a barrier-free run carries between events."""
+    global_params: Any
+    outer: outer_opt.OuterState
+    workers: list
+    snapshots: dict             # live dispatch version -> θ snapshot
+    version: int = 0            # outer step count (applications so far)
+    inner_done: int = 0         # global inner-step counter (lr schedule)
+    events_done: int = 0        # timeline cursor (resume point)
+
+    def live_versions(self) -> set:
+        return ({w.version for w in self.workers if w.active}
+                | {self.version})
+
+
+def state_to_tree(state: AsyncState) -> dict:
+    """Flatten an AsyncState into a pure nested-dict pytree of arrays
+    (NamedTuples unpacked, int keys stringified, Python counters as 0-d
+    arrays) — the layout ``checkpoint.save`` / ``restore_tree`` round-
+    trips without needing a like-structured example."""
+    workers = {}
+    for i, w in enumerate(state.workers):
+        d = {"params": w.params, "m": w.opt.m, "v": w.opt.v,
+             "opt_count": w.opt.count, "residual": w.residual,
+             "version": np.int64(w.version),
+             "active": np.int64(w.active)}
+        if w.opt.master is not None:
+            d["master"] = w.opt.master
+        workers[str(i)] = d
+    return {
+        "global": state.global_params,
+        "outer": {"buf": state.outer.buf, "buf2": state.outer.buf2,
+                  "count": state.outer.count},
+        "workers": workers,
+        "snapshots": {str(v): s for v, s in state.snapshots.items()},
+        "counters": {"version": np.int64(state.version),
+                     "inner_done": np.int64(state.inner_done),
+                     "events_done": np.int64(state.events_done)},
+    }
+
+
+def state_from_tree(tree: dict, params_example) -> AsyncState:
+    """Inverse of ``state_to_tree``. ``params_example`` supplies the
+    real parameter-tree structure (restore_tree returns dict-ified
+    trees; every params-shaped subtree is re-shaped onto it)."""
+    from repro.checkpoint import checkpoint as ckpt
+    like = lambda t: ckpt.reshape_like(t, params_example)
+    workers = []
+    for i in range(len(tree["workers"])):
+        d = tree["workers"][str(i)]
+        opt = adamw.AdamWState(
+            m=like(d["m"]), v=like(d["v"]),
+            count=jnp.asarray(d["opt_count"]),
+            master=like(d["master"]) if "master" in d else None)
+        workers.append(WorkerSlot(
+            params=like(d["params"]), opt=opt,
+            residual=jnp.asarray(d["residual"]),
+            version=int(d["version"]), active=bool(int(d["active"]))))
+    return AsyncState(
+        global_params=like(tree["global"]),
+        outer=outer_opt.OuterState(
+            buf=like(tree["outer"]["buf"]),
+            buf2=like(tree["outer"]["buf2"]),
+            count=jnp.asarray(tree["outer"]["count"])),
+        workers=workers,
+        snapshots={int(v): like(s)
+                   for v, s in tree["snapshots"].items()},
+        version=int(tree["counters"]["version"]),
+        inner_done=int(tree["counters"]["inner_done"]),
+        events_done=int(tree["counters"]["events_done"]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+class AsyncEngine:
+    """Barrier-free DiLoCo driven by a ``faults.Scenario`` timeline.
+
+    sample_fn(key, B, S) -> (B, S) int32 tokens — one worker's batch
+    (pass a tuple of k callables for per-worker data shards).
+
+    ``donate=False`` keeps every jitted carry un-donated (the
+    donation-equivalence regression test runs both and compares
+    bit-for-bit).
+    """
+
+    def __init__(self, loss_fn: Callable, sample_fn, cfg: DiLoCoConfig,
+                 tcfg: TrainConfig, *, scenario: faults.Scenario | None
+                 = None, total_steps: int | None = None,
+                 eval_fn=None, eval_tokens=None, seed: int = 0,
+                 donate: bool = True):
+        if cfg.outer_grad_dtype not in ("float32", "bfloat16", "int4"):
+            raise ValueError(
+                f"unsupported outer_grad_dtype {cfg.outer_grad_dtype!r}")
+        if getattr(cfg, "streaming_fragments", 0):
+            raise ValueError(
+                "transport='async' replaces the round schedule "
+                "entirely; streaming_fragments must be 0")
+        # validate λ eagerly (shared with the weight policy)
+        faults.staleness_weight(0, cfg.staleness_lambda, cfg.k)
+        self.cfg, self.tcfg = cfg, tcfg
+        self.scenario = scenario or faults.Scenario.uniform(cfg.k)
+        self.scenario.resolved_speeds(cfg.k)     # fail fast on shape
+        self.eval_fn, self.eval_tokens = eval_fn, eval_tokens
+        self.base_key = jax.random.PRNGKey(seed)
+        self.donate = bool(donate)
+        self._pol = precision.policy_of(cfg)
+        self._mode = getattr(cfg, "kernel_mode", "ref")
+        self._unravel = None                     # set on first init
+        self._n_elems = None
+        inner_step = diloco.make_inner_step(
+            lambda p, b: loss_fn(p, b), tcfg,
+            total_steps or tcfg.total_steps)
+        self.loss_fn = loss_fn
+        samplers = (tuple(sample_fn) if isinstance(sample_fn,
+                                                   (tuple, list))
+                    else (sample_fn,) * cfg.k)
+        if len(samplers) != cfg.k:
+            raise ValueError(
+                f"need {cfg.k} per-worker samplers, got {len(samplers)}")
+        self._run_phase = [self._make_run_phase(inner_step, fn)
+                           for fn in samplers]
+        self._apply = self._make_apply()
+
+    # ---- jitted pieces ----
+
+    def _make_run_phase(self, inner_step, sample_fn):
+        cfg, tcfg = self.cfg, self.tcfg
+
+        def run_phase(params, opt, key, step0):
+            def body(carry, h):
+                p, o = carry
+                batch = {"tokens": sample_fn(
+                    jax.random.fold_in(key, h), tcfg.batch_size,
+                    tcfg.seq_len)}
+                p, o, m = inner_step(p, o, batch, step0 + h)
+                return (p, o), m["loss"]
+
+            (params, opt), losses = jax.lax.scan(
+                body, (params, opt), jnp.arange(cfg.H))
+            return params, opt, losses.mean()
+
+        if self.donate:
+            return jax.jit(run_phase, donate_argnums=(0, 1))
+        return jax.jit(run_phase)
+
+    def _make_apply(self):
+        cfg = self.cfg
+        dt, mode = cfg.outer_grad_dtype, self._mode
+
+        def apply_arrival(global_params, outer, msrc, residual,
+                          snapshot, weight):
+            # Δ = θ^(dispatch) − θ_i, master-vs-master, as ONE flat
+            # wire payload (a single pod→server transfer)
+            d, _ = ravel_pytree(jax.tree.map(
+                lambda s, w: s - w.astype(s.dtype), snapshot, msrc))
+            d_tot = d + residual
+            if dt == "float32":
+                local = d_tot                       # raw f32 wire
+            else:
+                from repro.kernels import ops as kops
+                wire, _ = kops.wire_encode(d_tot, dt, mode=mode)
+                local = kops.wire_decode(wire, d_tot.shape[0], dt,
+                                         mode=mode)
+            new_res = (d_tot - local if cfg.error_feedback
+                       else jnp.zeros_like(residual))
+            applied = self._unravel(local * weight)
+            new_global, new_outer = outer_opt.update(
+                applied, outer, global_params, kind=cfg.outer_opt,
+                lr=cfg.outer_lr, momentum=cfg.outer_momentum,
+                b2=cfg.outer_adam_b2, eps=cfg.outer_adam_eps,
+                kernel_mode=mode)
+            dnorm = jnp.sqrt(jnp.sum(jnp.square(local)))
+            return new_global, new_outer, new_res, dnorm
+
+        if self.donate:
+            # snapshot (4) and weight (5) are NOT donated: a snapshot
+            # can be the dispatch point of several in-flight payloads.
+            # msrc (2) is not donated either — its buffers match no
+            # output (global/outer already reuse the donated carry)
+            # and the worker slot still reads it at re-dispatch.
+            return jax.jit(apply_arrival, donate_argnums=(0, 1, 3))
+        return jax.jit(apply_arrival)
+
+    # ---- state construction ----
+
+    def _dispatch(self, global_params, opt=None):
+        """A fresh worker dispatch from θ: copied working params (the
+        pod→worker transfer — never an alias, every carry is donated)
+        and either brand-new AdamW moments or the survivor's moments
+        with the master re-pointed at the new dispatch."""
+        disp = precision.cast_tree(global_params, self._pol.param_dtype,
+                                   fresh=True)
+        if opt is None:
+            opt = adamw.init(global_params, policy=self._pol)
+        elif opt.master is not None:
+            opt = opt._replace(master=jax.tree.map(jnp.copy,
+                                                   global_params))
+        return disp, opt
+
+    def init_state(self, params0) -> AsyncState:
+        flat, unravel = ravel_pytree(params0)
+        self._unravel = unravel
+        self._n_elems = int(flat.shape[0])
+        workers = []
+        for _ in range(self.cfg.k):
+            p, o = self._dispatch(params0)
+            # one residual buffer PER worker: the apply donates it, and
+            # a shared zeros array would be deleted for everyone at the
+            # first arrival
+            workers.append(WorkerSlot(
+                params=p, opt=o,
+                residual=jnp.zeros((self._n_elems,), jnp.float32),
+                version=0, active=True))
+        return AsyncState(
+            global_params=jax.tree.map(jnp.copy, params0),
+            outer=outer_opt.init(params0),
+            workers=workers,
+            snapshots={0: jax.tree.map(jnp.copy, params0)})
+
+    def _bind(self, state: AsyncState):
+        """Re-attach the unravel closure after a checkpoint restore."""
+        if self._unravel is None:
+            flat, unravel = ravel_pytree(state.global_params)
+            self._unravel = unravel
+            self._n_elems = int(flat.shape[0])
+
+    def wire_bytes(self) -> int:
+        """Bytes ONE application ships worker→server (packed wire for
+        quantized dtypes, raw f32 otherwise)."""
+        from repro.kernels import ops as kops
+        return kops.transport_bytes(
+            self._n_elems, self.cfg.outer_grad_dtype,
+            packed=self.cfg.outer_grad_dtype != "float32")
+
+    # ---- event loop ----
+
+    def _prune(self, state: AsyncState):
+        """Drop snapshots no live dispatch can still reference. A live
+        version must never be dropped (invariant, tested)."""
+        live = state.live_versions()
+        missing = live - set(state.snapshots)
+        assert not missing, f"live dispatch versions {missing} pruned"
+        state.snapshots = {v: s for v, s in state.snapshots.items()
+                           if v in live}
+
+    def run(self, state: AsyncState, *, ticks: int,
+            max_events: int | None = None):
+        """Process the scenario timeline for ``ticks`` wall-clock ticks
+        from ``state.events_done`` (so a restored state resumes exactly
+        where it left off), optionally stopping after ``max_events``
+        more events (mid-run checkpoint cut point). Returns
+        (state, history) — one record per event, ``"event"`` keyed.
+        """
+        cfg = self.cfg
+        self._bind(state)
+        events = self.scenario.timeline(cfg.k, ticks)
+        todo = events[state.events_done:]
+        if max_events is not None:
+            todo = todo[:max_events]
+        history = []
+        for ev in todo:
+            if isinstance(ev, faults.Arrival):
+                history.append(self._on_arrival(state, ev))
+            elif isinstance(ev, faults.Lost):
+                history.append(self._on_lost(state, ev))
+            elif isinstance(ev, faults.Leave):
+                w = state.workers[ev.worker]
+                w.active = False
+                self._prune(state)
+                history.append({"event": "leave", "tick": ev.tick,
+                                "worker": ev.worker})
+            elif isinstance(ev, faults.Join):
+                w = state.workers[ev.worker]
+                # moments died with the preemption: fresh opt, fresh
+                # residual, dispatch from the current global copy
+                w.params, w.opt = self._dispatch(state.global_params)
+                w.residual = jnp.zeros((self._n_elems,), jnp.float32)
+                w.version = state.version
+                w.active = True
+                history.append({"event": "join", "tick": ev.tick,
+                                "worker": ev.worker,
+                                "version": state.version})
+            state.events_done += 1
+        return state, history
+
+    def _phase(self, state: AsyncState, ev):
+        """Run the H inner steps of the phase ``ev`` reports. RNG is
+        keyed by the timeline's stable uid — independent of host call
+        order, so a restored run resumes bit-identically."""
+        w = state.workers[ev.worker]
+        assert w.active, (
+            f"arrival for departed worker {ev.worker}: the timeline "
+            "guarantees delivered payloads outlive their sender")
+        key = jax.random.fold_in(self.base_key, ev.uid)
+        new_p, new_opt, mloss = self._run_phase[ev.worker](
+            w.params, w.opt, key, jnp.asarray(state.inner_done))
+        state.inner_done += self.cfg.H
+        return w, new_p, new_opt, mloss
+
+    def _on_arrival(self, state: AsyncState, ev):
+        cfg = self.cfg
+        w, new_p, new_opt, mloss = self._phase(state, ev)
+        staleness = state.version - w.version
+        weight = faults.staleness_weight(staleness,
+                                         cfg.staleness_lambda, cfg.k)
+        msrc = adamw.master_params(new_p, new_opt)
+        state.global_params, state.outer, w.residual, dnorm = \
+            self._apply(state.global_params, state.outer, msrc,
+                        w.residual, state.snapshots[w.version],
+                        jnp.asarray(weight, jnp.float32))
+        state.version += 1
+        # snapshot the new θ, then re-dispatch the worker from it.
+        # Both are fresh copies: the next application donates the
+        # global and run_phase donates the worker carry — an aliased
+        # snapshot would be deleted out from under later arrivals.
+        state.snapshots[state.version] = jax.tree.map(
+            jnp.copy, state.global_params)
+        w.params, w.opt = self._dispatch(state.global_params, new_opt)
+        w.version = state.version
+        self._prune(state)
+        rec = {"event": "arrival", "tick": ev.tick, "worker": ev.worker,
+               "uid": ev.uid, "attempt": ev.attempt,
+               "staleness": staleness, "weight": float(weight),
+               "version": state.version, "inner_loss": float(mloss),
+               "delta_norm": float(dnorm),
+               "wire_bytes": self.wire_bytes()}
+        if self.eval_fn is not None and self.eval_tokens is not None:
+            rec["val_loss"] = float(self.eval_fn(state.global_params,
+                                                 self.eval_tokens))
+            rec["ppl"] = float(np.exp(rec["val_loss"]))
+        return rec
+
+    def _on_lost(self, state: AsyncState, ev):
+        """Every send attempt dropped: the phase ran but its delta
+        never reached the server. Fig 8 semantics — the worker keeps
+        its own params under the SAME dispatch version, so the next
+        arrival's delta spans both phases (no silent mass loss); the
+        error-feedback residual is untouched (nothing was quantized
+        onto the wire)."""
+        w, new_p, new_opt, mloss = self._phase(state, ev)
+        w.params, w.opt = new_p, new_opt
+        return {"event": "lost", "tick": ev.tick, "worker": ev.worker,
+                "uid": ev.uid, "version_at_dispatch": w.version,
+                "inner_loss": float(mloss)}
+
+
+# ---------------------------------------------------------------------------
+# seed-compatible one-call simulation API
+# ---------------------------------------------------------------------------
 
 @dataclass
 class AsyncConfig:
@@ -44,98 +438,35 @@ class AsyncConfig:
     outer_lr: float = 0.7
     outer_momentum: float = 0.9
     staleness_lambda: float = 0.7   # discount per outer step of delay
-    speeds: tuple = ()              # rounds per phase, len k (default 1s)
-
-
-@dataclass
-class _Worker:
-    params: Any
-    opt: Any
-    dispatched_version: int         # outer step count at dispatch
-    finish_tick: int                # wall-clock tick when phase completes
+    speeds: tuple = ()              # ticks per phase, len k (default 1s)
 
 
 def run_async(loss_fn: Callable, sample_fn: Callable, params0,
               acfg: AsyncConfig, tcfg: TrainConfig, *, ticks: int,
-              eval_fn=None, eval_tokens=None, seed: int = 0):
-    """Simulate ``ticks`` wall-clock units; one tick = the fastest
-    worker's phase time. Returns (global_params, history)."""
-    k = acfg.k
-    speeds = list(acfg.speeds) or [1] * k
-    assert len(speeds) == k
-    inner_step = diloco.make_inner_step(loss_fn, tcfg,
-                                        total_steps=tcfg.total_steps)
+              eval_fn=None, eval_tokens=None, seed: int = 0,
+              scenario: faults.Scenario | None = None,
+              dcfg: DiLoCoConfig | None = None, donate: bool = True):
+    """Simulate ``ticks`` wall-clock units of barrier-free DiLoCo; one
+    tick = the fastest worker's phase time. Returns (global_params,
+    history) where history holds one dict per Arrival (plus marked
+    lost/leave/join records under a faulty ``scenario``).
 
-    @jax.jit
-    def run_phase(params, opt, key, step0):
-        def body(carry, h):
-            p, o = carry
-            batch = {"tokens": sample_fn(jax.random.fold_in(key, h),
-                                         tcfg.batch_size, tcfg.seq_len)}
-            p, o, m = inner_step(p, o, batch, step0 + h)
-            return (p, o), m["loss"]
-
-        (params, opt), losses = jax.lax.scan(
-            body, (params, opt), jnp.arange(acfg.H))
-        return params, opt, losses.mean()
-
-    @jax.jit
-    def apply_outer(global_params, buf, worker_params, dispatch_theta,
-                    weight):
-        delta = jax.tree.map(lambda d0, wi: (d0 - wi) * weight,
-                             dispatch_theta, worker_params)
-        new_buf = jax.tree.map(
-            lambda b, d: acfg.outer_momentum * b + d, buf, delta)
-        new_global = jax.tree.map(
-            lambda p, b, d: p - acfg.outer_lr
-            * (acfg.outer_momentum * b + d),
-            global_params, new_buf, delta)
-        return new_global, new_buf
-
-    global_params = params0
-    buf = jax.tree.map(jnp.zeros_like, params0)
-    theta_at = {0: params0}            # dispatch-version -> θ snapshot
-    version = 0
-    inner_done = 0
-    key = jax.random.PRNGKey(seed)
-
-    workers = []
-    for i in range(k):
-        workers.append(_Worker(params=params0,
-                               opt=adamw.init(params0),
-                               dispatched_version=0,
-                               finish_tick=speeds[i]))
-
-    history = []
-    for tick in range(1, ticks + 1):
-        order = [i for i in range(k) if workers[i].finish_tick == tick]
-        for i in order:
-            w = workers[i]
-            key, sub = jax.random.split(key)
-            new_p, new_opt, mloss = run_phase(
-                w.params, w.opt, sub, jnp.asarray(inner_done))
-            inner_done += acfg.H
-            staleness = version - w.dispatched_version
-            weight = (acfg.staleness_lambda ** staleness) / k
-            global_params, buf = apply_outer(
-                global_params, buf, new_p,
-                theta_at[w.dispatched_version],
-                jnp.asarray(weight, jnp.float32))
-            version += 1
-            theta_at[version] = global_params
-            # prune old snapshots
-            live = {ww.dispatched_version for ww in workers} | {version}
-            theta_at = {v: t for v, t in theta_at.items() if v in live}
-            # re-dispatch from the fresh global copy
-            workers[i] = _Worker(params=global_params, opt=new_opt,
-                                 dispatched_version=version,
-                                 finish_tick=tick + speeds[i])
-            rec = {"tick": tick, "worker": i, "staleness": staleness,
-                   "weight": float(weight), "version": version,
-                   "inner_loss": float(mloss)}
-            if eval_fn is not None and eval_tokens is not None:
-                rec["val_loss"] = float(eval_fn(global_params,
-                                                eval_tokens))
-                rec["ppl"] = float(np.exp(rec["val_loss"]))
-            history.append(rec)
-    return global_params, history
+    ``dcfg`` overrides the DiLoCoConfig derived from ``acfg`` (for
+    quantized wire / error feedback / alternate outer opts)."""
+    if dcfg is None:
+        dcfg = DiLoCoConfig(
+            k=acfg.k, H=acfg.H, outer_lr=acfg.outer_lr,
+            outer_momentum=acfg.outer_momentum, transport="async",
+            staleness_lambda=acfg.staleness_lambda)
+    if scenario is None:
+        scenario = faults.Scenario(speeds=tuple(acfg.speeds)
+                                   or (1,) * acfg.k)
+    eng = AsyncEngine(loss_fn, sample_fn, dcfg, tcfg,
+                      scenario=scenario, eval_fn=eval_fn,
+                      eval_tokens=eval_tokens, seed=seed, donate=donate)
+    state = eng.init_state(params0)
+    state, history = eng.run(state, ticks=ticks)
+    arrivals = [r for r in history if r["event"] == "arrival"]
+    return state.global_params, (arrivals if scenario.drop_prob == 0
+                                 and not scenario.preemptions
+                                 else history)

@@ -293,13 +293,27 @@ def _make_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
             f"dcfg=({dcfg.param_dtype}, {dcfg.master_dtype}) vs "
             f"tcfg=({tcfg.param_dtype}, {tcfg.master_dtype}); the state "
             "layout (dcfg) must match the inner step (tcfg)")
+    transport = getattr(dcfg, "transport", "simulated")
+    if transport == "gossip":
+        # gossip reuses streaming_fragments as its partial-averaging
+        # schedule, so it must be routed before the streaming check
+        from . import gossip
+        return gossip.make_gossip_round_body(
+            loss_fn, sample_fn, dcfg, tcfg, total_steps=total_steps,
+            compute_cosine=compute_cosine, batch_size=batch_size,
+            seq_len=seq_len, mesh=mesh)
+    if transport == "async":
+        raise ValueError(
+            "transport='async' is barrier-free — there is no round to "
+            "build: drive it with core.async_diloco.AsyncEngine (or "
+            "run_async) and a faults.Scenario")
     if getattr(dcfg, "streaming_fragments", 0):
         from . import streaming
         return streaming.make_stream_round_body(
             loss_fn, sample_fn, dcfg, tcfg, total_steps=total_steps,
             compute_cosine=compute_cosine, batch_size=batch_size,
             seq_len=seq_len, mesh=mesh)
-    if getattr(dcfg, "transport", "simulated") != "simulated":
+    if transport != "simulated":
         raise ValueError(
             "transport='sharded' is a streaming-path feature: set "
             "streaming_fragments >= 1 (the classic synchronous outer "

@@ -294,6 +294,28 @@ def build_stream_run(arch: Arch, cfg, *, k: int, mesh, batch: int,
     return run, state, key
 
 
+def build_gossip_exchange(arch: Arch, cfg, k: int, *, stage: int = 0,
+                          mix: float = 0.5):
+    """(est(k,...)) -> est: one butterfly pairwise partial-averaging
+    exchange (core/gossip.py) on pod-stacked estimates. ``stage`` is
+    static and the partner map i XOR 2^stage is realized as the
+    structured ``butterfly_swap`` (reshape+flip), so under SPMD the
+    exchange lowers to a pod-axis permutation collective — gossip's
+    point-to-point wire, with NO collective spanning all pods (a plain
+    partner take is opaque to the partitioner and all-gathers the full
+    worker axis instead; asserted in tests/test_dryrun_lite.py)."""
+    from repro.core import gossip as core_gossip
+
+    def step(est):
+        partner = core_gossip.partner_map(k, stage, "butterfly")
+        mask = jax.tree.map(lambda g: 1.0, est)
+        return core_gossip.mix_round(
+            est, partner, mask, mix=mix,
+            exchange=core_gossip.butterfly_swap(stage, k))
+
+    return step
+
+
 def build_prefill(arch: Arch, cfg, *, groups: int):
     def fn(params, batch):
         logits, cache = arch.prefill(params, batch, cfg=cfg, groups=groups)
@@ -559,6 +581,14 @@ def dryrun_pair(arch_name: str, shape_name: str, *, multi_pod: bool,
                     rec = record("diloco_stream_round", srun,
                                  (sstate, skey))
                     rec["stream_wire"] = stream_wire
+                if "gossip" in fns:
+                    # barrier-free tier: one pairwise exchange, pod-
+                    # permutation collective only (no all-pod reduce)
+                    gstep = build_gossip_exchange(arch, cfg, k)
+                    jit_g = jax.jit(gstep, in_shardings=(psh_k,),
+                                    out_shardings=psh_k)
+                    record("gossip_exchange", jit_g,
+                           (stack(pshapes),), raw_fn=gstep)
                 if "main" in fns or "ddp" in fns:
                     # synchronous DDP baseline: params replicated across
                     # pods, batch over (pod, data) -> per-step cross-pod
@@ -609,7 +639,7 @@ def main():
                     help="input-shape id or 'all'")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--fns", default="main",
-                    help="comma list: main|inner|outer|ddp")
+                    help="comma list: main|inner|outer|ddp|stream|gossip")
     ap.add_argument("--microbatches", type=int, default=TRAIN_MICROBATCHES)
     ap.add_argument("--variant", default="",
                     help='JSON dict, e.g. {"fsdp": false}')

@@ -27,15 +27,71 @@ import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs.base import DiLoCoConfig, TrainConfig
-from repro.core import diloco, schedules
+from repro.core import diloco, faults, schedules
 from repro.data.sharding import make_regime, shard_weights
 from repro.models.registry import get_arch, get_smoke_arch
+
+
+def _int_list(spec: str, k: int, name: str) -> tuple:
+    """Parse a comma list of ints; a single value broadcasts to k."""
+    try:
+        vals = [int(x) for x in spec.split(",") if x.strip()]
+    except ValueError:
+        raise SystemExit(f"{name} wants comma-separated ints, "
+                         f"got {spec!r}")
+    if len(vals) == 1:
+        vals = vals * k
+    if len(vals) != k:
+        raise SystemExit(f"{name} needs 1 or k={k} values, "
+                         f"got {len(vals)}")
+    return tuple(vals)
+
+
+def scenario_of(args) -> faults.Scenario | None:
+    """Build the ``faults.Scenario`` scripted by the CLI fault flags,
+    or None when no fault flag is set (the legacy mask path — kept
+    bit-identical for existing sync/streaming/sharded defaults).
+
+    Round-driven transports project the scenario onto per-round masks
+    (``Scenario.round_masks``); the async engine consumes its full
+    event timeline. ``--drop-prob`` alone does NOT trigger a scenario
+    (the legacy i.i.d. drop-mask path keeps its exact rng stream);
+    combined with any other fault flag it becomes the scenario's
+    per-send drop probability with retry/backoff semantics.
+    """
+    used = (args.speeds or args.link_latency
+            or args.latency_jitter > 0 or args.max_retries > 0
+            or args.preempt or args.transport == "async")
+    if not used:
+        return None
+    k = args.k
+    preempts = []
+    for spec in args.preempt:
+        parts = spec.split(":")
+        if len(parts) not in (2, 3):
+            raise SystemExit(
+                f"--preempt wants WORKER:LEAVE[:REJOIN], got {spec!r}")
+        w, leave = int(parts[0]), int(parts[1])
+        rejoin = int(parts[2]) if len(parts) == 3 else 0
+        preempts.append((w, leave, rejoin))
+    return faults.Scenario(
+        speeds=_int_list(args.speeds, k, "--speeds")
+        if args.speeds else (1,) * k,
+        latency=_int_list(args.link_latency, k, "--link-latency")
+        if args.link_latency else (),
+        latency_jitter=args.latency_jitter,
+        drop_prob=args.drop_prob,
+        max_retries=args.max_retries,
+        retry_backoff=args.retry_backoff,
+        preemptions=tuple(preempts),
+        seed=args.seed)
 
 
 def build(args):
     arch = (get_smoke_arch if args.smoke else get_arch)(args.arch)
     cfg = arch.cfg
-    if not args.stream_fragments:
+    if not args.stream_fragments and args.transport in ("simulated",
+                                                        "sharded"):
         # these knobs only act on the streaming outer path — silently
         # running the classic full-precision outer step while the CLI
         # says "int4" would mislabel every reported number
@@ -52,10 +108,30 @@ def build(args):
                 f"{', '.join(ignored)} require(s) --stream-fragments "
                 ">= 1 (streaming outer sync); the classic outer step "
                 "would ignore them")
+    if args.transport in ("async", "gossip"):
+        # barrier-free transports: streaming mechanics that have no
+        # meaning off the fragment-round path are rejected, not ignored
+        bad = [flag for flag, on in (
+            ("--stream-alpha", args.stream_alpha != 1.0),
+            ("--stream-tau", args.stream_tau != 0),
+            ("--no-pack-wire", not args.pack_wire),
+            ("--pods", args.pods != 0),
+            ("--legacy-loop", args.legacy_loop),
+            ("--cosine-stats", args.cosine_stats)) if on]
+        if args.transport == "async" and args.stream_fragments:
+            bad.insert(0, "--stream-fragments")
+        if bad:
+            raise SystemExit(
+                f"{', '.join(bad)} do(es) not act on "
+                f"--transport {args.transport}")
     if args.pods and args.transport != "sharded":
         # --pods only shapes the sharded-transport mesh; accepting it
         # on the simulated path would fake a multi-pod layout
         raise SystemExit("--pods requires --transport sharded")
+    if args.restore and args.transport != "async":
+        raise SystemExit("--restore resumes a full async engine state; "
+                         "round transports restart from --checkpoint "
+                         "params instead")
     dcfg = DiLoCoConfig(k=args.k, H=args.H, outer_opt=args.outer_opt,
                         outer_lr=args.outer_lr,
                         outer_momentum=args.outer_momentum,
@@ -71,7 +147,10 @@ def build(args):
                         transport=args.transport,
                         pack_wire=args.pack_wire,
                         param_dtype=args.param_dtype,
-                        master_dtype=args.master_dtype)
+                        master_dtype=args.master_dtype,
+                        staleness_lambda=args.staleness_lambda,
+                        gossip_pairing=args.gossip_pairing,
+                        gossip_mix=args.gossip_mix)
     total = args.pretrain_steps + args.rounds * args.H
     tcfg = TrainConfig(inner_lr=args.inner_lr, warmup_steps=args.warmup,
                        total_steps=total, batch_size=args.batch,
@@ -83,6 +162,68 @@ def build(args):
                           vocab_size=cfg.vocab_size, seed=args.seed,
                           imbalanced=args.weighted)
     return arch, cfg, dcfg, tcfg, sampler
+
+
+def _run_async_phase(args, dcfg, tcfg, loss_fn, sampler, params,
+                     ev, val, history):
+    """Barrier-free driver: the event loop replaces the round loop.
+
+    One tick = the fastest worker's phase; ``--ticks 0`` matches the
+    wall-clock budget a barrier-paced run of --rounds rounds would pay
+    under the same scenario, so async-vs-sync numbers compare at equal
+    simulated time."""
+    from repro.core import async_diloco
+    scenario = scenario_of(args) or faults.Scenario.uniform(args.k)
+    samplers = tuple(
+        (lambda i: lambda kk, B, S: sampler.sample_shard(kk, i, B, S))(i)
+        for i in range(args.k))
+    eng = async_diloco.AsyncEngine(
+        loss_fn, samplers, dcfg, tcfg, scenario=scenario,
+        total_steps=tcfg.total_steps, eval_fn=ev, eval_tokens=val,
+        seed=args.seed)
+    if args.restore:
+        state = async_diloco.state_from_tree(
+            ckpt.restore_tree(args.restore), params)
+        print(f"restored async state: version={state.version} "
+              f"events_done={state.events_done}", flush=True)
+    else:
+        state = eng.init_state(params)
+    ticks = args.ticks or scenario.sync_round_ticks(args.k) * args.rounds
+    eng._bind(state)
+    print(f"async transport: lambda={dcfg.staleness_lambda} k={args.k} "
+          f"{ticks} tick(s), {eng.wire_bytes()} B/apply", flush=True)
+    t0 = time.time()
+    state, hist = eng.run(state, ticks=ticks)
+    for r in hist:
+        rec = dict(r, phase="diloco_async")
+        history.append(rec)
+        if r["event"] == "arrival":
+            vs = (f"val={r['val_loss']:.4f} ppl={r['ppl']:.2f}"
+                  if "val_loss" in r else "")
+            print(f"[tick {r['tick']}] worker {r['worker']} "
+                  f"stale={r['staleness']} w={r['weight']:.3f} "
+                  f"inner={r['inner_loss']:.4f} {vs}", flush=True)
+        else:
+            print(f"[tick {r['tick']}] {r['event']} "
+                  f"worker {r['worker']}", flush=True)
+    n_arr = sum(1 for r in hist if r["event"] == "arrival")
+    print(f"done in {time.time() - t0:.1f}s; {n_arr} applications over "
+          f"{ticks} ticks; entropy floor = "
+          f"{sampler.entropy_floor():.4f}", flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"args": vars(args), "history": history}, f,
+                      indent=1)
+        print("wrote", args.out)
+    if args.checkpoint:
+        # FULL engine state (workers, snapshots, outer, cursor): a
+        # later --restore resumes the identical event suffix
+        ckpt.save(args.checkpoint, async_diloco.state_to_tree(state),
+                  metadata={"transport": "async", "k": args.k,
+                            "H": args.H, "ticks": ticks,
+                            "events_done": state.events_done})
+        print("checkpoint:", args.checkpoint)
+    return history
 
 
 def run(args):
@@ -125,8 +266,19 @@ def run(args):
                                      jnp.float32)
 
     # ---- DiLoCo phase ----
+    if dcfg.transport == "async":
+        return _run_async_phase(args, dcfg, tcfg, loss_fn, sampler,
+                                params, ev, val, history)
     mesh = None
-    if dcfg.streaming_fragments:
+    if dcfg.transport == "gossip":
+        from repro.core import gossip
+        state = gossip.init_state(params, dcfg)
+        print(f"gossip transport: {dcfg.gossip_pairing} pairing, "
+              f"mix={dcfg.gossip_mix}, "
+              f"P={max(1, dcfg.streaming_fragments)} fragment(s), "
+              f"{max(gossip.frag_bytes(params, dcfg))} B/exchange",
+              flush=True)
+    elif dcfg.streaming_fragments:
         from repro.core import streaming
         state = streaming.init_state(params, dcfg)
         if dcfg.transport == "sharded":
@@ -160,6 +312,16 @@ def run(args):
     sched = schedules.compute_schedule(args.compute_schedule, args.k,
                                        args.rounds)
     acts = schedules.active_masks(sched, args.k)
+    scen = scenario_of(args)
+    if scen is not None:
+        # project the scripted fault scenario onto the barrier-paced
+        # run: scenario drops (with retry semantics) replace the legacy
+        # i.i.d. masks; preemption spans compose with the compute
+        # schedule's active masks
+        drops, s_acts = scen.round_masks(args.k, args.rounds)
+        acts = np.asarray(acts) * s_acts
+        print(f"faults: barrier round = {scen.sync_round_ticks(args.k)} "
+              "tick(s) (slowest worker + slowest link)", flush=True)
     weights = jnp.asarray(shard_weights(sampler, args.weighted))
 
     def emit_round(t, m, i=None, evaled=True):
@@ -178,7 +340,9 @@ def run(args):
                "inner_loss": pick(m["inner_loss"]),
                "val_loss": None if skipped else vl,
                "outer_gnorm": pick(m["outer_gnorm"]),
-               "active": int(sched[t])}
+               # count from the final mask row, not the schedule: a
+               # scenario preemption zeroes workers the schedule keeps
+               "active": int(np.asarray(acts[t]).sum())}
         if args.cosine_stats:
             rec["cos_mean"] = pick(m["cos_mean"])
             rec["cos_std"] = pick(m["cos_std"])
@@ -311,12 +475,61 @@ def make_parser():
                          "round's delta (kills the int4/bf16 rounding "
                          "bias at no wire cost)")
     ap.add_argument("--transport", default="simulated",
-                    choices=["simulated", "sharded"],
-                    help="streaming collective backend: 'sharded' runs "
-                         "each replica on its own pod mesh slice and "
+                    choices=["simulated", "sharded", "async", "gossip"],
+                    help="outer-sync backend: 'sharded' runs each "
+                         "replica on its own pod mesh slice and "
                          "reduces every fragment with a real pod-axis "
                          "collective (needs >= --pods devices; on CPU "
-                         "set --xla_force_host_platform_device_count)")
+                         "set --xla_force_host_platform_device_count); "
+                         "'async' is the barrier-free event loop "
+                         "(core/async_diloco.py) driven by the fault "
+                         "flags below; 'gossip' is NoLoCo-style "
+                         "pairwise partial averaging with no global "
+                         "collective (core/gossip.py)")
+    ap.add_argument("--staleness-lambda", type=float, default=1.0,
+                    help="async transport: an outer gradient tau outer "
+                         "steps stale is applied at weight lambda^tau/k")
+    ap.add_argument("--gossip-pairing", default="butterfly",
+                    choices=["butterfly", "random"],
+                    help="gossip partner schedule: butterfly (hypercube "
+                         "dims, k a power of 2, provably exact mixing "
+                         "in log2 k rounds) or a fresh random perfect "
+                         "matching per round")
+    ap.add_argument("--gossip-mix", type=float, default=0.5,
+                    help="gossip adoption rate: g_i <- g_i + "
+                         "mix*(g_partner - g_i) on the scheduled "
+                         "fragment")
+    ap.add_argument("--ticks", type=int, default=0,
+                    help="async horizon in wall-clock ticks (1 tick = "
+                         "fastest worker's phase; 0 = the ticks a "
+                         "barrier-paced run of --rounds would take "
+                         "under the same scenario)")
+    ap.add_argument("--speeds", default="",
+                    help="fault scenario: comma per-worker phase "
+                         "duration in ticks (single value broadcasts; "
+                         "e.g. 1,1,1,4 = one 4x straggler)")
+    ap.add_argument("--link-latency", default="",
+                    help="fault scenario: comma per-worker one-way "
+                         "link latency in ticks added to every send")
+    ap.add_argument("--latency-jitter", type=float, default=0.0,
+                    help="fault scenario: lognormal sigma multiplying "
+                         "each send's latency draw")
+    ap.add_argument("--max-retries", type=int, default=0,
+                    help="fault scenario: resends after a dropped "
+                         "attempt; a payload whose every attempt drops "
+                         "is permanently lost")
+    ap.add_argument("--retry-backoff", type=int, default=1,
+                    help="fault scenario: ticks between a dropped "
+                         "attempt and its resend")
+    ap.add_argument("--preempt", action="append", default=[],
+                    metavar="W:LEAVE[:REJOIN]",
+                    help="fault scenario: worker W leaves at tick "
+                         "LEAVE and rejoins at REJOIN (omit/0 = gone "
+                         "for good); repeatable")
+    ap.add_argument("--restore", default="",
+                    help="async transport: resume from a full-state "
+                         "checkpoint written by --checkpoint (replays "
+                         "the identical event suffix)")
     ap.add_argument("--no-pack-wire", dest="pack_wire",
                     action="store_false", default=True,
                     help="sharded quantized transport: gather the "

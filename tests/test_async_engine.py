@@ -1,0 +1,411 @@
+"""Barrier-free async engine: reference bit-identity, donation
+equivalence (mirroring test_wire_packing's aliasing probes),
+mid-run checkpoint/preempt-restore bit-identity, the seed invariants
+(equal speeds + λ=1 applies one sync round's mass per tick; snapshot
+pruning never drops a live version; staleness weights monotone in
+delay), quantized-wire error feedback, and an exactly-once sweep over
+randomized fault scenarios.
+
+Everything runs on a tiny quadratic model (11 parameters) so the whole
+module is seconds, not minutes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import DiLoCoConfig, TrainConfig
+from repro.core import async_diloco, diloco, faults, outer_opt
+from repro.core.async_diloco import AsyncEngine
+from repro.core.faults import Scenario
+from repro.optim import adamw, precision
+from test_faults import random_scenario
+
+
+# ---------------------------------------------------------------------------
+# tiny fixture: quadratic loss over 11 parameters
+# ---------------------------------------------------------------------------
+
+def tiny_params():
+    return {"w": jnp.arange(8.0) / 8.0, "b": jnp.ones((3,))}
+
+
+def quad_loss(p, batch):
+    t = batch["tokens"].astype(jnp.float32).mean() / 7.0
+    return (jnp.sum((p["w"] - t) ** 2)
+            + 0.1 * jnp.sum(jnp.square(p["b"]))), {}
+
+
+def sample(key, B, S):
+    return jax.random.randint(key, (B, S), 0, 7, jnp.int32)
+
+
+def make_cfgs(k=2, H=2, *, lam=1.0, total=64, **dkw):
+    dcfg = DiLoCoConfig(k=k, H=H, transport="async",
+                        staleness_lambda=lam, **dkw)
+    tcfg = TrainConfig(inner_lr=0.05, warmup_steps=2, total_steps=total,
+                       batch_size=2, seq_len=4)
+    return dcfg, tcfg
+
+
+def make_engine(k=2, H=2, *, lam=1.0, scenario=None, donate=True,
+                seed=0, **dkw):
+    dcfg, tcfg = make_cfgs(k, H, lam=lam, **dkw)
+    return AsyncEngine(quad_loss, sample, dcfg, tcfg,
+                       scenario=scenario, seed=seed, donate=donate)
+
+
+def _global_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# the core acceptance property: f32 fault-free path ≡ reference
+# ---------------------------------------------------------------------------
+
+def test_f32_fault_free_bit_identical_to_sequential_reference():
+    """Equal speeds, λ=1, zero faults: the engine is bit-identical to a
+    hand-written sequential reference built from the public pieces
+    (make_inner_step / outer_opt.update / adamw) applying each worker's
+    delta at 1/k in timeline order — no engine internals involved."""
+    k, H, T = 2, 2, 3
+    dcfg, tcfg = make_cfgs(k, H)
+    eng = make_engine(k, H)
+    state = eng.init_state(tiny_params())
+    state, hist = eng.run(state, ticks=T)
+    assert len(hist) == k * T
+
+    # ---- reference: a plain sequential loop, no async_diloco
+    # machinery. Its phase/apply are jitted with the same op structure
+    # as the engine's (scan over H; flat-delta weight then outer
+    # update) so XLA rounds identically — what the comparison then
+    # pins down is the engine's EVENT SEMANTICS: per-uid RNG keys,
+    # tick-major application order, dispatch-snapshot deltas, 1/k
+    # weights, and re-dispatch from every fresh global.
+    from jax.flatten_util import ravel_pytree
+    base = jax.random.PRNGKey(0)
+    inner_step = diloco.make_inner_step(quad_loss, tcfg,
+                                        tcfg.total_steps)
+    g = tiny_params()
+    _, unravel = ravel_pytree(g)
+
+    @jax.jit
+    def ref_phase(p, o, key, step0):
+        def body(carry, h):
+            p, o = carry
+            batch = {"tokens": sample(jax.random.fold_in(key, h),
+                                      tcfg.batch_size, tcfg.seq_len)}
+            p, o, m = inner_step(p, o, batch, step0 + h)
+            return (p, o), m["loss"]
+        (p, o), _ = jax.lax.scan(body, (p, o), jnp.arange(H))
+        return p, o
+
+    @jax.jit
+    def ref_apply(g, outer, snap, p, res, weight):
+        d, _ = ravel_pytree(jax.tree.map(
+            lambda s, q: s - q.astype(s.dtype), snap, p))
+        applied = unravel((d + res) * weight)
+        return outer_opt.update(
+            applied, outer, g, kind=dcfg.outer_opt, lr=dcfg.outer_lr,
+            momentum=dcfg.outer_momentum, b2=dcfg.outer_adam_b2,
+            eps=dcfg.outer_adam_eps)
+
+    outer = outer_opt.init(g)
+    zeros = jnp.zeros((11,), jnp.float32)
+    wp = [jax.tree.map(jnp.copy, g) for _ in range(k)]
+    wo = [adamw.init(g, policy=precision.policy_of(tcfg))
+          for _ in range(k)]
+    wver = [0] * k
+    snaps = {0: jax.tree.map(jnp.copy, g)}
+    ver, inner_done = 0, 0
+    for tick in range(1, T + 1):
+        for i in range(k):       # timeline order: tick-major, worker
+            uid = i * T + (tick - 1)
+            key = jax.random.fold_in(base, uid)
+            p, o = ref_phase(wp[i], wo[i], key,
+                             jnp.asarray(inner_done))
+            inner_done += H
+            g, outer = ref_apply(g, outer, snaps[wver[i]], p, zeros,
+                                 jnp.float32(1.0 / k))
+            ver += 1
+            snaps[ver] = jax.tree.map(jnp.copy, g)
+            wp[i] = jax.tree.map(jnp.copy, g)
+            wo[i] = o
+            wver[i] = ver
+
+    assert _global_equal(state.global_params, g)
+
+
+def test_equal_speed_lambda1_applies_one_round_mass_per_tick():
+    """λ=1, equal speeds: each tick delivers k arrivals at weight 1/k —
+    exactly one synchronous round's total update mass per tick."""
+    k = 4
+    eng = make_engine(k, 1, scenario=Scenario.uniform(k))
+    state, hist = eng.run(eng.init_state(tiny_params()), ticks=3)
+    by_tick = {}
+    for r in hist:
+        assert r["event"] == "arrival"
+        by_tick.setdefault(r["tick"], []).append(r["weight"])
+    for tick, ws in by_tick.items():
+        assert len(ws) == k
+        assert abs(sum(ws) - 1.0) < 1e-12, (tick, ws)
+
+
+def test_staleness_weights_match_policy_and_stay_monotone():
+    k = 3
+    eng = make_engine(k, 1, lam=0.7,
+                      scenario=Scenario.stragglers(k, slow=(3,)))
+    state, hist = eng.run(eng.init_state(tiny_params()), ticks=6)
+    arr = [r for r in hist if r["event"] == "arrival"]
+    assert any(r["staleness"] > 0 for r in arr)
+    for r in arr:
+        assert r["staleness"] >= 0
+        assert r["weight"] == pytest.approx(
+            0.7 ** r["staleness"] / k, rel=1e-12)
+    # monotone in the delay: sort by staleness, weights non-increasing
+    by_stale = sorted(arr, key=lambda r: r["staleness"])
+    ws = [r["weight"] for r in by_stale]
+    assert all(a >= b for a, b in zip(ws, ws[1:]))
+
+
+def test_snapshot_pruning_tracks_live_versions_exactly():
+    k = 3
+    eng = make_engine(k, 1,
+                      scenario=Scenario.stragglers(k, slow=(2, 4)))
+    state = eng.init_state(tiny_params())
+    # engine asserts internally that a live version is never dropped;
+    # externally: after every run the table holds exactly the live set
+    for _ in range(4):
+        state, _ = eng.run(state, ticks=8, max_events=3)
+        assert set(state.snapshots) == state.live_versions()
+    assert len(state.snapshots) <= k + 1
+
+
+# ---------------------------------------------------------------------------
+# donation (satellite a): equivalence + aliasing probes
+# ---------------------------------------------------------------------------
+
+def _donate_all(tree):
+    f = jax.jit(lambda t: jax.tree.map(lambda x: x * 1, t),
+                donate_argnums=0)
+    return f(tree)
+
+
+def _assert_alive(tree):
+    for leaf in jax.tree_util.tree_leaves(tree):
+        np.asarray(leaf)  # raises RuntimeError if deleted
+
+
+def test_donated_run_bit_equals_undonated_run():
+    """The regression mirror of test_wire_packing's donation probes at
+    the whole-engine level: donate=True and donate=False runs are
+    bit-identical under a faulty scenario (stragglers + drops), so no
+    donated buffer is ever read after the jit consumed it."""
+    k = 2
+    scen = Scenario(speeds=(1, 2), drop_prob=0.4, max_retries=1,
+                    seed=5)
+    outs = {}
+    for donate in (True, False):
+        eng = make_engine(k, 2, lam=0.8, scenario=scen, donate=donate,
+                          outer_grad_dtype="int4", error_feedback=True)
+        state, hist = eng.run(eng.init_state(tiny_params()), ticks=5)
+        outs[donate] = (state, hist)
+    sa, ha = outs[True]
+    sb, hb = outs[False]
+    assert _global_equal(sa.global_params, sb.global_params)
+    assert [r["event"] for r in ha] == [r["event"] for r in hb]
+    for ra, rb in zip(ha, hb):
+        if ra["event"] == "arrival":
+            assert ra["uid"] == rb["uid"]
+            assert ra["inner_loss"] == rb["inner_loss"]
+            assert ra["delta_norm"] == rb["delta_norm"]
+    for wa, wb in zip(sa.workers, sb.workers):
+        assert np.array_equal(np.asarray(wa.residual),
+                              np.asarray(wb.residual))
+
+
+def test_init_state_hands_fresh_buffers():
+    """init_state must never alias the caller's params, and residuals
+    must be one buffer PER worker (a shared zeros array would be
+    deleted for everyone at the first donated apply)."""
+    params0 = tiny_params()
+    eng = make_engine(2, 1)
+    st = eng.init_state(params0)
+    assert st.workers[0].residual is not st.workers[1].residual
+    _donate_all({"g": st.global_params, "snap": st.snapshots[0],
+                 "w0": st.workers[0].params,
+                 "r0": st.workers[0].residual})
+    _assert_alive(params0)
+    _assert_alive(st.workers[1].params)
+    _assert_alive(st.workers[1].residual)
+
+
+def test_snapshots_survive_worker_redispatch_donation():
+    """After arrivals, the live snapshot table must hold copies no
+    donated carry can delete out from under later stale arrivals."""
+    eng = make_engine(2, 1)
+    state, _ = eng.run(eng.init_state(tiny_params()), ticks=2)
+    for snap in state.snapshots.values():
+        _assert_alive(snap)
+    _donate_all(state.global_params)
+    # worker slots and remaining snapshots must be unaffected
+    for w in state.workers:
+        _assert_alive(w.params)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint (satellite b): full state round-trip + preempt-restore
+# ---------------------------------------------------------------------------
+
+def test_state_tree_roundtrip_is_exact(tmp_path):
+    eng = make_engine(2, 1, outer_grad_dtype="int4",
+                      error_feedback=True,
+                      scenario=Scenario.drop(2, 0.5, max_retries=1,
+                                             seed=3))
+    state, _ = eng.run(eng.init_state(tiny_params()), ticks=3)
+    path = str(tmp_path / "async.npz")
+    ckpt.save(path, async_diloco.state_to_tree(state),
+              metadata={"k": 2})
+    back = async_diloco.state_from_tree(ckpt.restore_tree(path),
+                                        tiny_params())
+    assert back.version == state.version
+    assert back.events_done == state.events_done
+    assert back.inner_done == state.inner_done
+    assert set(back.snapshots) == set(state.snapshots)
+    assert _global_equal(back.global_params, state.global_params)
+    for wa, wb in zip(state.workers, back.workers):
+        assert (wa.version, wa.active) == (wb.version, wb.active)
+        assert np.array_equal(np.asarray(wa.residual),
+                              np.asarray(wb.residual))
+        assert _global_equal(wa.params, wb.params)
+        assert _global_equal(wa.opt.m, wb.opt.m)
+    assert ckpt.load_metadata(path)["k"] == 2
+
+
+def test_preempted_and_restored_run_is_bit_identical(tmp_path):
+    """The PR's headline robustness property: cut a faulty run
+    mid-stream, checkpoint the FULL engine state, restore into a fresh
+    engine, finish — bit-identical to the uninterrupted run (stable
+    per-uid RNG + event cursor make the suffix replay exact)."""
+    k = 2
+    scen = Scenario(speeds=(1, 2), drop_prob=0.3, max_retries=1,
+                    preemptions=((1, 3, 5),), seed=11)
+    kw = dict(lam=0.8, scenario=scen, outer_grad_dtype="bfloat16",
+              error_feedback=True)
+
+    eng_a = make_engine(k, 2, **kw)
+    state_a, hist_a = eng_a.run(eng_a.init_state(tiny_params()),
+                                ticks=8)
+
+    eng_b = make_engine(k, 2, **kw)
+    state_b, hist_b1 = eng_b.run(eng_b.init_state(tiny_params()),
+                                 ticks=8, max_events=3)
+    path = str(tmp_path / "cut.npz")
+    ckpt.save(path, async_diloco.state_to_tree(state_b))
+    del eng_b, state_b
+    eng_c = make_engine(k, 2, **kw)   # fresh process stand-in
+    state_c = async_diloco.state_from_tree(ckpt.restore_tree(path),
+                                           tiny_params())
+    state_c, hist_b2 = eng_c.run(state_c, ticks=8)
+
+    assert _global_equal(state_a.global_params, state_c.global_params)
+    hist_b = hist_b1 + hist_b2
+    assert len(hist_a) == len(hist_b)
+    for ra, rb in zip(hist_a, hist_b):
+        assert ra["event"] == rb["event"]
+        assert ra["tick"] == rb["tick"]
+        if ra["event"] == "arrival":
+            assert ra["uid"] == rb["uid"]
+            assert ra["inner_loss"] == rb["inner_loss"]
+            assert ra["delta_norm"] == rb["delta_norm"]
+    for wa, wc in zip(state_a.workers, state_c.workers):
+        assert np.array_equal(np.asarray(wa.residual),
+                              np.asarray(wc.residual))
+
+
+# ---------------------------------------------------------------------------
+# quantized wire + error feedback on the async path
+# ---------------------------------------------------------------------------
+
+def test_int4_wire_bytes_and_error_feedback_residual():
+    from repro.kernels import ops as kops
+    eng = make_engine(2, 1, outer_grad_dtype="int4",
+                      error_feedback=True)
+    state, hist = eng.run(eng.init_state(tiny_params()), ticks=2)
+    n = 11
+    assert eng.wire_bytes() == kops.transport_bytes(n, "int4",
+                                                    packed=True)
+    assert all(r["wire_bytes"] == eng.wire_bytes() for r in hist)
+    # int4 rounding leaves a residual that error feedback carries
+    assert any(float(np.abs(np.asarray(w.residual)).max()) > 0
+               for w in state.workers)
+    # f32 ships raw
+    eng32 = make_engine(2, 1)
+    eng32.init_state(tiny_params())
+    assert eng32.wire_bytes() == 4 * n
+
+
+def test_error_feedback_off_keeps_zero_residual():
+    eng = make_engine(2, 1, outer_grad_dtype="int4",
+                      error_feedback=False)
+    state, _ = eng.run(eng.init_state(tiny_params()), ticks=2)
+    for w in state.workers:
+        assert float(np.abs(np.asarray(w.residual)).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# exactly-once over randomized scenarios (the apply-loop contract,
+# engine level — deterministic sweep; hypothesis-shrunk variant in
+# tests/test_async_properties.py)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(8))
+def test_every_finished_delta_applied_exactly_once(seed):
+    """Whatever the completion order (stragglers, retries, preemption),
+    the multiset of applied uids equals the timeline's Arrival uids —
+    nothing dropped, nothing double-applied — and lost/discarded
+    phases never touch the server."""
+    k, scen = random_scenario(seed)
+    ticks = 3 + seed % 5
+    eng = make_engine(k, 1, lam=0.9, scenario=scen)
+    state, hist = eng.run(eng.init_state(tiny_params()), ticks=ticks)
+    events = scen.timeline(k, ticks)
+    want_applied = sorted(e.uid for e in events
+                          if isinstance(e, faults.Arrival))
+    got_applied = sorted(r["uid"] for r in hist
+                         if r["event"] == "arrival")
+    assert got_applied == want_applied
+    assert len(got_applied) == len(set(got_applied))
+    want_lost = sorted(e.uid for e in events
+                       if isinstance(e, faults.Lost))
+    got_lost = sorted(r["uid"] for r in hist if r["event"] == "lost")
+    assert got_lost == want_lost
+    # one outer application per arrival, no more
+    assert state.version == len(got_applied)
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+
+def test_async_rejects_streaming_fragments_and_bad_lambda():
+    import dataclasses
+    dcfg, tcfg = make_cfgs(2, 1)
+    with pytest.raises(ValueError, match="streaming_fragments"):
+        AsyncEngine(quad_loss, sample,
+                    dataclasses.replace(dcfg, streaming_fragments=2),
+                    tcfg)
+    with pytest.raises(ValueError, match="lambda"):
+        AsyncEngine(quad_loss, sample,
+                    dataclasses.replace(dcfg, staleness_lambda=1.5),
+                    tcfg)
+
+
+def test_round_builder_rejects_async_transport():
+    dcfg, tcfg = make_cfgs(2, 1)
+    with pytest.raises(ValueError, match="async"):
+        diloco.make_round(quad_loss, lambda kk, B, S: None, dcfg, tcfg)

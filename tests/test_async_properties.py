@@ -1,0 +1,187 @@
+"""Hypothesis property tests for the fault harness and the async
+engine's exactly-once contract: for arbitrary scenarios (speeds,
+latencies, drops, retries, preemption spans), the timeline assigns
+every finished phase's uid to AT MOST one terminal event, every
+Arrival lands on a continuously-present worker, the event stream is a
+pure function of the scenario (prefix-resume identity), round-mask
+projections stay consistent with the event stream, and the engine
+applies every Arrival exactly once in whatever order completions land.
+
+(Separate from tests/test_faults.py / test_async_engine.py so the
+module-level hypothesis importorskip cannot take the deterministic
+suites with it — same split as tests/test_pod_properties.py. The
+deterministic seeded sweeps over there cover the same properties when
+hypothesis is absent.)
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import faults  # noqa: E402
+from repro.core.faults import (Arrival, Join, Leave, Lost,  # noqa: E402
+                               Scenario)
+
+from test_faults import _presence_ok  # noqa: E402
+
+
+@st.composite
+def _scenarios(draw):
+    k = draw(st.integers(2, 5))
+    pre = ()
+    if draw(st.booleans()):
+        leave = draw(st.integers(1, 6))
+        rejoin = draw(st.sampled_from([0, leave + 1, leave + 3]))
+        pre = ((draw(st.integers(0, k - 1)), leave, rejoin),)
+    s = Scenario(
+        speeds=tuple(draw(st.lists(st.integers(1, 3), min_size=k,
+                                   max_size=k))),
+        latency=tuple(draw(st.lists(st.integers(0, 2), min_size=k,
+                                    max_size=k))),
+        latency_jitter=draw(st.sampled_from([0.0, 0.5])),
+        drop_prob=draw(st.sampled_from([0.0, 0.3, 0.7])),
+        max_retries=draw(st.integers(0, 2)),
+        retry_backoff=draw(st.integers(1, 2)),
+        preemptions=pre,
+        seed=draw(st.integers(0, 10_000)))
+    ticks = draw(st.integers(2, 10))
+    return k, s, ticks
+
+
+@given(_scenarios())
+@settings(max_examples=60, deadline=None)
+def test_terminal_events_are_exactly_once_and_live(case):
+    """Every finished phase resolves to at most one terminal event
+    (Arrival xor Lost), arrivals land only on continuously-present
+    workers, and the stream is tick-ordered within bounds."""
+    k, s, ticks = case
+    ev = s.timeline(k, ticks)
+    uids = [e.uid for e in ev if isinstance(e, (Arrival, Lost))]
+    assert len(uids) == len(set(uids))
+    assert _presence_ok(ev, k)
+    assert [e.tick for e in ev] == sorted(e.tick for e in ev)
+    for e in ev:
+        assert 1 <= e.tick <= ticks
+        if isinstance(e, Arrival):
+            assert e.dispatch_tick < e.finish_tick <= e.tick
+            assert 0 <= e.attempt <= s.max_retries
+
+
+@given(_scenarios())
+@settings(max_examples=40, deadline=None)
+def test_timeline_is_pure_and_prefix_resumable(case):
+    """timeline() is a pure function of (scenario, k, ticks), and any
+    prefix cut resumes to the identical suffix — the property the
+    engine's checkpoint-restore (events_done cursor) relies on."""
+    k, s, ticks = case
+    ev = s.timeline(k, ticks)
+    again = s.timeline(k, ticks)
+    assert ev == again
+    for cut in (0, len(ev) // 2, len(ev)):
+        assert ev[cut:] == again[cut:]
+
+
+@given(_scenarios())
+@settings(max_examples=40, deadline=None)
+def test_longer_horizon_extends_the_event_stream(case):
+    """Simulating further never rewrites history: events at tick <= T
+    are identical whether the horizon is T or T + more — modulo uid,
+    which is horizon-scoped (uid = worker * horizon + phase index), and
+    modulo boundary-sensitive events: Lost materializes only once
+    retries exhaust INSIDE the horizon (a longer horizon keeps
+    retrying), and Leave/Join AT the final tick are suppressed by the
+    short horizon (nothing can happen after them). Events strictly
+    inside the horizon are stable."""
+    k, s, ticks = case
+    short = [e for e in s.timeline(k, ticks)]
+    longer = [e for e in s.timeline(k, ticks + 4) if e.tick <= ticks]
+
+    def stable(evs):
+        out = []
+        for e in evs:
+            if e.tick >= ticks or isinstance(e, Lost):
+                continue
+            if isinstance(e, Arrival):
+                if e.attempt > 0:
+                    continue
+                e = e._replace(uid=-1)
+            out.append(e)
+        return out
+
+    assert stable(short) == stable(longer)
+
+
+@given(_scenarios())
+@settings(max_examples=30, deadline=None)
+def test_round_masks_agree_with_timeline_presence(case):
+    """active-mask projections never mark a worker active in a round
+    fully covered by one of its gone spans."""
+    k, s, ticks = case
+    T = s.sync_round_ticks(k)
+    rounds = max(1, ticks // T)
+    _, acts = s.round_masks(k, rounds)
+    gone = {}
+    for (w, leave, rejoin) in s.preemptions:
+        gone[w] = (leave, rejoin if rejoin > 0 else float("inf"))
+    for r in range(rounds):
+        lo, hi = r * T, (r + 1) * T       # tick span of round r
+        for w, (gl, gh) in gone.items():
+            if gl <= lo and hi <= gh:
+                assert acts[r, w] == 0.0
+
+
+@given(st.integers(0, 12), st.floats(0.0, 1.0), st.integers(1, 8))
+@settings(max_examples=60, deadline=None)
+def test_staleness_weight_bounds_and_monotonicity(tau, lam, k):
+    w = faults.staleness_weight(tau, lam, k)
+    assert 0.0 <= w <= 1.0 / k
+    assert w <= faults.staleness_weight(max(0, tau - 1), lam, k)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000))
+def test_engine_applies_every_arrival_exactly_once(seed):
+    """Engine-level exactly-once: run the real AsyncEngine on a random
+    scenario and check the applied-uid set equals the timeline's
+    Arrival uids, in completion order, with one version bump each."""
+    import jax.numpy as jnp  # deferred: keep collection cheap
+
+    from repro.configs.base import DiLoCoConfig, TrainConfig
+    from repro.core import async_diloco
+
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(2, 4))
+    s = Scenario(
+        speeds=tuple(int(x) for x in rng.integers(1, 3, k)),
+        latency=tuple(int(x) for x in rng.integers(0, 2, k)),
+        drop_prob=float(rng.choice([0.0, 0.4])),
+        max_retries=1, seed=int(rng.integers(0, 100)))
+
+    def loss(p, batch):
+        t = batch["tokens"].astype(jnp.float32).mean() / 7.0
+        return jnp.sum((p["w"] - t) ** 2), {}
+
+    import jax
+    sample = lambda key, B, S: jax.random.randint(key, (B, S), 0, 7,
+                                                  jnp.int32)
+    dcfg = DiLoCoConfig(k=k, H=2, transport="async", outer_lr=0.3)
+    tcfg = TrainConfig(inner_lr=0.05, warmup_steps=2, total_steps=64,
+                       batch_size=2, seq_len=4)
+    eng = async_diloco.AsyncEngine(loss, sample, dcfg, tcfg,
+                                   scenario=s, total_steps=64, seed=0)
+    state = eng.init_state({"w": jnp.arange(4.0) / 4.0})
+    ticks = 4
+    state, recs = eng.run(state, ticks=ticks)
+    ev = s.timeline(k, ticks)
+    want = sorted(e.uid for e in ev if isinstance(e, Arrival))
+    got = sorted(r["uid"] for r in recs if r["event"] == "arrival")
+    assert got == want
+    assert int(state.version) == len(want)
+    lost = sorted(e.uid for e in ev if isinstance(e, Lost))
+    assert sorted(r["uid"] for r in recs
+                  if r["event"] == "lost") == lost

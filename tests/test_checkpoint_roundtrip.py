@@ -1,0 +1,144 @@
+"""Checkpoint round-trips for every training-state shape the drivers
+can carry: DiLoCoState (classic), StreamState (streaming, with and
+without error-feedback residuals), AdamWState under a mixed precision
+policy (bf16 moments + f32 masters), and the dtype/metadata contracts
+of the npz container. The async engine's full-state round-trip (and
+the preempted-and-restored bit-identity) lives in
+tests/test_async_engine.py; the gossip slice in tests/test_gossip.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import DiLoCoConfig, TrainConfig
+from repro.core import diloco, streaming
+from repro.optim import adamw, precision
+
+
+def quad_loss(p, batch):
+    t = batch["tokens"].astype(jnp.float32).mean() / 7.0
+    return (jnp.sum((p["w"] - t) ** 2)
+            + 0.1 * jnp.sum(jnp.square(p["b"]))), {}
+
+
+def tiny_params():
+    return {"w": jnp.arange(8.0) / 8.0, "b": jnp.ones((3,))}
+
+
+def sample_all(k):
+    def fn(key, B, S):
+        return jax.random.randint(key, (k, B, S), 0, 7, jnp.int32)
+    return fn
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert x.dtype == y.dtype
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _advanced_state(dcfg, tcfg, init_fn, rounds=2):
+    rnd = diloco.make_round(quad_loss, sample_all(dcfg.k), dcfg, tcfg,
+                            total_steps=64)
+    state = init_fn(tiny_params(), dcfg)
+    key = jax.random.PRNGKey(0)
+    for t in range(rounds):
+        state, _ = rnd(state, jax.random.fold_in(key, t))
+    return state
+
+
+def test_diloco_state_roundtrip(tmp_path):
+    dcfg = DiLoCoConfig(k=2, H=2, outer_lr=0.3)
+    tcfg = TrainConfig(inner_lr=0.05, warmup_steps=2, total_steps=64,
+                       batch_size=2, seq_len=4)
+    state = _advanced_state(dcfg, tcfg, diloco.init_state)
+    path = str(tmp_path / "diloco.npz")
+    ckpt.save(path, state, metadata={"phase": "diloco", "round": 2})
+    back = ckpt.restore(path, state)
+    assert isinstance(back, diloco.DiLoCoState)
+    _assert_trees_equal(state, back)
+    meta = ckpt.load_metadata(path)
+    assert meta["phase"] == "diloco" and meta["round"] == 2
+    # and training continues from the restored state exactly as from
+    # the original: one more round on each must agree bitwise
+    rnd = diloco.make_round(quad_loss, sample_all(2), dcfg, tcfg,
+                            total_steps=64)
+    k2 = jax.random.PRNGKey(7)
+    s1, m1 = rnd(state, k2)
+    s2, m2 = rnd(back, k2)
+    _assert_trees_equal(s1, s2)
+    assert float(m1["inner_loss"]) == float(m2["inner_loss"])
+
+
+@pytest.mark.parametrize("ef", [False, True])
+def test_stream_state_roundtrip(tmp_path, ef):
+    dcfg = DiLoCoConfig(k=2, H=4, outer_lr=0.3, streaming_fragments=2,
+                        stream_tau=1,
+                        outer_grad_dtype="bfloat16" if ef else "float32",
+                        error_feedback=ef)
+    tcfg = TrainConfig(inner_lr=0.05, warmup_steps=2, total_steps=64,
+                       batch_size=2, seq_len=4)
+    state = _advanced_state(dcfg, tcfg, streaming.init_state)
+    # a mid-run streaming state is the interesting one: armed latches
+    # set, pending holds an in-flight fragment, residuals nonzero
+    assert float(np.asarray(state.armed).sum()) > 0
+    if ef:
+        assert any(float(np.abs(np.asarray(r)).sum()) > 0
+                   for r in jax.tree.leaves(state.residual))
+    path = str(tmp_path / "stream.npz")
+    ckpt.save(path, state)
+    back = ckpt.restore(path, state)
+    assert isinstance(back, streaming.StreamState)
+    _assert_trees_equal(state, back)
+    # structure-free view reshapes onto the nested NamedTuple too
+    again = ckpt.reshape_like(ckpt.restore_tree(path), state)
+    _assert_trees_equal(state, again)
+
+
+def test_adamw_mixed_policy_roundtrip(tmp_path):
+    pol = precision.make_policy("bfloat16", "float32")
+    params = tiny_params()
+    st = adamw.init(params, policy=pol)
+    assert st.master is not None
+
+    def scalar_loss(p):
+        return quad_loss(p, {"tokens": jnp.zeros((2, 4),
+                                                 jnp.int32)})[0]
+
+    @jax.jit
+    def step(w, s):
+        g = jax.grad(scalar_loss)(adamw.master_params(w, s))
+        return adamw.update(g, s, w, lr=0.05, policy=pol)
+
+    # advance it so moments are nonzero and master/working drift apart
+    work = precision.cast_tree(params, pol.param_dtype)
+    for _ in range(3):
+        work, st = step(work, st)
+    path = str(tmp_path / "adamw.npz")
+    ckpt.save(path, (work, st))
+    w2, st2 = ckpt.restore(path, (work, st))
+    assert jax.tree.leaves(w2)[0].dtype == jnp.bfloat16
+    assert jax.tree.leaves(st2.master)[0].dtype == jnp.float32
+    _assert_trees_equal((work, st), (w2, st2))
+    # resumed step is bit-identical to the uninterrupted one
+    _assert_trees_equal(step(work, st), step(w2, st2))
+
+
+def test_restore_rejects_shape_and_key_mismatch(tmp_path):
+    state = {"w": jnp.ones((4,)), "b": jnp.zeros((2,))}
+    path = str(tmp_path / "s.npz")
+    ckpt.save(path, state)
+    with pytest.raises(ValueError, match="shape"):
+        ckpt.restore(path, {"w": jnp.ones((5,)), "b": jnp.zeros((2,))})
+    with pytest.raises(KeyError):
+        ckpt.restore(path, {"w": jnp.ones((4,)), "extra": jnp.ones(1)})
+    with pytest.raises(KeyError):
+        ckpt.reshape_like({"w": np.ones((4,))}, state)

@@ -146,7 +146,7 @@ mesh_single = make_mesh((2, 2), ("data", "model"))
 mesh_multi = make_mesh((2, 2, 2), ("pod", "data", "model"))
 out = []
 for mesh, mp, fns in [(mesh_single, False, ("main",)),
-                      (mesh_multi, True, ("main", "stream"))]:
+                      (mesh_multi, True, ("main", "stream", "gossip"))]:
     recs = DR.dryrun_pair("diloco_60m", "train_4k", multi_pod=mp,
                           microbatches=2, mesh=mesh, fns=fns)
     out.extend(recs)
@@ -168,7 +168,8 @@ def test_mini_dryrun_subprocess():
     recs = json.loads(res.stdout.splitlines()[-1])
     fns = {r["fn"] for r in recs}
     assert {"inner_train_step", "diloco_inner_step", "diloco_outer_step",
-            "ddp_train_step", "diloco_stream_round", "serve_step"} <= fns
+            "ddp_train_step", "diloco_stream_round", "gossip_exchange",
+            "serve_step"} <= fns
     for r in recs:
         assert "error" not in r, r
         if r["fn"] == "diloco_inner_step":
@@ -190,3 +191,10 @@ def test_mini_dryrun_subprocess():
             assert st["compute_events"] > 0, st
             assert st["syncs_inside_compute"] == 0, st
             assert r["collectives"]["cross_pod_bytes"] > 0
+        if r["fn"] == "gossip_exchange":
+            # gossip's structural property: the pairwise exchange is a
+            # pod PERMUTATION collective only — cross-pod bytes flow,
+            # but nothing reduces or gathers across the whole fleet
+            c = r["collectives"]
+            assert c["cross_pod_bytes"] > 0, c
+            assert set(c["by_op"]) == {"collective-permute"}, c

@@ -1,0 +1,259 @@
+"""Fault-harness units: timeline semantics (seed-loop reduction,
+stragglers, WAN latency, drop/retry/Lost, preemption presence
+invariant), round-mask projections, the staleness-weight policy, and
+hypothesis properties (exactly-once uids, determinism, arrival
+liveness) over randomized scenarios.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import faults
+from repro.core.faults import Arrival, Join, Leave, Lost, Scenario
+
+
+# ---------------------------------------------------------------------------
+# timeline: fault-free reduction + single-fault semantics
+# ---------------------------------------------------------------------------
+
+def test_uniform_reduces_to_seed_tick_loop():
+    """Zero faults, unit speeds: every worker completes one phase per
+    tick and its delta arrives instantly — the seed simulation's loop."""
+    k, T = 4, 5
+    ev = Scenario.uniform(k).timeline(k, T)
+    assert all(isinstance(e, Arrival) for e in ev)
+    assert len(ev) == k * T
+    for i in range(k):
+        mine = [e for e in ev if e.worker == i]
+        assert [e.tick for e in mine] == list(range(1, T + 1))
+        assert all(e.attempt == 0 for e in mine)
+        assert all(e.finish_tick == e.tick for e in mine)
+        assert all(e.dispatch_tick == e.tick - 1 for e in mine)
+
+
+def test_straggler_speed_paces_arrivals():
+    k, T = 4, 8
+    ev = Scenario.stragglers(k, slow=(2,)).timeline(k, T)
+    slow = [e.tick for e in ev if e.worker == k - 1]
+    fast = [e.tick for e in ev if e.worker == 0]
+    assert slow == [2, 4, 6, 8]
+    assert fast == list(range(1, T + 1))
+
+
+def test_wan_latency_shifts_arrivals_and_is_deterministic():
+    k, T = 2, 6
+    s = Scenario.wan(k, base_latency=2, jitter=0.0)
+    ev = s.timeline(k, T)
+    for e in ev:
+        assert isinstance(e, Arrival)
+        assert e.tick == e.finish_tick + 2
+    sj = Scenario.wan(k, base_latency=2, jitter=0.7, seed=3)
+    assert sj.timeline(k, T) == sj.timeline(k, T)  # pure function
+
+
+def test_certain_drop_exhausts_retries_to_lost():
+    k = 2
+    s = Scenario.drop(k, prob=1.0, max_retries=2, retry_backoff=1)
+    ev = s.timeline(k, 10)
+    assert all(isinstance(e, Lost) for e in ev)
+    # finish at 1, three attempts with backoff 1: gives up at 4
+    first = [e for e in ev if e.worker == 0][0]
+    assert first.tick == 4
+
+
+def test_drop_with_retry_arrivals_record_attempt():
+    s = Scenario.drop(4, prob=0.5, max_retries=3, retry_backoff=2,
+                      seed=7)
+    ev = s.timeline(4, 12)
+    arr = [e for e in ev if isinstance(e, Arrival)]
+    assert arr, "p=0.5 with 4 retries should deliver something"
+    assert any(e.attempt > 0 for e in arr)
+    assert all(0 <= e.attempt <= 3 for e in arr)
+    # a retried arrival lands retry_backoff-paced after its finish
+    for e in arr:
+        assert e.tick >= e.finish_tick + 2 * e.attempt
+
+
+def test_preemption_emits_leave_join_and_cuts_phase():
+    s = Scenario.preempt(2, worker=1, leave=2, rejoin=4)
+    ev = s.timeline(2, 6)
+    w1 = [e for e in ev if e.worker == 1]
+    kinds = [type(e) for e in w1]
+    assert kinds.count(Leave) == 1 and kinds.count(Join) == 1
+    lv = next(e for e in w1 if isinstance(e, Leave))
+    jn = next(e for e in w1 if isinstance(e, Join))
+    assert (lv.tick, jn.tick) == (2, 4)
+    # no arrival lands inside the gone span
+    for e in w1:
+        if isinstance(e, Arrival):
+            assert not (lv.tick < e.tick <= jn.tick) or e.tick <= lv.tick
+
+
+def test_permanent_preemption_is_elastic_shrink():
+    s = Scenario.preempt(2, worker=0, leave=3, rejoin=0)
+    ev = s.timeline(2, 8)
+    w0 = [e for e in ev if e.worker == 0]
+    assert not any(isinstance(e, Join) for e in w0)
+    assert not any(e.tick > 3 for e in w0)
+
+
+def test_same_tick_ordering_join_before_arrival_before_leave():
+    # worker 0 rejoining at tick 2 sorts before worker 1's arrival at
+    # tick 2, which sorts before worker 1's leave at tick 2
+    s = Scenario(speeds=(1, 1),
+                 preemptions=((0, 1, 2), (1, 2, 3)))
+    ev = s.timeline(2, 4)
+    t2 = [e for e in ev if e.tick == 2]
+    order = [type(e) for e in t2]
+    assert order == sorted(order, key=lambda c:
+                           {Join: 0, Arrival: 1, Lost: 2, Leave: 3}[c])
+
+
+def _presence_ok(events, k: int) -> bool:
+    """Every Arrival's worker was continuously present from dispatch
+    to application (the engine's slot invariant)."""
+    spans = {i: [] for i in range(k)}  # gone intervals [leave, join)
+    open_ = {}
+    for e in events:
+        if isinstance(e, Leave):
+            open_[e.worker] = e.tick
+        elif isinstance(e, Join):
+            spans[e.worker].append((open_.pop(e.worker), e.tick))
+    for w, t in open_.items():
+        spans[w].append((t, float("inf")))
+    for e in events:
+        if isinstance(e, Arrival):
+            for lo, hi in spans[e.worker]:
+                if e.dispatch_tick < hi and e.tick > lo:
+                    return False
+    return True
+
+
+def test_inflight_payload_discarded_at_preemption():
+    # latency 3 puts payloads on the wire across the leave tick; the
+    # server must discard them rather than apply for a gone worker
+    s = Scenario(speeds=(1, 1), latency=(3, 3),
+                 preemptions=((0, 3, 6),))
+    ev = s.timeline(2, 12)
+    assert _presence_ok(ev, 2)
+
+
+# ---------------------------------------------------------------------------
+# round-mask projections (the barrier-paced consumers)
+# ---------------------------------------------------------------------------
+
+def test_round_masks_shapes_and_default():
+    drops, acts = Scenario.uniform(3).round_masks(3, 5)
+    assert drops.shape == acts.shape == (5, 3)
+    assert drops.min() == acts.min() == 1.0
+
+
+def test_round_masks_drop_survival_includes_retries():
+    # p=0.6 with 1 retry: loss prob 0.36 — the masks reflect survival
+    s = Scenario.drop(2, prob=0.6, max_retries=1, seed=0)
+    drops, _ = s.round_masks(2, 4000)
+    lost = 1.0 - drops.mean()
+    assert abs(lost - 0.36) < 0.04, lost
+
+
+def test_round_masks_preemption_spans_rounds():
+    # T = sync_round_ticks = 2 (speed 2 straggler); worker 1 gone over
+    # ticks [3, 7) touches rounds 1..3 of the tick spans [2,4),[4,6),[6,8)
+    s = Scenario(speeds=(1, 2), preemptions=((1, 3, 7),))
+    assert s.sync_round_ticks(2) == 2
+    _, acts = s.round_masks(2, 5)
+    assert acts[:, 0].tolist() == [1.0] * 5
+    assert acts[:, 1].tolist() == [1.0, 0.0, 0.0, 0.0, 1.0]
+
+
+def test_sync_round_ticks_bills_slowest_worker_plus_link():
+    s = Scenario(speeds=(1, 3), latency=(0, 2))
+    assert s.sync_round_ticks(2) == 5
+
+
+# ---------------------------------------------------------------------------
+# validation + staleness policy
+# ---------------------------------------------------------------------------
+
+def test_scenario_field_validation():
+    with pytest.raises(ValueError):
+        Scenario(speeds=(1, 2)).resolved_speeds(3)
+    with pytest.raises(ValueError):
+        Scenario(speeds=(0, 1)).resolved_speeds(2)
+    with pytest.raises(ValueError):
+        Scenario(latency=(-1,)).resolved_latency(1)
+    with pytest.raises(ValueError):
+        Scenario.preempt(2, worker=5, leave=1, rejoin=2)._preempt_of(2)
+    with pytest.raises(ValueError):
+        Scenario.preempt(2, worker=0, leave=3, rejoin=2)._preempt_of(2)
+    with pytest.raises(ValueError):  # overlapping spans
+        Scenario(preemptions=((0, 1, 5), (0, 3, 8)))._preempt_of(2)
+
+
+def test_staleness_weight_policy():
+    k = 4
+    assert faults.staleness_weight(0, 1.0, k) == 1.0 / k
+    # monotone non-increasing in the delay for lambda <= 1
+    ws = [faults.staleness_weight(t, 0.7, k) for t in range(6)]
+    assert all(a >= b for a, b in zip(ws, ws[1:]))
+    assert faults.staleness_weight(3, 0.5, 2) == 0.5 ** 3 / 2
+    with pytest.raises(ValueError):
+        faults.staleness_weight(1, 1.5, k)
+    with pytest.raises(ValueError):
+        faults.staleness_weight(1, -0.1, k)
+
+
+# ---------------------------------------------------------------------------
+# randomized-scenario sweep (deterministic; hypothesis-shrunk variants
+# of the same properties live in tests/test_async_properties.py, which
+# skips cleanly when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+def random_scenario(seed: int):
+    """One seeded random scenario (speeds, latency, drops, retries,
+    maybe a preemption) — shared with the property-test module."""
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(2, 6))
+    pre = ()
+    if rng.random() < 0.5:
+        leave = int(rng.integers(1, 7))
+        rejoin = int(rng.choice([0, leave + 1, leave + 3]))
+        pre = ((int(rng.integers(0, k)), leave, rejoin),)
+    return k, Scenario(
+        speeds=tuple(int(x) for x in rng.integers(1, 4, k)),
+        latency=tuple(int(x) for x in rng.integers(0, 3, k)),
+        drop_prob=float(rng.choice([0.0, 0.3, 0.7])),
+        max_retries=int(rng.integers(0, 3)),
+        preemptions=pre, seed=int(rng.integers(0, 100)))
+
+
+@pytest.mark.parametrize("seed", range(40))
+def test_timeline_exactly_once_and_live(seed):
+    """The apply-loop contract, at the timeline level: every finished
+    phase's uid resolves to AT MOST one terminal event (Arrival or
+    Lost, never both), every Arrival lands on a continuously-present
+    worker, and events are ordered."""
+    k, s = random_scenario(seed)
+    ticks = 2 + seed % 9
+    ev = s.timeline(k, ticks)
+    uids = [e.uid for e in ev if isinstance(e, (Arrival, Lost))]
+    assert len(uids) == len(set(uids))
+    assert _presence_ok(ev, k)
+    assert [e.tick for e in ev] == sorted(e.tick for e in ev)
+    for e in ev:
+        if isinstance(e, Arrival):
+            assert e.dispatch_tick < e.finish_tick <= e.tick <= ticks
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_timeline_prefix_resume_is_identical(seed):
+    """Replaying a prefix and resuming mid-stream yields the identical
+    suffix — the checkpoint-restore contract."""
+    k, s = random_scenario(seed)
+    ticks = 2 + seed % 9
+    ev = s.timeline(k, ticks)
+    again = s.timeline(k, ticks)
+    assert ev == again
+    cut = min(seed % 8, len(ev))
+    assert ev[cut:] == again[cut:]

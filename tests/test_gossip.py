@@ -1,0 +1,276 @@
+"""Gossip transport: butterfly mixing exactness (the proven schedule),
+the structured swap ≡ partner take, random-matching involutions, fault
+gating, fragment scheduling, precision policies, state checkpointing,
+and the full round through ``make_round``/``make_run``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import DiLoCoConfig, TrainConfig
+from repro.core import diloco, gossip
+from repro.kernels import ops as kops
+
+
+def quad_loss(p, batch):
+    t = batch["tokens"].astype(jnp.float32).mean() / 7.0
+    return (jnp.sum((p["w"] - t) ** 2)
+            + 0.1 * jnp.sum(jnp.square(p["b"]))), {}
+
+
+def tiny_params():
+    return {"w": jnp.arange(8.0) / 8.0, "b": jnp.ones((3,))}
+
+
+def sample_all(k):
+    def fn(key, B, S):
+        return jax.random.randint(key, (k, B, S), 0, 7, jnp.int32)
+    return fn
+
+
+def make_cfgs(k=4, H=2, *, P=0, **dkw):
+    dcfg = DiLoCoConfig(k=k, H=H, transport="gossip",
+                        streaming_fragments=P, outer_lr=0.3, **dkw)
+    tcfg = TrainConfig(inner_lr=0.05, warmup_steps=2, total_steps=64,
+                       batch_size=2, seq_len=4)
+    return dcfg, tcfg
+
+
+# ---------------------------------------------------------------------------
+# pairing + mixing (pure functions)
+# ---------------------------------------------------------------------------
+
+def test_butterfly_mixes_to_exact_mean_in_log2k_rounds():
+    """The proven schedule: with mix=0.5 and full-tree masks, log2(k)
+    butterfly stages take ANY initial disagreement to the global mean
+    (averaging along hypercube dimension b equalizes every pair
+    differing only in bit b; induction over dimensions)."""
+    k = 8
+    rng = np.random.default_rng(0)
+    est = {"a": jnp.asarray(rng.normal(size=(k, 4, 3)).astype(
+        np.float32)), "b": jnp.asarray(rng.normal(size=(k, 5)).astype(
+            np.float32))}
+    mask = jax.tree.map(lambda g: 1.0, est)
+    want = jax.tree.map(lambda g: np.asarray(g).mean(0), est)
+    for t in range(3):           # log2(8) stages
+        partner = gossip.partner_map(k, t, "butterfly")
+        est = gossip.mix_round(est, partner, mask, mix=0.5)
+    for leaf, m in zip(jax.tree.leaves(est), jax.tree.leaves(want)):
+        got = np.asarray(leaf)
+        np.testing.assert_allclose(got, np.broadcast_to(m, got.shape),
+                                   rtol=2e-6, atol=2e-6)
+        # every worker agrees with every other to the last few ulps
+        # (summation order differs per worker, so not bitwise)
+        assert float((got.max(0) - got.min(0)).max()) < 4e-7
+
+
+def test_butterfly_swap_equals_partner_take():
+    for k, stage in [(2, 0), (4, 0), (4, 1), (8, 2)]:
+        g = jnp.asarray(np.random.default_rng(1).normal(
+            size=(k, 3, 5)).astype(np.float32))
+        p = gossip.partner_map(k, stage, "butterfly")
+        np.testing.assert_array_equal(
+            np.asarray(jnp.take(g, p, axis=0)),
+            np.asarray(gossip.butterfly_swap(stage, k)(g)))
+    with pytest.raises(ValueError):
+        gossip.butterfly_swap(2, 4)   # 2^3 does not divide 4
+
+
+def test_partner_maps_are_involutions():
+    for k in (2, 5, 8):
+        for t in range(4):
+            key = jax.random.PRNGKey(10 * k + t)
+            for pairing in (("butterfly",) if k & (k - 1) == 0
+                            else ()) + ("random",):
+                p = np.asarray(gossip.partner_map(k, t, pairing,
+                                                  key=key))
+                np.testing.assert_array_equal(p[p], np.arange(k))
+                selfs = int((p == np.arange(k)).sum())
+                assert selfs == (k % 2 if pairing == "random" else 0)
+
+
+def test_mix_round_gates_dropped_and_self_pairs():
+    k = 4
+    est = {"a": jnp.asarray(np.random.default_rng(2).normal(
+        size=(k, 6)).astype(np.float32))}
+    mask = {"a": 1.0}
+    partner = gossip.partner_map(k, 0, "butterfly")
+    # ok=0 everywhere: nothing moves
+    out = gossip.mix_round(est, partner, mask, mix=0.5,
+                           ok=jnp.zeros((k,), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  np.asarray(est["a"]))
+    # self-partnered workers (k=1 map) never move either
+    one = {"a": est["a"][:1]}
+    out1 = gossip.mix_round(one, gossip.partner_map(1, 0, "butterfly"),
+                            mask, mix=0.5)
+    np.testing.assert_array_equal(np.asarray(out1["a"]),
+                                  np.asarray(one["a"]))
+
+
+def test_quantized_exchange_still_contracts_disagreement():
+    k = 2
+    est = {"a": jnp.asarray([[1.0, 2.0], [3.0, 8.0]], jnp.float32)}
+    out = gossip.mix_round(est, gossip.partner_map(k, 0, "butterfly"),
+                           {"a": 1.0}, mix=0.5,
+                           quant_dtype="bfloat16")
+    spread0 = float(np.abs(np.diff(np.asarray(est["a"]), axis=0)).sum())
+    spread1 = float(np.abs(np.diff(np.asarray(out["a"]), axis=0)).sum())
+    assert spread1 < 0.1 * spread0
+
+
+# ---------------------------------------------------------------------------
+# the round through the shared builders
+# ---------------------------------------------------------------------------
+
+def test_gossip_round_body_runs_and_reports():
+    k = 4
+    dcfg, tcfg = make_cfgs(k, P=2)
+    body = gossip.make_gossip_round_body(quad_loss, sample_all(k),
+                                         dcfg, tcfg)
+    state = gossip.init_state(tiny_params(), dcfg)
+    key = jax.random.PRNGKey(0)
+    state, m = body(state, key)
+    assert float(m["exchange_frac"]) == 1.0
+    assert float(m["gossip_frag"]) == 0.0
+    state, m = body(state, jax.random.fold_in(key, 1))
+    assert float(m["gossip_frag"]) == 1.0     # P=2 schedule advanced
+    assert np.isfinite(float(m["gossip_spread"]))
+    assert np.isfinite(float(m["inner_loss"]))
+
+
+def test_gossip_inactive_worker_is_fully_frozen():
+    k = 4
+    dcfg, tcfg = make_cfgs(k)
+    body = gossip.make_gossip_round_body(quad_loss, sample_all(k),
+                                         dcfg, tcfg)
+    state = gossip.init_state(tiny_params(), dcfg)
+    # introduce disagreement first so freezing is observable
+    state, _ = body(state, jax.random.PRNGKey(0))
+    act = jnp.asarray([1.0, 1.0, 1.0, 0.0])
+    before = jax.tree.map(lambda g: np.asarray(g[3]).copy(),
+                          state.global_est)
+    state2, m = body(state, jax.random.PRNGKey(1),
+                     jnp.ones((k,)), act)
+    after = jax.tree.map(lambda g: np.asarray(g[3]),
+                         state2.global_est)
+    for b, a in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        np.testing.assert_array_equal(b, a)
+    # its butterfly partner (worker 1 at stage 1) lost its exchange
+    # too, so only the (0,2) pair traded this round
+    assert float(m["exchange_frac"]) == 0.5
+
+
+def test_gossip_all_drops_blocks_every_exchange():
+    k = 4
+    dcfg, tcfg = make_cfgs(k)
+    body = gossip.make_gossip_round_body(quad_loss, sample_all(k),
+                                         dcfg, tcfg)
+    state = gossip.init_state(tiny_params(), dcfg)
+    _, m = body(state, jax.random.PRNGKey(0),
+                jnp.zeros((k,)), jnp.ones((k,)))
+    assert float(m["exchange_frac"]) == 0.0
+    assert float(m["drop_frac"]) == 1.0
+
+
+def test_gossip_through_scanned_make_run_learns():
+    k = 4
+    dcfg, tcfg = make_cfgs(k, P=2)
+    val = jax.random.randint(jax.random.PRNGKey(9), (4, 4), 0, 7,
+                             jnp.int32)
+    run = diloco.make_run(quad_loss, sample_all(k), dcfg, tcfg,
+                          rounds_per_call=6, total_steps=64,
+                          batch_size=2, seq_len=4, eval_tokens=val)
+    state = gossip.init_state(tiny_params(), dcfg)
+    state, ms = run(state, jax.random.PRNGKey(0), None, None, None)
+    vl = np.asarray(ms["val_loss"])
+    assert np.isfinite(vl).all()
+    assert vl[-1] < vl[0]
+    # consensus view exists and is finite
+    for leaf in jax.tree.leaves(state.global_params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_gossip_mixed_precision_policy():
+    k = 2
+    dcfg, tcfg = make_cfgs(k, param_dtype="bfloat16",
+                           master_dtype="float32")
+    tcfg = dataclasses.replace(tcfg, param_dtype="bfloat16",
+                               master_dtype="float32")
+    body = gossip.make_gossip_round_body(quad_loss, sample_all(k),
+                                         dcfg, tcfg)
+    state = gossip.init_state(tiny_params(), dcfg)
+    assert jax.tree.leaves(state.replica_params)[0].dtype == \
+        jnp.bfloat16
+    assert state.inner_state.master is not None
+    state, m = body(state, jax.random.PRNGKey(0))
+    assert jax.tree.leaves(state.global_est)[0].dtype == jnp.float32
+    assert np.isfinite(float(m["inner_loss"]))
+
+
+# ---------------------------------------------------------------------------
+# validation + routing
+# ---------------------------------------------------------------------------
+
+def test_gossip_validation_errors():
+    dcfg, tcfg = make_cfgs(4)
+    gossip.validate(dcfg)   # baseline OK
+    for bad in (dict(k=3), dict(gossip_pairing="ring"),
+                dict(gossip_mix=1.5), dict(outer_grad_dtype="int4"),
+                dict(error_feedback=True), dict(prune_frac=0.5)):
+        with pytest.raises(ValueError):
+            gossip.validate(dataclasses.replace(dcfg, **bad))
+    # random pairing lifts the power-of-2 requirement
+    gossip.validate(dataclasses.replace(dcfg, k=3,
+                                        gossip_pairing="random"))
+    with pytest.raises(ValueError, match="mesh"):
+        gossip.make_gossip_round_body(quad_loss, sample_all(4), dcfg,
+                                      tcfg, mesh=object())
+
+
+def test_round_builder_routes_gossip_without_fragments():
+    # gossip must route BEFORE the streaming check: it reuses
+    # streaming_fragments as P but needs no StreamState
+    k = 2
+    dcfg, tcfg = make_cfgs(k, P=0)
+    rnd = diloco.make_round(quad_loss, sample_all(k), dcfg, tcfg)
+    state = gossip.init_state(tiny_params(), dcfg)
+    state, m = rnd(state, jax.random.PRNGKey(0))
+    assert "gossip_spread" in m
+
+
+def test_frag_bytes_accounting():
+    params = tiny_params()      # 11 elements
+    dcfg, _ = make_cfgs(2, P=2, outer_grad_dtype="bfloat16")
+    sizes = gossip.frag_bytes(params, dcfg)
+    assert len(sizes) == 2
+    assert sum(sizes) == kops.transport_bytes(11, "bfloat16")
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trip (satellite b: the gossip slice)
+# ---------------------------------------------------------------------------
+
+def test_gossip_state_checkpoint_roundtrip(tmp_path):
+    k = 2
+    dcfg, tcfg = make_cfgs(k)
+    body = gossip.make_gossip_round_body(quad_loss, sample_all(k),
+                                         dcfg, tcfg)
+    state = gossip.init_state(tiny_params(), dcfg)
+    state, _ = body(state, jax.random.PRNGKey(0))
+    path = str(tmp_path / "gossip.npz")
+    ckpt.save(path, state)
+    back = ckpt.restore(path, state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # structure-free view re-shapes onto the NamedTuple as well
+    again = ckpt.reshape_like(ckpt.restore_tree(path), state)
+    assert isinstance(again, gossip.GossipState)
+    np.testing.assert_array_equal(np.asarray(again.outer_t),
+                                  np.asarray(state.outer_t))
