@@ -1,0 +1,296 @@
+"""Observability gates: the run telemetry subsystem must be free and
+must be honest.
+
+Three families of claims, written to ``BENCH_obs.json``:
+
+  free     the recorder is pure plumbing. A recorded run's final
+           global params are BITWISE identical to a bare reference
+           driver (the pre-telemetry scanned loop replicated inline:
+           same seeding, same masks, same chunking) — claims
+           ``recorder_off_bit_identical``. And the recorder adds no
+           device syncs: the scanned driver still materializes
+           metrics ONCE per chunk (``recorder_single_ingest_per_
+           chunk`` counts ``RunRecorder.ingest_chunk`` calls).
+
+  honest   the Chrome traces drawn from the tick-domain world are
+           structurally sound on every transport (``trace_valid_*``
+           via ``obs.trace.validate_trace``), every engine-applied
+           delta on a faulty async run corresponds to EXACTLY one
+           delivered transfer span and every lost send to exactly one
+           undelivered span (``span_application_exactly_once_k4_
+           faulty``), and the byte annotations are the real wire: on
+           the sharded int4 transport, trace bytes == the static
+           ``sync_plan`` model == the HLO-measured cross-pod
+           all-gather bytes of the lowered program, at ratio 1.000
+           (``trace_wire_matches_hlo_ratio_1``).
+
+  durable  every transport's history JSON-serializes and round-trips
+           (``history_json_all_transports`` — numpy scalars must not
+           crash ``json.dump``).
+
+Run:  PYTHONPATH=src python -m benchmarks.obs [--trace-dir DIR]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+# standalone runs get 8 fake CPU devices so the sharded-transport rows
+# exercise REAL pod-axis collectives (same convention as
+# benchmarks/streaming.py)
+if "jax" not in sys.modules and \
+        "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8 "
+        + os.environ.get("XLA_FLAGS", ""))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common as C
+from repro.checkpoint import checkpoint as ckpt
+from repro.core import diloco, pod_collectives, schedules, streaming
+from repro.data.sharding import shard_weights
+from repro.launch import hlo_analysis as H_hlo
+from repro.launch import train
+from repro.launch.mesh import make_pod_mesh
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
+ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+OUT_PATH = os.path.join(ROOT, "BENCH_obs.json")
+
+FAULT_FLAGS = ["--speeds", "1,2,1,3", "--link-latency", "1,1,2,1",
+               "--max-retries", "1", "--preempt", "2:4:8"]
+
+
+def make_args(*extra):
+    base = ["--arch", "diloco_60m", "--k", "4", "--H", "4",
+            "--rounds", "3", "--batch", "2", "--seq", "32",
+            "--eval-batch", "8"]
+    return train.make_parser().parse_args(base + list(extra))
+
+
+def silent(transport):
+    return obs_metrics.RunRecorder(transport=transport,
+                                   printer=lambda *_a, **_k: None)
+
+
+def reference_final_params(args):
+    """The pre-telemetry scanned driver, replicated inline with no
+    recorder anywhere near it: identical seeding, masks, chunking and
+    ``make_run`` products as ``train.run``. The bitwise comparison of
+    its final global params against a recorded run is the
+    recorder-off gate."""
+    arch, cfg, dcfg, tcfg, sampler = train.build(args)
+    loss_fn = lambda p, b: arch.loss(p, b)
+    key = jax.random.PRNGKey(args.seed)
+    key, init_key = jax.random.split(key)
+    params, _ = arch.init(init_key, cfg)
+    val = sampler.sample_validation(jax.random.PRNGKey(10_000),
+                                    args.eval_batch, args.seq)
+    state = diloco.init_state(params, dcfg)
+    rng = np.random.default_rng(args.seed)
+    drops = schedules.drop_masks(rng, args.drop_prob, args.k,
+                                 args.rounds)
+    sched = schedules.compute_schedule(args.compute_schedule, args.k,
+                                       args.rounds)
+    acts = schedules.active_masks(sched, args.k)
+    weights = jnp.asarray(shard_weights(sampler, args.weighted))
+    rpc = max(1, min(args.rounds_per_call or args.rounds, args.rounds))
+    runs, t = {}, 0
+    while t < args.rounds:
+        n = min(rpc, args.rounds - t)
+        if n not in runs:
+            runs[n] = diloco.make_run(
+                loss_fn, sampler.sample_all_shards, dcfg, tcfg,
+                rounds_per_call=n, total_steps=tcfg.total_steps,
+                compute_cosine=args.cosine_stats,
+                batch_size=args.batch, seq_len=args.seq,
+                eval_tokens=val, eval_every=args.eval_every, mesh=None)
+        state, ms = runs[n](state, key, jnp.asarray(drops[t:t + n]),
+                            jnp.asarray(acts[t:t + n]), weights,
+                            round_offset=t)
+        key = ms.pop("next_key")
+        t += n
+    return state.global_params
+
+
+def sharded_hlo_cross_bytes(args):
+    """HLO-measured cross-pod all-gather bytes of ONE round of the
+    sharded program ``train.run`` executes — a dedicated
+    rounds_per_call=1 lowering so the per-round bytes are exact (same
+    convention and reasoning as benchmarks/streaming.py)."""
+    arch, cfg, dcfg, tcfg, sampler = train.build(args)
+    loss_fn = lambda p, b: arch.loss(p, b)
+    params, _ = arch.init(jax.random.PRNGKey(1), cfg)
+    mesh = make_pod_mesh(dcfg.k)
+    cpp = len(jax.devices()) // pod_collectives.pods_of(mesh)
+    run1 = diloco.make_run(loss_fn, sampler.sample_all_shards, dcfg,
+                           tcfg, rounds_per_call=1,
+                           total_steps=tcfg.total_steps,
+                           batch_size=args.batch, seq_len=args.seq,
+                           donate=False, mesh=mesh)
+    st = pod_collectives.shard_stream_state(
+        streaming.init_state(params, dcfg), mesh)
+    hlo = run1.lower(st, jax.random.PRNGKey(2)).compile().as_text()
+    profile = H_hlo.wire_profile(hlo, chips_per_pod=cpp,
+                                 interleaving=False)
+    return (profile["collectives"]["cross_by_op"].get("all-gather", 0),
+            profile)
+
+
+def run_transport(name, extra, trace_dir):
+    """One recorded tiny run of a transport: returns (recorder,
+    trace dict, trace path, history json round-trip ok)."""
+    tpath = os.path.join(trace_dir, f"trace_{name}.json")
+    transport = "simulated"
+    if "--transport" in extra:
+        transport = extra[extra.index("--transport") + 1]
+    args = make_args("--trace", tpath, *extra)
+    rec = silent(transport)
+    train.run(args, recorder=rec)
+    with open(tpath) as f:
+        trace = json.load(f)
+    payload = rec.payload(args=vars(args))
+    try:
+        ok = json.loads(json.dumps(payload))["history"] is not None
+    except (TypeError, ValueError):
+        ok = False
+    return rec, trace, tpath, ok
+
+
+def run(repeats=1, *, out=OUT_PATH, trace_dir=None):
+    t_start = time.time()
+    trace_dir = trace_dir or tempfile.mkdtemp(prefix="obs_traces_")
+    os.makedirs(trace_dir, exist_ok=True)
+    report = {"bench": "obs", "devices": len(jax.devices()),
+              "trace_dir": trace_dir}
+
+    # ---- free: recorder-off bitwise identity ----------------------
+    ck = os.path.join(trace_dir, "obs_gate.ckpt")
+    recorded_args = make_args("--checkpoint", ck)
+    train.run(recorded_args, recorder=silent("simulated"))
+    recorded = ckpt.restore_tree(ck)["params"]
+    reference = reference_final_params(make_args())
+    bit_identical = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(recorded),
+                        jax.tree.leaves(reference)))
+    print(f"recorder-off bitwise identity: {bit_identical}")
+
+    # ---- free: one metrics materialization per chunk --------------
+    rec6 = silent("simulated")
+    train.run(make_args("--rounds", "6", "--rounds-per-call", "3"),
+              recorder=rec6)
+    single_ingest = (rec6.ingest_calls == 2
+                     and len(rec6.round_records()) == 6)
+    print(f"ingest calls for 6 rounds @ rpc=3: {rec6.ingest_calls} "
+          f"({len(rec6.round_records())} round records)")
+
+    # ---- honest + durable: every transport ------------------------
+    transports = {
+        "sync": FAULT_FLAGS,
+        "streaming": ["--stream-fragments", "2", "--stream-tau", "1"],
+        "sharded": ["--transport", "sharded", "--stream-fragments",
+                    "2", "--outer-grad-dtype", "int4"],
+        "async": ["--transport", "async", "--ticks", "12",
+                  *FAULT_FLAGS],
+        "gossip": ["--transport", "gossip", "--stream-fragments", "2",
+                   "--gossip-pairing", "random", *FAULT_FLAGS],
+    }
+    trace_valid, json_ok, rows = {}, {}, {}
+    for name, extra in transports.items():
+        rec, trace, tpath, ok = run_transport(name, extra, trace_dir)
+        errs = obs_trace.validate_trace(trace)
+        trace_valid[name] = not errs
+        json_ok[name] = ok
+        rows[name] = {"trace": tpath,
+                      "trace_events": len(trace["traceEvents"]),
+                      "transfer_spans":
+                          len(obs_trace.transfer_spans(trace)),
+                      "trace_wire_bytes":
+                          obs_trace.trace_wire_bytes(trace),
+                      "records": len(rec.records),
+                      "validate_errors": errs[:5],
+                      "json_roundtrip": ok}
+        rows[name]["recorder"] = {"wire_bytes_total":
+                                  rec.wire_bytes_total,
+                                  "ingest_calls": rec.ingest_calls}
+        if name == "async":
+            events = rec.event_records()
+            c_errs = obs_trace.span_event_correspondence(trace, events)
+            rows[name]["correspondence_errors"] = c_errs[:5]
+            rows[name]["applied_deltas"] = sum(
+                1 for r in events if r["event"] == "arrival")
+            exactly_once = not c_errs and rows[name]["applied_deltas"] > 0
+        if name == "sharded":
+            plan_row_bytes = sum(
+                r["wire_bytes"] for r in rec.manifest["wire_plan"])
+            meas, profile = sharded_hlo_cross_bytes(make_args(*extra))
+            model = recorded_args.k * plan_row_bytes
+            hlo_ratio = meas / model if model else 0.0
+            tw = rows[name]["trace_wire_bytes"]
+            trace_ratio = (tw / (recorded_args.rounds * plan_row_bytes)
+                           if plan_row_bytes else 0.0)
+            rows[name]["wire_check"] = {
+                "plan_bytes_per_replica_round": plan_row_bytes,
+                "hlo_cross_gather_bytes_per_round": meas,
+                "model_bytes_per_round": model,
+                "hlo_over_model": hlo_ratio,
+                "trace_over_plan": trace_ratio,
+                "hlo_profile": profile}
+        print(f"{name}: trace_valid={trace_valid[name]} "
+              f"json={json_ok[name]} "
+              f"spans={rows[name]['transfer_spans']}")
+
+    wc = rows["sharded"]["wire_check"]
+    wire_ratio_1 = (abs(wc["hlo_over_model"] - 1.0) < 1e-9
+                    and abs(wc["trace_over_plan"] - 1.0) < 1e-9)
+    print(f"sharded wire: HLO/model={wc['hlo_over_model']:.3f} "
+          f"trace/plan={wc['trace_over_plan']:.3f}")
+
+    report["transports"] = rows
+    report["claims"] = {
+        "recorder_off_bit_identical": bool(bit_identical),
+        "recorder_single_ingest_per_chunk": bool(single_ingest),
+        "span_application_exactly_once_k4_faulty": bool(exactly_once),
+        "trace_wire_matches_hlo_ratio_1": bool(wire_ratio_1),
+        "history_json_all_transports": bool(all(json_ok.values())),
+    }
+    for name in transports:
+        report["claims"][f"trace_valid_{name}"] = bool(
+            trace_valid[name])
+    report["total_s"] = round(time.time() - t_start, 1)
+
+    with open(out, "w") as f:
+        json.dump(obs_metrics.to_jsonable(report), f, indent=1)
+    print("wrote", out)
+    C.save("obs", report)
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=OUT_PATH)
+    ap.add_argument("--trace-dir", default="",
+                    help="keep the per-transport trace JSONs here "
+                         "(default: a temp dir)")
+    a = ap.parse_args(argv)
+    report = run(out=a.out, trace_dir=a.trace_dir or None)
+    bad = [k for k, v in report["claims"].items() if not v]
+    if bad:
+        print("FAILED claims:", ", ".join(bad))
+        return 1
+    print("all claims hold:", ", ".join(sorted(report["claims"])))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

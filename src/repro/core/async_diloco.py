@@ -327,12 +327,17 @@ class AsyncEngine:
                            if v in live}
 
     def run(self, state: AsyncState, *, ticks: int,
-            max_events: int | None = None):
+            max_events: int | None = None, recorder=None):
         """Process the scenario timeline for ``ticks`` wall-clock ticks
         from ``state.events_done`` (so a restored state resumes exactly
         where it left off), optionally stopping after ``max_events``
         more events (mid-run checkpoint cut point). Returns
         (state, history) — one record per event, ``"event"`` keyed.
+
+        ``recorder`` (an ``obs.metrics.RunRecorder``) receives each
+        event record as it happens via ``async_event`` — purely
+        host-side enrichment/printing; the computation is identical
+        with or without it.
         """
         cfg = self.cfg
         self._bind(state)
@@ -341,17 +346,23 @@ class AsyncEngine:
         if max_events is not None:
             todo = todo[:max_events]
         history = []
+
+        def emit(rec):
+            history.append(rec)
+            if recorder is not None:
+                recorder.async_event(rec)
+
         for ev in todo:
             if isinstance(ev, faults.Arrival):
-                history.append(self._on_arrival(state, ev))
+                emit(self._on_arrival(state, ev))
             elif isinstance(ev, faults.Lost):
-                history.append(self._on_lost(state, ev))
+                emit(self._on_lost(state, ev))
             elif isinstance(ev, faults.Leave):
                 w = state.workers[ev.worker]
                 w.active = False
                 self._prune(state)
-                history.append({"event": "leave", "tick": ev.tick,
-                                "worker": ev.worker})
+                emit({"event": "leave", "tick": ev.tick,
+                      "worker": ev.worker})
             elif isinstance(ev, faults.Join):
                 w = state.workers[ev.worker]
                 # moments died with the preemption: fresh opt, fresh
@@ -360,9 +371,9 @@ class AsyncEngine:
                 w.residual = jnp.zeros((self._n_elems,), jnp.float32)
                 w.version = state.version
                 w.active = True
-                history.append({"event": "join", "tick": ev.tick,
-                                "worker": ev.worker,
-                                "version": state.version})
+                emit({"event": "join", "tick": ev.tick,
+                      "worker": ev.worker,
+                      "version": state.version})
             state.events_done += 1
         return state, history
 

@@ -497,3 +497,17 @@ def make_single_worker_step(loss_fn, tcfg: TrainConfig,
     if donate:
         return jax.jit(step, donate_argnums=(0, 1))
     return jax.jit(step)
+
+
+def outer_wire_bytes(params, dcfg: DiLoCoConfig) -> float:
+    """Bytes ONE replica ships for the CLASSIC synchronous outer step:
+    the full outer gradient at the transport dtype (the config
+    validation in launch/train.py pins that to float32 off the
+    streaming path — quantized wire lives on the fragment transports,
+    which account per fragment via ``streaming.sync_plan`` /
+    ``gossip.frag_bytes``). The telemetry layer stamps this on each
+    round's transfer span so every transport's trace carries byte
+    annotations from the same ``kops.transport_bytes`` accounting."""
+    from repro.kernels import ops as kops
+    n = sum(int(leaf.size) for leaf in jax.tree.leaves(params))
+    return float(kops.transport_bytes(n, dcfg.outer_grad_dtype))

@@ -68,10 +68,13 @@ class Join(NamedTuple):
 class Lost(NamedTuple):
     """A phase whose send exhausted every retry: the delta is gone for
     good (Fig 8 drop semantics — the worker keeps its own params and
-    moves on). Recorded so accounting can prove no silent loss."""
+    moves on). Recorded so accounting can prove no silent loss, and so
+    a trace can draw the doomed phase's compute + retry window."""
     tick: int          # when the last retry failed
     worker: int
     uid: int
+    dispatch_tick: int = -1  # when the phase's params were dispatched
+    finish_tick: int = -1    # when its compute finished (first send)
 
 
 @dataclass(frozen=True)
@@ -331,7 +334,7 @@ class Scenario:
                 uid += 1
                 if gave_up > ticks:
                     break              # still retrying at the horizon
-                events.append(Lost(gave_up, i, uid - 1))
+                events.append(Lost(gave_up, i, uid - 1, t, finish))
                 t = gave_up            # continue from own params
         order = {Join: 0, Arrival: 1, Lost: 2, Leave: 3}
         events.sort(key=lambda e: (e.tick, order[type(e)], e.worker))

@@ -138,6 +138,12 @@ def init_state(params, dcfg: DiLoCoConfig) -> GossipState:
 # pairing + mixing (the pure exchange step — proven exact in tests)
 # ---------------------------------------------------------------------------
 
+# fold_in tag deriving the round's pairing key from its round key —
+# shared by the in-graph round body and the host-side telemetry view,
+# so pairing_edges() reconstructs the EXACT edges the exchange used
+PAIR_FOLD = 0x90551b
+
+
 def partner_map(k: int, t, pairing: str, key=None):
     """(k,) int32 partner indices for round ``t``. An involution:
     partner[partner[i]] == i, with partner[i] == i meaning "sit out"
@@ -158,6 +164,26 @@ def partner_map(k: int, t, pairing: str, key=None):
         partner = partner.at[perm[1:2 * m:2]].set(perm[0:2 * m:2])
         return partner
     raise ValueError(pairing)
+
+
+def pairing_edges(k: int, t: int, pairing: str,
+                  round_key=None) -> tuple:
+    """Host-side telemetry view of round ``t``'s exchange graph:
+    sorted (i, j) pairs with i < j (self-paired workers sit out, so
+    an odd random matching's leftover never appears). ``round_key``
+    is the SAME per-round key the round body receives (the split-chain
+    sub-key); the pairing key is derived from it with ``PAIR_FOLD``
+    exactly as the in-graph exchange does, so the edges recorded are
+    the edges realized — required for random pairing, ignored for
+    butterfly (which is a pure function of t)."""
+    key = None
+    if pairing == "random":
+        if round_key is None:
+            raise ValueError("random pairing edges need the round key")
+        key = jax.random.fold_in(round_key, PAIR_FOLD)
+    pm = np.asarray(partner_map(k, t, pairing, key=key))
+    return tuple(sorted({(min(i, int(pm[i])), max(i, int(pm[i])))
+                         for i in range(k) if int(pm[i]) != i}))
 
 
 def mix_round(est, partner, mask_tree, *, mix: float, ok=None,
@@ -320,7 +346,7 @@ def make_gossip_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
                       state.outer_state.count))
 
         # the exchange: partner's fresh estimate, scheduled fragment
-        pair_key = jax.random.fold_in(key, 0x90551b)
+        pair_key = jax.random.fold_in(key, PAIR_FOLD)
         partner = partner_map(k, state.outer_t, dcfg.gossip_pairing,
                               key=pair_key)
         comm = drop_mask * active_mask

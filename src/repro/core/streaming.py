@@ -526,3 +526,41 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
         return fn(sstate, key, drop_mask, active_mask, weights)
 
     return round_body
+
+
+def sync_plan(params, dcfg: DiLoCoConfig) -> tuple:
+    """Static per-fragment outer-sync plan for one streaming round —
+    the tick-domain schedule telemetry draws (``obs/trace.py``) and
+    the run manifest ships. One dict per fragment: send/apply
+    inner-step offsets (``fragments.schedule``), element count,
+    contiguous region count, and the per-replica wire bytes one sync
+    event ships — the SAME per-region charge the round metrics
+    ``stream_peak_sync_bytes`` / ``stream_round_sync_bytes`` use
+    (byte-exact packed accounting on the packed sharded transport,
+    the legacy static model elsewhere), so trace annotations, round
+    metrics, and the HLO-measured gather bytes all reconcile."""
+    from repro.kernels import ops as kops
+    P = max(1, int(dcfg.streaming_fragments))
+    part = fragments.partition_params(params, P,
+                                      overrides=dcfg.stream_overrides)
+    sched = fragments.schedule(P, dcfg.H, dcfg.stream_tau)
+    packed = (getattr(dcfg, "transport", "simulated") == "sharded"
+              and getattr(dcfg, "pack_wire", True)
+              and dcfg.outer_grad_dtype in ("bfloat16", "int4"))
+    plan = []
+    for p in range(P):
+        regs = part.region_sizes[p]
+        plan.append({
+            "fragment": p,
+            "send_step": int(sched.send_offsets[p]),
+            "apply_step": int(sched.apply_offsets[p]),
+            "elems": int(part.sizes[p]),
+            "regions": len(regs),
+            "wire_dtype": dcfg.outer_grad_dtype,
+            "packed": packed,
+            "wire_bytes": float(sum(
+                kops.transport_bytes(int(e), dcfg.outer_grad_dtype,
+                                     packed=packed) for e in regs)),
+            "crosses_round": int(sched.apply_offsets[p]) > int(dcfg.H),
+        })
+    return tuple(plan)

@@ -628,6 +628,34 @@ def dryrun_pair(arch_name: str, shape_name: str, *, multi_pod: bool,
 
 
 # ---------------------------------------------------------------------------
+# run manifest
+# ---------------------------------------------------------------------------
+
+def manifest_of(records, *, config=None) -> dict:
+    """Fold dry-run records into a ``RunRecorder`` manifest: the static
+    HLO wire profile of each lowered fn (collective bytes by op,
+    cross-pod bytes, stream-interleaving stats) under the same
+    ``hlo_profile`` key a live run's trace annotations are
+    cross-checked against (see ``obs.metrics`` / benchmarks/obs.py)."""
+    from repro.obs import metrics as obs_metrics
+    rec = obs_metrics.RunRecorder(transport="dryrun",
+                                  printer=lambda *_a, **_k: None)
+    if config is not None:
+        rec.manifest["config"] = dict(config)
+    for r in records:
+        if "error" in r:
+            continue
+        prof = {"arch": r.get("arch"), "shape": r.get("shape"),
+                "mesh": r.get("mesh"), "chips": r.get("chips"),
+                "collectives": r.get("collectives")}
+        if "stream_interleaving" in r:
+            prof["interleaving"] = r["stream_interleaving"]
+        key = f"{r.get('arch')}/{r.get('shape')}/{r.get('fn', '?')}"
+        rec.attach_hlo_profile(prof, fn=key)
+    return rec.manifest
+
+
+# ---------------------------------------------------------------------------
 # CLI
 # ---------------------------------------------------------------------------
 
@@ -654,6 +682,10 @@ def main():
                          "wire (coalesced codes+scales all-gathers), "
                          "so the analyzed cross-pod bytes are real")
     ap.add_argument("--out", default="")
+    ap.add_argument("--manifest", default="",
+                    help="write the static HLO wire profile (collective "
+                         "bytes by op, cross-pod bytes, interleaving "
+                         "stats per lowered fn) as a run manifest JSON")
     args = ap.parse_args()
 
     archs = ARCH_NAMES if args.arch == "all" else [args.arch]
@@ -690,6 +722,12 @@ def main():
         with open(args.out, "w") as f:
             json.dump(out, f, indent=1)
         print("wrote", args.out)
+    if args.manifest:
+        from repro.obs.metrics import to_jsonable
+        with open(args.manifest, "w") as f:
+            json.dump(to_jsonable(manifest_of(out, config=vars(args))),
+                      f, indent=1)
+        print("wrote", args.manifest)
 
 
 if __name__ == "__main__":

@@ -460,3 +460,28 @@ def cost_items(compiled) -> tuple[float, float]:
     flops = float(ca.get("flops", 0.0))
     nbytes = float(ca.get("bytes accessed", 0.0))
     return flops, nbytes
+
+
+def wire_profile(hlo_text: str, *, chips_per_pod: int | None = None,
+                 interleaving: bool = True) -> dict:
+    """Manifest-ready wire profile of one lowered program: the
+    collective byte totals (by op, pod-crossing split) plus the
+    schedule-structure interleaving stats — the static HLO record a
+    run manifest ships alongside its trace
+    (``obs.metrics.RunRecorder.attach_hlo_profile``), so the trace's
+    byte annotations can be audited against what the compiled program
+    REALLY gathers. ``interleaving`` False skips the schedule walk
+    (meaningless for programs with no pod-crossing collective)."""
+    prof = {"chips_per_pod": chips_per_pod,
+            "collectives": collective_stats(
+                hlo_text, chips_per_pod=chips_per_pod).as_dict()}
+    if interleaving:
+        inter = stream_interleaving(hlo_text,
+                                    chips_per_pod=chips_per_pod)
+        prof["interleaving"] = {kk: inter[kk] for kk in
+                                ("computation", "pod_collectives",
+                                 "pod_all_reduces", "sync_by_op",
+                                 "compute_events",
+                                 "syncs_with_compute_after",
+                                 "syncs_inside_compute")}
+    return prof

@@ -30,6 +30,8 @@ from repro.configs.base import DiLoCoConfig, TrainConfig
 from repro.core import diloco, faults, schedules
 from repro.data.sharding import make_regime, shard_weights
 from repro.models.registry import get_arch, get_smoke_arch
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 def _int_list(spec: str, k: int, name: str) -> tuple:
@@ -165,13 +167,14 @@ def build(args):
 
 
 def _run_async_phase(args, dcfg, tcfg, loss_fn, sampler, params,
-                     ev, val, history):
+                     ev, val, rec):
     """Barrier-free driver: the event loop replaces the round loop.
 
     One tick = the fastest worker's phase; ``--ticks 0`` matches the
     wall-clock budget a barrier-paced run of --rounds rounds would pay
     under the same scenario, so async-vs-sync numbers compare at equal
-    simulated time."""
+    simulated time. ``rec`` (the run's ``RunRecorder``) receives every
+    engine event as it happens and owns the console output."""
     from repro.core import async_diloco
     scenario = scenario_of(args) or faults.Scenario.uniform(args.k)
     samplers = tuple(
@@ -184,37 +187,32 @@ def _run_async_phase(args, dcfg, tcfg, loss_fn, sampler, params,
     if args.restore:
         state = async_diloco.state_from_tree(
             ckpt.restore_tree(args.restore), params)
-        print(f"restored async state: version={state.version} "
-              f"events_done={state.events_done}", flush=True)
+        rec.note(f"restored async state: version={state.version} "
+                 f"events_done={state.events_done}")
     else:
         state = eng.init_state(params)
     ticks = args.ticks or scenario.sync_round_ticks(args.k) * args.rounds
     eng._bind(state)
-    print(f"async transport: lambda={dcfg.staleness_lambda} k={args.k} "
-          f"{ticks} tick(s), {eng.wire_bytes()} B/apply", flush=True)
+    rec.attach_wire_plan([{"fragment": 0, "wire_bytes":
+                           float(eng.wire_bytes()),
+                           "wire_dtype": dcfg.outer_grad_dtype}])
+    rec.note(f"async transport: lambda={dcfg.staleness_lambda} "
+             f"k={args.k} {ticks} tick(s), {eng.wire_bytes()} B/apply")
     t0 = time.time()
-    state, hist = eng.run(state, ticks=ticks)
-    for r in hist:
-        rec = dict(r, phase="diloco_async")
-        history.append(rec)
-        if r["event"] == "arrival":
-            vs = (f"val={r['val_loss']:.4f} ppl={r['ppl']:.2f}"
-                  if "val_loss" in r else "")
-            print(f"[tick {r['tick']}] worker {r['worker']} "
-                  f"stale={r['staleness']} w={r['weight']:.3f} "
-                  f"inner={r['inner_loss']:.4f} {vs}", flush=True)
-        else:
-            print(f"[tick {r['tick']}] {r['event']} "
-                  f"worker {r['worker']}", flush=True)
+    state, hist = eng.run(state, ticks=ticks, recorder=rec)
     n_arr = sum(1 for r in hist if r["event"] == "arrival")
-    print(f"done in {time.time() - t0:.1f}s; {n_arr} applications over "
-          f"{ticks} ticks; entropy floor = "
-          f"{sampler.entropy_floor():.4f}", flush=True)
+    rec.note(f"done in {time.time() - t0:.1f}s; {n_arr} applications "
+             f"over {ticks} ticks; entropy floor = "
+             f"{sampler.entropy_floor():.4f}")
+    if args.trace:
+        tb = obs_trace.async_trace(scenario, args.k, ticks,
+                                   history=hist,
+                                   wire_bytes=eng.wire_bytes())
+        tb.write(args.trace, other_data={"manifest": rec.manifest})
+        rec.note(f"trace: {args.trace}")
     if args.out:
-        with open(args.out, "w") as f:
-            json.dump({"args": vars(args), "history": history}, f,
-                      indent=1)
-        print("wrote", args.out)
+        rec.dump(args.out, args=vars(args))
+        rec.note(f"wrote {args.out}")
     if args.checkpoint:
         # FULL engine state (workers, snapshots, outer, cursor): a
         # later --restore resumes the identical event suffix
@@ -222,11 +220,15 @@ def _run_async_phase(args, dcfg, tcfg, loss_fn, sampler, params,
                   metadata={"transport": "async", "k": args.k,
                             "H": args.H, "ticks": ticks,
                             "events_done": state.events_done})
-        print("checkpoint:", args.checkpoint)
-    return history
+        rec.note(f"checkpoint: {args.checkpoint}")
+    return rec.records
 
 
-def run(args):
+def run(args, recorder=None):
+    """Drive the configured run end-to-end. ``recorder`` overrides the
+    run's ``RunRecorder`` (benchmarks pass a silenced one and inspect
+    its counters); by default one is built from ``--log-format``.
+    Returns the unified record history (``recorder.records``)."""
     arch, cfg, dcfg, tcfg, sampler = build(args)
     loss_fn = lambda p, b: arch.loss(p, b)
     key = jax.random.PRNGKey(args.seed)
@@ -235,7 +237,9 @@ def run(args):
     ev = diloco.make_eval(loss_fn)
     val = sampler.sample_validation(jax.random.PRNGKey(10_000),
                                     args.eval_batch, args.seq)
-    history = []
+    rec = recorder if recorder is not None else obs_metrics.RunRecorder(
+        transport=args.transport, log_format=args.log_format)
+    rec.manifest.setdefault("config", dict(vars(args)))
 
     # ---- pretraining phase (paper: 24k steps before DiLoCo) ----
     if args.pretrain_steps:
@@ -254,10 +258,8 @@ def run(args):
             work, opt, m = step(work, opt, batch, jnp.asarray(i))
             if (i + 1) % args.log_every == 0:
                 vl = float(ev(work, val))
-                history.append({"phase": "pretrain", "inner_steps": i + 1,
-                                "val_loss": vl})
-                print(f"[pretrain {i + 1}] loss={float(m['loss']):.4f} "
-                      f"val={vl:.4f}", flush=True)
+                rec.pretrain(step=i + 1, loss=float(m["loss"]),
+                             val_loss=vl)
         # hand the master-precision params to the DiLoCo phase (the
         # working copy is a rounded view under a mixed policy); the
         # upcast keeps the DiLoCo globals/outer state f32 even under
@@ -268,19 +270,28 @@ def run(args):
     # ---- DiLoCo phase ----
     if dcfg.transport == "async":
         return _run_async_phase(args, dcfg, tcfg, loss_fn, sampler,
-                                params, ev, val, history)
+                                params, ev, val, rec)
     mesh = None
+    frag_wire = None           # gossip: per-fragment exchange bytes
+    round_wire = None          # classic/streaming: bytes/replica/round
+    plan = ()
     if dcfg.transport == "gossip":
         from repro.core import gossip
         state = gossip.init_state(params, dcfg)
-        print(f"gossip transport: {dcfg.gossip_pairing} pairing, "
-              f"mix={dcfg.gossip_mix}, "
-              f"P={max(1, dcfg.streaming_fragments)} fragment(s), "
-              f"{max(gossip.frag_bytes(params, dcfg))} B/exchange",
-              flush=True)
+        frag_wire = gossip.frag_bytes(params, dcfg)
+        rec.attach_wire_plan([{"fragment": i, "wire_bytes": float(b),
+                               "wire_dtype": dcfg.outer_grad_dtype}
+                              for i, b in enumerate(frag_wire)])
+        rec.note(f"gossip transport: {dcfg.gossip_pairing} pairing, "
+                 f"mix={dcfg.gossip_mix}, "
+                 f"P={max(1, dcfg.streaming_fragments)} fragment(s), "
+                 f"{max(frag_wire)} B/exchange")
     elif dcfg.streaming_fragments:
         from repro.core import streaming
         state = streaming.init_state(params, dcfg)
+        plan = streaming.sync_plan(params, dcfg)
+        round_wire = sum(row["wire_bytes"] for row in plan)
+        rec.attach_wire_plan(plan)
         if dcfg.transport == "sharded":
             from repro.core import pod_collectives
             from repro.launch.mesh import make_pod_mesh
@@ -302,11 +313,17 @@ def run(args):
                     "count=N (a multiple of k) before jax starts")
             mesh = make_pod_mesh(pods)
             state = pod_collectives.shard_stream_state(state, mesh)
-            print(f"sharded transport: {pod_collectives.pods_of(mesh)} "
-                  f"pods × {args.k // pod_collectives.pods_of(mesh)} "
-                  "replicas/pod", flush=True)
+            rec.note(f"sharded transport: "
+                     f"{pod_collectives.pods_of(mesh)} "
+                     f"pods × {args.k // pod_collectives.pods_of(mesh)} "
+                     "replicas/pod")
     else:
         state = diloco.init_state(params, dcfg)
+        round_wire = diloco.outer_wire_bytes(params, dcfg)
+        rec.attach_wire_plan([{"fragment": 0, "send_step": args.H,
+                               "apply_step": args.H,
+                               "wire_bytes": float(round_wire),
+                               "wire_dtype": dcfg.outer_grad_dtype}])
     rng = np.random.default_rng(args.seed)
     drops = schedules.drop_masks(rng, args.drop_prob, args.k, args.rounds)
     sched = schedules.compute_schedule(args.compute_schedule, args.k,
@@ -320,38 +337,55 @@ def run(args):
         # schedule's active masks
         drops, s_acts = scen.round_masks(args.k, args.rounds)
         acts = np.asarray(acts) * s_acts
-        print(f"faults: barrier round = {scen.sync_round_ticks(args.k)} "
-              "tick(s) (slowest worker + slowest link)", flush=True)
+        rec.note(f"faults: barrier round = "
+                 f"{scen.sync_round_ticks(args.k)} "
+                 "tick(s) (slowest worker + slowest link)")
     weights = jnp.asarray(shard_weights(sampler, args.weighted))
+    gossip_rounds = []
 
-    def emit_round(t, m, i=None, evaled=True):
-        """Append the round-t record from metrics dict ``m`` (scalar
+    def emit_round(t, m, i=None, evaled=True, round_key=None):
+        """Emit the round-t record from metrics dict ``m`` (scalar
         entries for the legacy loop, (R,) stacked entries at index
-        ``i`` for the scanned driver) and print the progress line.
-        ``evaled`` False marks a round skipped by the eval cadence —
-        a NaN on an *evaled* round is a genuine divergence and is
-        reported as such."""
+        ``i`` for the scanned driver) through the recorder. ``evaled``
+        False marks a round skipped by the eval cadence — a NaN on an
+        *evaled* round is a genuine divergence and is reported as
+        such. ``round_key`` (the round's split-chain sub-key) lets the
+        gossip transport record the realized pairing edges."""
         pick = (lambda x: float(x)) if i is None else \
             (lambda x: float(x[i]))
-        vl = pick(m["val_loss"])
-        skipped = not evaled
-        rec = {"phase": "diloco", "round": t + 1,
-               "inner_steps": args.pretrain_steps + (t + 1) * args.H,
-               "inner_loss": pick(m["inner_loss"]),
-               "val_loss": None if skipped else vl,
-               "outer_gnorm": pick(m["outer_gnorm"]),
-               # count from the final mask row, not the schedule: a
-               # scenario preemption zeroes workers the schedule keeps
-               "active": int(np.asarray(acts[t]).sum())}
+        # optional transport metrics recorded under their own names —
+        # the unified schema keeps them flat, one key space for all
+        extras = {kk: pick(m[kk]) for kk in
+                  ("inner_loss_last", "drop_frac", "gossip_spread",
+                   "gossip_frag", "exchange_frac",
+                   "stream_peak_sync_bytes", "stream_round_sync_bytes")
+                  if kk in m}
         if args.cosine_stats:
-            rec["cos_mean"] = pick(m["cos_mean"])
-            rec["cos_std"] = pick(m["cos_std"])
-        history.append(rec)
-        val_s = "   skip" if skipped else \
-            f"{vl:.4f} ppl={np.exp(vl):.2f}"
-        print(f"[round {t + 1}/{args.rounds}] "
-              f"inner={rec['inner_loss']:.4f} val={val_s} "
-              f"active={rec['active']}", flush=True)
+            extras["cos_mean"] = pick(m["cos_mean"])
+            extras["cos_std"] = pick(m["cos_std"])
+        edges = None
+        wire = round_wire
+        if frag_wire is not None:       # gossip: the round's fragment
+            P = len(frag_wire)
+            wire = frag_wire[t % P]
+            from repro.core import gossip
+            edges = gossip.pairing_edges(args.k, t,
+                                         args.gossip_pairing,
+                                         round_key=round_key)
+            gossip_rounds.append({"round": t, "fragment": t % P,
+                                  "edges": [list(e) for e in edges]})
+        rec.round(
+            round=t + 1, rounds=args.rounds,
+            inner_steps=args.pretrain_steps + (t + 1) * args.H,
+            inner_loss=pick(m["inner_loss"]),
+            val_loss=pick(m["val_loss"]),
+            outer_gnorm=pick(m["outer_gnorm"]),
+            # count from the final mask row, not the schedule: a
+            # scenario preemption zeroes workers the schedule keeps
+            active=int(np.asarray(acts[t]).sum()),
+            dropped=int(args.k - np.asarray(drops[t]).sum()),
+            wire_bytes=wire, gossip_edges=edges, extras=extras,
+            evaled=evaled)
 
     t0 = time.time()
     if args.legacy_loop:
@@ -367,7 +401,7 @@ def run(args):
             state, m = rnd(state, sub, jnp.asarray(drops[t]),
                            jnp.asarray(acts[t]), weights)
             m = dict(m, val_loss=ev(state.global_params, val))
-            emit_round(t, m)
+            emit_round(t, m, round_key=sub)
     else:
         # Scanned driver: chunks of `rounds_per_call` rounds run inside
         # one jit each (donated carry, in-graph eval every round); the
@@ -386,6 +420,14 @@ def run(args):
                     batch_size=args.batch, seq_len=args.seq,
                     eval_tokens=val, eval_every=args.eval_every,
                     mesh=mesh)
+            subs = None
+            if frag_wire is not None:
+                # host replica of the in-graph split_chain: the round
+                # keys the body consumed, for the pairing-edge record
+                subs, kk = [], key
+                for _ in range(n):
+                    kk, sub = jax.random.split(kk)
+                    subs.append(sub)
             # round_offset keeps the in-graph eval cadence globally
             # aligned across chunk boundaries (traced: chunks of equal
             # size share one compiled function)
@@ -393,28 +435,37 @@ def run(args):
                                 jnp.asarray(acts[t:t + n]), weights,
                                 round_offset=t)
             key = ms.pop("next_key")
-            ms = jax.tree.map(np.asarray, ms)
+            ms = rec.ingest_chunk(ms)
             for i in range(n):
                 evaled = ((t + i + 1) % args.eval_every == 0
                           or i == n - 1)
-                emit_round(t + i, ms, i, evaled=evaled)
+                emit_round(t + i, ms, i, evaled=evaled,
+                           round_key=None if subs is None else subs[i])
             t += n
 
-    print(f"done in {time.time() - t0:.1f}s; "
-          f"entropy floor = {sampler.entropy_floor():.4f} "
-          f"(ppl {np.exp(sampler.entropy_floor()):.2f})")
+    rec.note(f"done in {time.time() - t0:.1f}s; "
+             f"entropy floor = {sampler.entropy_floor():.4f} "
+             f"(ppl {np.exp(sampler.entropy_floor()):.2f})")
+    if args.trace:
+        tb = obs_trace.round_trace(
+            transport=args.transport, k=args.k, rounds=args.rounds,
+            H=args.H, scenario=scen, drops=np.asarray(drops),
+            acts=np.asarray(acts), history=rec.round_records(),
+            plan=plan, wire_bytes=round_wire,
+            gossip_rounds=gossip_rounds)
+        tb.write(args.trace, other_data={"manifest": rec.manifest})
+        rec.note(f"trace: {args.trace}")
     if args.out:
-        with open(args.out, "w") as f:
-            json.dump({"args": vars(args), "history": history}, f, indent=1)
-        print("wrote", args.out)
+        rec.dump(args.out, args=vars(args))
+        rec.note(f"wrote {args.out}")
     if args.checkpoint:
         ckpt.save(args.checkpoint,
                   {"params": state.global_params,
                    "outer_buf": state.outer_state.buf},
                   metadata={"rounds": args.rounds, "k": args.k,
                             "H": args.H})
-        print("checkpoint:", args.checkpoint)
-    return history
+        rec.note(f"checkpoint: {args.checkpoint}")
+    return rec.records
 
 
 def make_parser():
@@ -555,6 +606,17 @@ def make_parser():
                     help="use the per-round Python loop instead of the "
                          "scanned driver")
     ap.add_argument("--log-every", type=int, default=200)
+    ap.add_argument("--log-format", default="text",
+                    choices=["text", "json"],
+                    help="progress-line format: 'text' keeps the "
+                         "classic console lines, 'json' prints one "
+                         "JSON record per line (same unified schema "
+                         "as --out)")
+    ap.add_argument("--trace", default="",
+                    help="write a tick-domain Chrome trace-event JSON "
+                         "of the run (workers, fragments, transfers, "
+                         "faults) — open in Perfetto / "
+                         "chrome://tracing")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="")
     ap.add_argument("--checkpoint", default="")

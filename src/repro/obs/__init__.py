@@ -1,0 +1,17 @@
+"""Run telemetry: unified metrics schema + tick-domain trace export.
+
+Two layers, both transport-agnostic:
+
+  * ``obs.metrics`` — ``RunRecorder``, ONE record schema for every
+    transport's per-round / per-event history (replacing the divergent
+    ad-hoc shapes the launch scripts used to invent), plus the run
+    manifest that ships the static wire plan and HLO-measured profile
+    alongside the records.
+  * ``obs.trace`` — maps the tick-domain world the repo already
+    computes (``faults.Scenario.timeline`` events, transfer in-flight
+    windows, the streaming fragment schedule) onto Chrome trace-event
+    JSON viewable in Perfetto.
+
+Gated by ``benchmarks/obs.py`` → ``BENCH_obs.json``.
+"""
+from repro.obs import metrics, trace  # noqa: F401

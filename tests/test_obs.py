@@ -1,0 +1,327 @@
+"""Run telemetry subsystem (repro/obs): the unified record schema,
+JSON safety of numpy/jax-valued histories, verbatim preservation of
+the classic console lines, the Chrome trace builder + structural
+validator, and the exactly-once correspondence between engine events
+and trace transfer spans on a real (tiny) async run.
+
+The expensive cross-checks (recorder-off bitwise identity against the
+bare driver, HLO-measured wire bytes at ratio 1.000) live in
+benchmarks/obs.py; this module keeps the schema and trace geometry
+honest at unit-test speed.
+"""
+from __future__ import annotations
+
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import DiLoCoConfig
+from repro.core import diloco, faults, gossip, streaming
+from repro.core.faults import Arrival, Lost, Scenario
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import RunRecorder, to_jsonable
+
+from test_async_engine import make_engine, tiny_params
+
+
+# ---------------------------------------------------------------------------
+# to_jsonable: nothing the drivers produce may crash json.dump
+# ---------------------------------------------------------------------------
+
+def test_to_jsonable_numpy_and_jax_values():
+    payload = {"f32": np.float32(1.5), "i64": np.int64(7),
+               "arr": np.arange(3), "jax": jnp.ones((2,)),
+               "nested": [{"b": np.bool_(True)}, (np.float16(2.0),)],
+               "none": None, "s": "x"}
+    out = json.loads(json.dumps(to_jsonable(payload)))
+    assert out["f32"] == 1.5 and out["i64"] == 7
+    assert out["arr"] == [0, 1, 2] and out["jax"] == [1.0, 1.0]
+    assert out["nested"][0]["b"] is True
+    assert out["none"] is None
+
+
+def test_to_jsonable_handles_nan_and_foreign_objects():
+    out = to_jsonable({"nan": float("nan"), "obj": object()})
+    assert math.isnan(out["nan"])
+    assert isinstance(out["obj"], str)
+
+
+# ---------------------------------------------------------------------------
+# RunRecorder: schema, text verbatim, json lines, notes
+# ---------------------------------------------------------------------------
+
+def _capture_recorder(**kw):
+    lines = []
+    rec = RunRecorder(printer=lambda s, **_: lines.append(s), **kw)
+    return rec, lines
+
+
+def test_round_text_is_the_classic_console_line():
+    rec, lines = _capture_recorder()
+    rec.round(round=3, rounds=20, inner_steps=150, inner_loss=5.1234,
+              val_loss=4.5678, outer_gnorm=0.01, active=7)
+    assert lines == [f"[round 3/20] inner=5.1234 "
+                     f"val=4.5678 ppl={np.exp(4.5678):.2f} active=7"]
+    rec.round(round=4, rounds=20, inner_steps=200, inner_loss=5.0,
+              val_loss=4.0, outer_gnorm=0.01, active=7, evaled=False)
+    assert lines[-1] == "[round 4/20] inner=5.0000 val=   skip active=7"
+    assert rec.round_records()[-1]["val_loss"] is None
+
+
+def test_json_log_format_emits_one_record_per_line():
+    rec, lines = _capture_recorder(log_format="json")
+    rec.pretrain(step=200, loss=np.float32(6.0), val_loss=5.9)
+    rec.round(round=1, rounds=2, inner_steps=4, inner_loss=5.5,
+              val_loss=5.4, outer_gnorm=0.1, active=4,
+              wire_bytes=np.float64(1024.0))
+    rec.note("done")
+    parsed = [json.loads(s) for s in lines]
+    assert parsed[0]["phase"] == "pretrain"
+    assert parsed[1]["wire_bytes"] == 1024.0
+    assert parsed[2] == {"note": "done"}
+    # notes annotate the manifest, not the record history
+    assert len(rec.records) == 2
+    assert rec.manifest["notes"] == [{"note": "done"}]
+
+
+def test_recorder_payload_roundtrips_with_jax_scalars():
+    rec, _ = _capture_recorder(transport="gossip")
+    rec.round(round=1, rounds=1, inner_steps=2,
+              inner_loss=jnp.float32(5.0), val_loss=jnp.float32(4.9),
+              outer_gnorm=jnp.float32(0.1), active=2,
+              gossip_edges=((0, 1),),
+              extras={"gossip_spread": np.float32(0.5)})
+    out = json.loads(json.dumps(rec.payload(args={"k": 2})))
+    assert out["history"][0]["gossip_edges"] == [[0, 1]]
+    assert out["manifest"]["transport"] == "gossip"
+
+
+def test_ingest_chunk_materializes_and_counts():
+    rec, _ = _capture_recorder()
+    ms = rec.ingest_chunk({"val_loss": jnp.arange(3.0)})
+    assert isinstance(ms["val_loss"], np.ndarray)
+    assert rec.ingest_calls == 1
+
+
+# ---------------------------------------------------------------------------
+# static wire accounting helpers
+# ---------------------------------------------------------------------------
+
+def test_sync_plan_charges_the_streaming_metric_bytes():
+    params = tiny_params()
+    dcfg = DiLoCoConfig(k=2, H=4, streaming_fragments=2, stream_tau=3)
+    plan = streaming.sync_plan(params, dcfg)
+    assert [row["fragment"] for row in plan] == [0, 1]
+    assert all(row["apply_step"] == row["send_step"] + 3
+               for row in plan)
+    # tau pushes the last fragment's apply past H: the overlap window
+    assert plan[1]["crosses_round"]
+    total_elems = sum(int(x.size) for x in jax.tree.leaves(params))
+    assert sum(row["elems"] for row in plan) == total_elems
+    assert all(row["wire_bytes"] > 0 for row in plan)
+
+
+def test_outer_wire_bytes_is_the_full_model_in_f32():
+    params = tiny_params()
+    dcfg = DiLoCoConfig(k=2, H=4)
+    n = sum(int(x.size) for x in jax.tree.leaves(params))
+    from repro.kernels.ops import transport_bytes
+    assert diloco.outer_wire_bytes(params, dcfg) == \
+        transport_bytes(n, "float32")
+
+
+def test_pairing_edges_match_the_partner_map():
+    # butterfly stage 0 on k=4: hypercube neighbours
+    assert gossip.pairing_edges(4, 0, "butterfly") == ((0, 1), (2, 3))
+    assert gossip.pairing_edges(4, 1, "butterfly") == ((0, 2), (1, 3))
+    # random pairing is a function of the shared fold of the round key
+    key = jax.random.PRNGKey(3)
+    e1 = gossip.pairing_edges(4, 0, "random", round_key=key)
+    assert e1 == gossip.pairing_edges(4, 0, "random", round_key=key)
+    for i, j in e1:
+        assert 0 <= i < j < 4
+    with pytest.raises(ValueError):
+        gossip.pairing_edges(4, 0, "random")
+
+
+# ---------------------------------------------------------------------------
+# trace builder + validator
+# ---------------------------------------------------------------------------
+
+def test_trace_builder_geometry_and_validation():
+    tb = obs_trace.TraceBuilder()
+    tb.process(1, "workers")
+    tb.thread(1, 0, "worker 0")
+    tb.thread(1, 0, "worker 0")            # dedup'd
+    tb.span("inner", pid=1, tid=0, start=2, dur=3, cat="compute")
+    tb.instant("arrival", pid=1, tid=0, tick=5)
+    trace = tb.to_json()
+    assert obs_trace.validate_trace(trace) == []
+    metas = [e for e in trace["traceEvents"] if e["ph"] == "M"]
+    assert len(metas) == 2
+    span = next(e for e in trace["traceEvents"] if e["ph"] == "X")
+    assert span["ts"] == 2 * obs_trace.TICK_US
+    assert span["dur"] == 3 * obs_trace.TICK_US
+
+
+def test_validate_trace_flags_malformed_events():
+    good = obs_trace.TraceBuilder().to_json()
+    assert obs_trace.validate_trace(good) == []
+    assert obs_trace.validate_trace({"nope": 1})
+    bad_ph = {"traceEvents": [{"name": "x", "ph": "Z", "pid": 0,
+                               "tid": 0, "ts": 0.0}]}
+    assert obs_trace.validate_trace(bad_ph)
+    neg_ts = {"traceEvents": [{"name": "x", "ph": "i", "pid": 0,
+                               "tid": 0, "ts": -1.0, "s": "t"}]}
+    assert obs_trace.validate_trace(neg_ts)
+    neg_dur = {"traceEvents": [{"name": "x", "ph": "X", "pid": 0,
+                               "tid": 0, "ts": 0.0, "dur": -5.0}]}
+    assert obs_trace.validate_trace(neg_dur)
+
+
+def test_round_trace_structure_sync_and_streaming():
+    k, rounds, H = 3, 4, 4
+    history = [{"round": r + 1, "inner_loss": 5.0, "val_loss": 4.9,
+                "outer_gnorm": 0.1, "active": k}
+               for r in range(rounds)]
+    plan = ({"fragment": 0, "send_step": 2, "apply_step": 3,
+             "elems": 8, "wire_bytes": 32.0},
+            {"fragment": 1, "send_step": 4, "apply_step": 5,
+             "elems": 8, "wire_bytes": 32.0})
+    tb = obs_trace.round_trace(transport="simulated", k=k,
+                               rounds=rounds, H=H, history=history,
+                               plan=plan)
+    trace = tb.to_json()
+    assert obs_trace.validate_trace(trace) == []
+    spans = [e for e in trace["traceEvents"] if e["ph"] == "X"]
+    rspans = [e for e in spans if e["pid"] == obs_trace.PID_ROUNDS]
+    assert len(rspans) == rounds
+    inner = [e for e in spans if e["pid"] == obs_trace.PID_WORKERS]
+    assert len(inner) == rounds * k
+    gathers = [e for e in spans if e["pid"] == obs_trace.PID_FRAGMENTS]
+    assert len(gathers) == rounds * len(plan)
+    # fragment 1's apply crosses the round boundary -> flagged
+    assert all(e["args"]["crosses_round"] ==
+               (e["args"]["fragment"] == 1) for e in gathers)
+    assert obs_trace.trace_wire_bytes(trace) == rounds * 64.0
+
+
+def test_round_trace_draws_gossip_exchanges_and_faults():
+    scen = Scenario(speeds=(1, 2), latency=(0, 1),
+                    preemptions=((1, 1, 2),))
+    drops, acts = scen.round_masks(2, 3)
+    tb = obs_trace.round_trace(
+        transport="gossip", k=2, rounds=3, H=2, scenario=scen,
+        drops=drops, acts=acts,
+        gossip_rounds=[{"round": 0, "fragment": 0,
+                        "edges": [[0, 1]]}])
+    trace = tb.to_json()
+    assert obs_trace.validate_trace(trace) == []
+    names = [e["name"] for e in trace["traceEvents"]]
+    assert "exchange" in names
+    assert "preempted" in names
+    # gossip ships pairwise exchanges, never an all-reduce send
+    assert "outer send" not in names
+
+
+# ---------------------------------------------------------------------------
+# exactly-once: engine events <-> trace transfer spans
+# ---------------------------------------------------------------------------
+
+def _faulty_scenario():
+    return Scenario(speeds=(1, 2, 1, 3), latency=(1, 1, 2, 1),
+                    drop_prob=0.4, max_retries=1, retry_backoff=1,
+                    preemptions=((2, 3, 6),), seed=7)
+
+
+def test_async_trace_corresponds_exactly_once_to_engine_events():
+    scen = _faulty_scenario()
+    eng = make_engine(4, 2, scenario=scen, seed=1)
+    rec, _ = _capture_recorder(transport="async")
+    state = eng.init_state(tiny_params())
+    state, hist = eng.run(state, ticks=9, recorder=rec)
+    # the recorder saw every engine event, stamped with the schema keys
+    assert [{k: v for k, v in r.items()
+             if k not in ("kind", "phase", "transport")}
+            for r in rec.event_records()] == list(hist)
+    tb = obs_trace.async_trace(scen, 4, 9, history=hist,
+                               wire_bytes=eng.wire_bytes())
+    trace = tb.to_json()
+    assert obs_trace.validate_trace(trace) == []
+    assert obs_trace.span_event_correspondence(trace, hist) == []
+    arrivals = [r for r in hist if r["event"] == "arrival"]
+    delivered = [s for s in obs_trace.transfer_spans(trace)
+                 if s["args"].get("delivered")]
+    assert len(arrivals) == len(delivered) > 0
+    assert obs_trace.trace_wire_bytes(trace) == \
+        pytest.approx(sum(r["wire_bytes"] for r in arrivals))
+
+
+def test_async_trace_timeline_only_matches_synthetic_records():
+    """The trace is drawable from the timeline alone (no engine): its
+    spans still biject with the timeline's terminal events."""
+    scen = _faulty_scenario()
+    k, ticks = 4, 8
+    ev = scen.timeline(k, ticks)
+    records = []
+    for e in ev:
+        if isinstance(e, Arrival):
+            records.append({"event": "arrival", "uid": e.uid})
+        elif isinstance(e, Lost):
+            records.append({"event": "lost", "uid": e.uid})
+    trace = obs_trace.async_trace(scen, k, ticks).to_json()
+    assert obs_trace.validate_trace(trace) == []
+    assert obs_trace.span_event_correspondence(trace, records) == []
+
+
+def test_span_event_correspondence_catches_mismatches():
+    scen = _faulty_scenario()
+    ev = scen.timeline(4, 8)
+    arrivals = [e for e in ev if isinstance(e, Arrival)]
+    assert arrivals
+    records = [{"event": "arrival", "uid": e.uid} for e in arrivals]
+    trace = obs_trace.async_trace(scen, 4, 8).to_json()
+    # a record the trace never drew
+    assert obs_trace.span_event_correspondence(
+        trace, records + [{"event": "arrival", "uid": 10_000}])
+    # a span with no record
+    assert obs_trace.span_event_correspondence(trace, records[:-1])
+
+
+# ---------------------------------------------------------------------------
+# CLI validator
+# ---------------------------------------------------------------------------
+
+def test_trace_cli_validates_files(tmp_path, capsys):
+    good = tmp_path / "good.json"
+    obs_trace.async_trace(Scenario.uniform(2), 2, 3).write(str(good))
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"traceEvents": [{"ph": "Q"}]}))
+    assert obs_trace.main([str(good)]) == 0
+    assert obs_trace.main([str(good), str(bad)]) == 1
+    out = capsys.readouterr().out
+    assert "[ok]" in out and "[INVALID]" in out
+
+
+# ---------------------------------------------------------------------------
+# dryrun manifest folding
+# ---------------------------------------------------------------------------
+
+def test_dryrun_manifest_of_folds_hlo_profiles():
+    from repro.launch import dryrun
+    records = [{"arch": "a", "shape": "s", "fn": "diloco_outer_step",
+                "mesh": "2x2", "chips": 4,
+                "collectives": {"cross_pod_bytes": 128.0,
+                                "cross_by_op": {"all-reduce": 128.0}}},
+               {"arch": "a", "shape": "s", "error": "boom"}]
+    m = dryrun.manifest_of(records, config={"fns": "outer"})
+    assert m["transport"] == "dryrun"
+    prof = m["hlo_profile"]["a/s/diloco_outer_step"]
+    assert prof["collectives"]["cross_pod_bytes"] == 128.0
+    assert len(m["hlo_profile"]) == 1          # errors are not profiles
+    json.dumps(obs_metrics.to_jsonable(m))

@@ -1,0 +1,108 @@
+"""Hypothesis property tests for the trace layer: for ARBITRARY fault
+scenarios, the tick-domain Chrome trace drawn from the timeline is
+structurally valid and its transfer spans biject exactly-once with the
+timeline's terminal events (Arrival <-> delivered span, Lost <->
+undelivered span), and the barrier-paced round trace stays valid under
+any round-mask projection.
+
+(Separate from tests/test_obs.py so the module-level hypothesis
+importorskip cannot take the deterministic suite with it — same split
+as tests/test_async_properties.py. The deterministic module covers
+the same properties on a fixed faulty scenario when hypothesis is
+absent.)
+"""
+from __future__ import annotations
+
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.faults import Arrival, Lost, Scenario  # noqa: E402
+from repro.obs import trace as obs_trace  # noqa: E402
+
+
+@st.composite
+def _scenarios(draw):
+    k = draw(st.integers(2, 5))
+    pre = ()
+    if draw(st.booleans()):
+        leave = draw(st.integers(1, 6))
+        rejoin = draw(st.sampled_from([0, leave + 1, leave + 3]))
+        pre = ((draw(st.integers(0, k - 1)), leave, rejoin),)
+    s = Scenario(
+        speeds=tuple(draw(st.lists(st.integers(1, 3), min_size=k,
+                                   max_size=k))),
+        latency=tuple(draw(st.lists(st.integers(0, 2), min_size=k,
+                                    max_size=k))),
+        latency_jitter=draw(st.sampled_from([0.0, 0.5])),
+        drop_prob=draw(st.sampled_from([0.0, 0.3, 0.7])),
+        max_retries=draw(st.integers(0, 2)),
+        retry_backoff=draw(st.integers(1, 2)),
+        preemptions=pre,
+        seed=draw(st.integers(0, 10_000)))
+    ticks = draw(st.integers(2, 10))
+    return k, s, ticks
+
+
+def _records_of(events):
+    recs = []
+    for e in events:
+        if isinstance(e, Arrival):
+            recs.append({"event": "arrival", "uid": e.uid})
+        elif isinstance(e, Lost):
+            recs.append({"event": "lost", "uid": e.uid})
+    return recs
+
+
+@given(_scenarios())
+@settings(max_examples=60, deadline=None)
+def test_async_trace_valid_and_spans_biject_with_timeline(case):
+    """Every Arrival in the timeline owns exactly one delivered
+    transfer span, every Lost exactly one undelivered span, no span is
+    orphaned, and the whole trace passes structural validation."""
+    k, s, ticks = case
+    events = s.timeline(k, ticks)
+    trace = obs_trace.async_trace(s, k, ticks).to_json()
+    assert obs_trace.validate_trace(trace) == []
+    assert obs_trace.span_event_correspondence(
+        trace, _records_of(events)) == []
+
+
+@given(_scenarios())
+@settings(max_examples=40, deadline=None)
+def test_async_trace_span_windows_match_event_ticks(case):
+    """A delivered transfer span closes at its Arrival's tick and a
+    lost span at its Lost's give-up tick — the trace never invents or
+    shifts time."""
+    k, s, ticks = case
+    by_uid = {e.uid: e for e in s.timeline(k, ticks)
+              if isinstance(e, (Arrival, Lost))}
+    trace = obs_trace.async_trace(s, k, ticks).to_json()
+    for span in obs_trace.transfer_spans(trace):
+        uid = span["args"]["uid"]
+        end_tick = (span["ts"] + span["dur"]) / obs_trace.TICK_US
+        assert end_tick == pytest.approx(by_uid[uid].tick)
+        assert span["args"]["delivered"] == isinstance(
+            by_uid[uid], Arrival)
+
+
+@given(_scenarios())
+@settings(max_examples=40, deadline=None)
+def test_round_trace_valid_under_any_mask_projection(case):
+    """The barrier-paced trace built from the scenario's round-mask
+    projection (what train.py draws for sync/streaming/sharded) is
+    structurally valid, and its per-round inner spans never exceed
+    active x rounds."""
+    k, s, ticks = case
+    rounds = max(1, ticks // max(1, s.sync_round_ticks(k)))
+    drops, acts = s.round_masks(k, rounds)
+    trace = obs_trace.round_trace(
+        transport="simulated", k=k, rounds=rounds, H=4, scenario=s,
+        drops=drops, acts=acts, wire_bytes=64.0).to_json()
+    assert obs_trace.validate_trace(trace) == []
+    inner = [e for e in trace["traceEvents"]
+             if e.get("ph") == "X" and e["name"] == "inner phase"]
+    assert len(inner) == int(acts.sum())
