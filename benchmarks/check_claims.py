@@ -47,6 +47,15 @@ def load_claims(root: str) -> dict:
     return out
 
 
+def informational(entry) -> bool:
+    """True for claims recorded but NOT gated: a benchmark demotes a
+    measurement it cannot stand behind on this backend (e.g. CPU runs
+    emulate bf16 math in f32, so bf16 latency rows are noise, not
+    perf claims) by writing ``{"value": ..., "informational": true,
+    "backend": ...}`` instead of a bare boolean."""
+    return isinstance(entry, dict) and bool(entry.get("informational"))
+
+
 def check(claims_by_file: dict, manifest: dict) -> list:
     """All gate violations, as human-readable strings (empty = pass)."""
     errors = []
@@ -54,7 +63,10 @@ def check(claims_by_file: dict, manifest: dict) -> list:
         for name, val in claims.items():
             # claims are named booleans, but some benchmarks keep the
             # measured figure next to the gate (e.g. wallclock's
-            # speedup_x) — any FALSY entry fails, truthy records pass
+            # speedup_x) — any FALSY entry fails, truthy records pass,
+            # and informational entries are never gated
+            if informational(val):
+                continue
             if not val:
                 errors.append(f"{fname}: claim '{name}' is "
                               f"{val!r} (must be true)")
@@ -108,8 +120,12 @@ def main(argv=None) -> int:
 
     errors = check(claims_by_file, manifest)
     for fname, claims in claims_by_file.items():
-        ok = sum(1 for v in claims.values() if v)
-        print(f"{fname}: {ok}/{len(claims)} claims true")
+        info = sum(1 for v in claims.values() if informational(v))
+        ok = sum(1 for v in claims.values()
+                 if v and not informational(v))
+        gated = len(claims) - info
+        tail = f" (+{info} informational)" if info else ""
+        print(f"{fname}: {ok}/{gated} claims true{tail}")
     for miss in unmanifested(claims_by_file, manifest):
         print(f"note: unmanifested claim {miss} (run with "
               "--update-manifest to pin it)")

@@ -132,12 +132,21 @@ def bench_policy(loss_fn, sampler, params, name, dcfg, tcfg, *, rounds,
     results = [one() for _ in range(repeats)]
     t = min(r[0] for r in results)
     _, state, ms = results[0]
+    backend = jax.default_backend()
+    # CPU executes bf16 arithmetic through f32 emulation (often with
+    # extra convert traffic), so low-precision latency rows measured
+    # there describe the emulator, not the policy — mark them
+    # informational so nothing downstream gates on them
+    emulated = (backend == "cpu" and (dcfg.param_dtype != "float32"
+                                      or dcfg.master_dtype != "float32"))
     return {
         "name": name,
         "config": {"param_dtype": dcfg.param_dtype,
                    "master_dtype": dcfg.master_dtype},
         "state_bytes": sb,
         "compiled_memory": mem,
+        "backend": backend,
+        "latency_informational": emulated,
         "total_s": t,
         "round_latency_ms": 1e3 * t / rounds,
         "final_val_loss": float(np.asarray(ms["val_loss"])[-1]),
@@ -206,6 +215,9 @@ def run(scale: int = 1, *, k=4, H=6, rounds=6, batch=2, seq=32,
     sync_bytes = {dt: transport_bytes(n_params, dt)
                   for dt in ("float32", "bfloat16", "int4")}
 
+    lat_ok = (runs["bf16"]["round_latency_ms"]
+              <= 1.5 * runs["f32"]["round_latency_ms"])
+
     report = {
         "config": {"k": k, "H": H, "rounds": rounds, "batch": batch,
                    "seq": seq, "backend": jax.default_backend(),
@@ -222,6 +234,14 @@ def run(scale: int = 1, *, k=4, H=6, rounds=6, batch=2, seq=32,
             "all_losses_finite": bool(all(
                 np.isfinite(r["final_val_loss"])
                 for r in runs.values())),
+            # a real perf claim only where bf16 math is native; on
+            # CPU the row is recorded but never gated (see
+            # check_claims.informational)
+            "bf16_latency_not_worse_1p5x": (
+                {"value": bool(lat_ok), "informational": True,
+                 "backend": jax.default_backend()}
+                if runs["bf16"]["latency_informational"]
+                else bool(lat_ok)),
         },
     }
     print(f"bit-identical f32: {bit_identical}   "

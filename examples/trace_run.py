@@ -17,6 +17,13 @@ maps the tick-domain world onto Chrome trace-event JSON:
   trace_gossip.json  pairwise partial averaging: per-round exchange
                      markers on both endpoints of every realized edge
                      (butterfly pairing), one fragment per round.
+  trace_overlap.json overlapped streaming on the sharded transport:
+                     int4 packed wire, τ=1 — each fragment lane shows
+                     the scheduled gather span (snapshot → merge) PLUS
+                     the HLO-measured "consume (measured)" marker at
+                     the offset where the lowered program actually
+                     consumes the in-flight collective, τ inner steps
+                     after issue.
 
 Open any of them at https://ui.perfetto.dev (or chrome://tracing) —
 or validate structurally:
@@ -29,6 +36,11 @@ import argparse
 import json
 import os
 
+# the overlap demo needs a pod mesh — force 8 host devices before jax
+# initializes (no-op when XLA_FLAGS is already pinned)
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
 from repro.launch import train
 
 FAULTS = ["--speeds", "1,2,1,3", "--link-latency", "1,1,2,1",
@@ -40,6 +52,10 @@ RUNS = {
     "sync": FAULTS,
     "async": ["--transport", "async", "--ticks", "12", *FAULTS],
     "gossip": ["--transport", "gossip", "--stream-fragments", "2"],
+    "overlap": ["--transport", "sharded", "--stream-fragments", "2",
+                "--stream-tau", "1", "--stream-alpha", "0.5",
+                "--outer-grad-dtype", "int4", "--k", "2",
+                "--pods", "2"],
 }
 
 

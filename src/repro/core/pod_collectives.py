@@ -111,19 +111,29 @@ def fragment_mean(d_local, m_full, m_local, denom, *, dtype: str,
     if dtype == "float32":
         part = jnp.tensordot(m_local, d_local, axes=(0, 0))
         return jax.lax.psum(part, axis) / denom
+    gathered = fragment_gather(d_local, dtype=dtype, axis=axis)
+    # the exact op the simulated transport runs on its stacked array —
+    # bit-identical reduction, deterministic order on any topology
+    return jnp.tensordot(m_full, gathered, axes=(0, 0)) / denom
+
+
+def fragment_gather(d_local, *, dtype: str, axis: str = POD_AXIS):
+    """The collective half of the quantized ``fragment_mean``: gather
+    one fragment leaf's per-replica payload over the pod axis WITHOUT
+    reducing it. The deferred streaming round (quantized, τ>0) issues
+    this at the send offset and runs the mask-reduce τ inner steps
+    later at the apply, so the gather's result has no consumer until
+    the overlap window has elapsed. Returns (k, ...) in replica order,
+    replicated."""
     if dtype == "bfloat16":
         # the quantized payload is on the bf16 grid: ship real bf16
         # bytes and upcast losslessly on arrival
         wire = jax.lax.all_gather(d_local.astype(jnp.bfloat16), axis,
                                   axis=0, tiled=True)
-        gathered = wire.astype(d_local.dtype)
-    else:
-        # int4 fake-quant payload; codes+scales packing is modeled by
-        # the static wire accounting (ops.transport_bytes)
-        gathered = jax.lax.all_gather(d_local, axis, axis=0, tiled=True)
-    # the exact op the simulated transport runs on its stacked array —
-    # bit-identical reduction, deterministic order on any topology
-    return jnp.tensordot(m_full, gathered, axes=(0, 0)) / denom
+        return wire.astype(d_local.dtype)
+    # int4 fake-quant payload; codes+scales packing is modeled by
+    # the static wire accounting (ops.transport_bytes)
+    return jax.lax.all_gather(d_local, axis, axis=0, tiled=True)
 
 
 def gather_wire(wire_local, *, axis: str = POD_AXIS):
@@ -149,9 +159,10 @@ def stream_state_specs(state, axis: str = POD_AXIS):
     """PartitionSpec pytree matching a ``streaming.StreamState``:
     per-replica leaves (working params, AdamW m/v/count/master,
     error-feedback residual) band-sharded over the pod axis on their
-    leading (k,) dim; global params, outer state, pending fragments and
-    the armed latch replicated (every pod computes them identically
-    from the replicated collective results)."""
+    leading (k,) dim; global params, outer state, pending fragments,
+    the armed latch and the in-flight collective buffers replicated
+    (every pod computes them identically from the replicated collective
+    results — an all-gather's output is the same on every pod)."""
     shard = lambda t: jax.tree.map(lambda _: P(axis), t)
     rep = lambda t: jax.tree.map(lambda _: P(), t)
     base = state.base._replace(
@@ -166,7 +177,9 @@ def stream_state_specs(state, axis: str = POD_AXIS):
         pending=rep(state.pending),
         armed=P(),
         residual=(None if state.residual is None
-                  else shard(state.residual)))
+                  else shard(state.residual)),
+        inflight=(None if getattr(state, "inflight", None) is None
+                  else rep(state.inflight)))
 
 
 def shard_stream_state(state, mesh, axis: str = POD_AXIS):

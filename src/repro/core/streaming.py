@@ -94,11 +94,25 @@ class StreamState(NamedTuple):
     the rounding error its quantizer introduced and adds it to the next
     round's delta, so the mean transport bias decays to zero at no wire
     cost. None when error feedback is off or transport is float32.
+    inflight: the double-buffered in-flight collective slot (quantized
+    transports at τ>0 only, else None). One entry per fragment, each
+    ``(payload, mask)``: the RAW gathered wire — the (k, W) packed byte
+    buffer on the packed transport, the (k, ...) per-leaf stacked
+    payload elsewhere — plus the (k,) communication-mask snapshot taken
+    at the send. The collective is *issued* at the fragment's send
+    offset and its result is first *consumed* (decoded + mask-reduced
+    into ``pending``) at the apply τ inner steps later, so the τ
+    inner-step dots sit between collective-start and first use in
+    program order. None entries mark override-emptied fragments. The
+    mask snapshot makes wrapped fragments (applied in the NEXT round,
+    under a different drop mask) reduce with the mask of the round
+    that sent them — exactly the values the eager path produced.
     """
     base: diloco.DiLoCoState
     pending: Any
     armed: jnp.ndarray
     residual: Any = None
+    inflight: Any = None
 
     # conveniences so StreamState is a drop-in for DiLoCoState readers
     @property
@@ -126,6 +140,65 @@ class StreamState(NamedTuple):
         return self.base.inner_steps_done
 
 
+def deferred_consume(dcfg: DiLoCoConfig) -> bool:
+    """True when the streaming round runs the real issue/consume split:
+    each fragment's collective is issued at the send offset and its raw
+    result is first consumed τ inner steps later at the apply. Only the
+    quantized transports defer — their sharded reduction is already a
+    gather + local decode, so the decode moves wholesale to the apply;
+    f32 keeps the eager weighted psum whose bit-identity to the
+    simulated tensordot is a standing cross-commit gate. τ=0 has no
+    window to overlap, so it keeps the eager path (and the PR 7 state
+    tree) too."""
+    return (int(dcfg.streaming_fragments) >= 1
+            and int(dcfg.stream_tau) > 0
+            and dcfg.outer_grad_dtype in ("bfloat16", "int4"))
+
+
+def _packed_wire(dcfg: DiLoCoConfig) -> bool:
+    return (getattr(dcfg, "transport", "simulated") == "sharded"
+            and getattr(dcfg, "pack_wire", True)
+            and dcfg.outer_grad_dtype in ("bfloat16", "int4"))
+
+
+def _init_inflight(params, dcfg: DiLoCoConfig):
+    """Zero-filled in-flight slots matching what round_core stores per
+    fragment: the packed transport buffers the (k, W) gathered wire
+    bytes, every other transport the (k, ...) stacked per-leaf payload
+    restricted to the fragment's active leaves; both pair the buffer
+    with a (k,) mask snapshot. None when the config has no deferral."""
+    from repro.kernels import ops as kops
+    if not deferred_consume(dcfg):
+        return None
+    P = max(1, int(dcfg.streaming_fragments))
+    part = fragments.partition_params(params, P,
+                                      overrides=dcfg.stream_overrides)
+    k = int(dcfg.k)
+    mask0 = lambda: jnp.zeros((k,), jnp.float32)
+    slots = []
+    if _packed_wire(dcfg):
+        regs = fragments.fragment_regions(part, params)
+        wdt = kops.wire_dtype(dcfg.outer_grad_dtype)
+        for p in range(P):
+            W = sum(kops.wire_elems(r.elems, dcfg.outer_grad_dtype)
+                    for r in regs[p])
+            slots.append(None if W == 0 else
+                         (jnp.zeros((k, W), wdt), mask0()))
+    else:
+        leaves = jax.tree_util.tree_leaves(params)
+        for p in range(P):
+            mk_l = jax.tree_util.tree_leaves(part.masks[p])
+            active = [bool(np.any(np.asarray(mm))) for mm in mk_l]
+            if not any(active):
+                slots.append(None)
+                continue
+            payload = tuple(
+                jnp.zeros((k,) + l.shape, jnp.float32) if on else None
+                for on, l in zip(active, leaves))
+            slots.append((payload, mask0()))
+    return tuple(slots)
+
+
 def init_state(params, dcfg: DiLoCoConfig) -> StreamState:
     """Start streaming DiLoCo from ``params`` (cf. diloco.init_state)."""
     P = max(1, int(dcfg.streaming_fragments))
@@ -138,7 +211,8 @@ def init_state(params, dcfg: DiLoCoConfig) -> StreamState:
         base=diloco.init_state(params, dcfg),
         pending=jax.tree.map(jnp.zeros_like, params),
         armed=jnp.zeros((P,), jnp.float32),
-        residual=residual)
+        residual=residual,
+        inflight=_init_inflight(params, dcfg))
 
 
 def quantize_with_feedback(d, res, dtype: str, *, mode: str = "ref"):
@@ -198,8 +272,10 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
         n_pods, axis = 1, None
     # packed wire: the sharded quantized transport ships real
     # codes+scales bytes, one coalesced all-gather per fragment
-    packed = (sharded and getattr(dcfg, "pack_wire", True)
-              and dcfg.outer_grad_dtype in ("bfloat16", "int4"))
+    packed = _packed_wire(dcfg)
+    # defer: issue the collective at the send, first consume its raw
+    # result at the apply τ steps later (see deferred_consume)
+    defer = deferred_consume(dcfg)
     k_loc = dcfg.k // n_pods
     sched = fragments.schedule(P, dcfg.H, dcfg.stream_tau)
     alpha = float(dcfg.stream_alpha)
@@ -253,6 +329,13 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
         pending = sstate.pending
         armed = sstate.armed
         residual = sstate.residual
+        if defer and sstate.inflight is None:
+            raise ValueError(
+                "deferred streaming round (quantized, tau>0) needs the "
+                "in-flight slot: build the state with "
+                "streaming.init_state under the same DiLoCoConfig")
+        inflight = (list(sstate.inflight) if sstate.inflight is not None
+                    else None)
         pos = 0
         seg_ms = []
         deltas_acc = (jax.tree.map(jnp.zeros_like, rp)
@@ -271,23 +354,23 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
         frag_regions = (fragments.fragment_regions(part, gp)
                         if packed else None)
 
-        def packed_send(frag, gp_, src_, residual_, pending_):
-            """One packed-wire fragment sync: per leaf region, quantize
-            the local band's delta (+ error-feedback residual) to the
-            real wire format (``kops.wire_encode``), concatenate every
-            region's buffer, issue ONE pod-axis all-gather of the
-            coalesced bytes, then dequantize and mask-reduce locally in
-            the simulated path's op order. Scale blocks are formed per
-            replica per region on the local shard (pod-local by
-            construction); residuals never touch the wire. Returns
-            (pending, residual)."""
+        def packed_issue(frag, gp_, src_, residual_):
+            """Issue one packed-wire fragment collective: per leaf
+            region, quantize the local band's delta (+ error-feedback
+            residual) to the real wire format (``kops.wire_encode``),
+            concatenate every region's buffer, and start ONE pod-axis
+            all-gather of the coalesced bytes. Scale blocks are formed
+            per replica per region on the local shard (pod-local by
+            construction); residuals never touch the wire. Returns the
+            RAW gathered (k, W) wire — undecoded, so the consumer can
+            run τ steps later — and the updated residual; (None,
+            residual) for an override-emptied fragment."""
             regs = frag_regions[frag]
             if not regs:          # override-emptied fragment: no wire
-                return pending_, residual_
+                return None, residual_
             gp_l, src_l = leaves(gp_), leaves(src_)
             res_l = (list(leaves(residual_))
                      if residual_ is not None else None)
-            pend_l = list(leaves(pending_))
             comm = (m_loc > 0)[:, None]
             wires, res_entries = [], []
             for r in regs:
@@ -311,23 +394,34 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
                         comm, d_r - local, res_r)))
             gathered = pod_collectives.gather_wire(
                 jnp.concatenate(wires, axis=1), axis=axis)
-            off = 0
-            for r in regs:
-                W = kops.wire_elems(r.elems, qdtype)
-                vals = jax.vmap(lambda w: kops.wire_decode(
-                    w, r.elems, qdtype, mode=kernel_mode))(
-                    gathered[:, off:off + W])
-                off += W
-                # the simulated transport's reduction op, verbatim
-                a = jnp.tensordot(m, vals, axes=(0, 0)) / denom
-                pend_l[r.leaf] = fragments.region_put(
-                    pend_l[r.leaf], r, a)
             for r, nres in res_entries:
                 res_l[r.leaf] = fragments.region_put(
                     res_l[r.leaf], r, nres, lead_axes=1)
             new_res = (jax.tree_util.tree_unflatten(treedef, res_l)
                        if res_l is not None else None)
-            return jax.tree_util.tree_unflatten(treedef, pend_l), new_res
+            return gathered, new_res
+
+        def packed_reduce(frag, gathered, m_r, denom_r, pending_):
+            """Consume one fragment's gathered wire: dequantize each
+            region and mask-reduce in the simulated path's op order,
+            writing the result into ``pending``. ``m_r``/``denom_r``
+            are the communication mask and its sum AT THE SEND (the
+            in-flight snapshot when deferred) so a wrapped fragment is
+            reduced with the round that produced it."""
+            regs = frag_regions[frag]
+            pend_l = list(leaves(pending_))
+            off = 0
+            for r in regs:
+                W = kops.wire_elems(r.elems, qdtype)
+                # the simulated transport's decode+reduce, verbatim
+                # (fused to one kernel launch under kernel_mode)
+                a = kops.wire_reduce(
+                    gathered[:, off:off + W], r.elems, qdtype,
+                    m_r, denom_r, mode=kernel_mode)
+                off += W
+                pend_l[r.leaf] = fragments.region_put(
+                    pend_l[r.leaf], r, a)
+            return jax.tree_util.tree_unflatten(treedef, pend_l)
 
         for steps, acts in sched.phases:
             if steps:
@@ -342,9 +436,19 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
                 mk_l = leaves(part.masks[ev.fragment])
                 act_l = leaf_active[ev.fragment]
                 if ev.kind == "send" and packed:
-                    pending, residual = packed_send(
+                    gathered, residual = packed_issue(
                         ev.fragment, gp,
-                        ist.master if mixed else rp, residual, pending)
+                        ist.master if mixed else rp, residual)
+                    if gathered is None:
+                        pass          # override-emptied fragment
+                    elif defer:
+                        # double-buffer: park the RAW wire + the mask
+                        # snapshot; the decode runs at the apply, τ
+                        # inner steps of dots from here
+                        inflight[ev.fragment] = (gathered, m)
+                    else:
+                        pending = packed_reduce(
+                            ev.fragment, gathered, m, denom, pending)
                     armed = armed.at[ev.fragment].set(1.0)
                 elif ev.kind == "send":
                     # snapshot Δ_i = θ_frag − θ_i,frag (master-vs-master
@@ -357,7 +461,7 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
                              else leaves(rp))
                     res_l = (leaves(residual) if residual is not None
                              else [None] * len(mk_l))
-                    new_pd, new_da, new_res = [], [], []
+                    new_pd, new_da, new_res, new_il = [], [], [], []
                     for on, q, g, r, pe, da, res in zip(
                             act_l, mk_l, leaves(gp), src_l,
                             leaves(pending), da_l, res_l):
@@ -365,6 +469,7 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
                             new_pd.append(pe)
                             new_da.append(da)
                             new_res.append(res)
+                            new_il.append(None)
                             continue
                         d = g[None] - r
                         if dcfg.prune_frac > 0:
@@ -393,19 +498,32 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
                                 lambda dd: kops.quant_roundtrip(
                                     dd, qdtype, mode=kernel_mode))(d)
                             new_res.append(res)
-                        if axis is not None:
-                            # THE cross-pod collective: psum for f32,
-                            # gather + local dequant-reduce for the
-                            # quantized wire (pod-local scale blocks)
-                            a = pod_collectives.fragment_mean(
-                                d, m, m_loc, denom, dtype=qdtype,
-                                axis=axis)
+                        if defer:
+                            # issue only: gather the stacked payload
+                            # (identity on the simulated transport) and
+                            # park it; the reduce runs at the apply
+                            new_il.append(
+                                pod_collectives.fragment_gather(
+                                    d, dtype=qdtype, axis=axis)
+                                if axis is not None else d)
+                            new_pd.append(pe)
                         else:
-                            a = (jnp.tensordot(m, d, axes=(0, 0))
-                                 / denom)
-                        new_pd.append(jnp.where(q > 0, a, pe))
+                            if axis is not None:
+                                # THE cross-pod collective: psum for
+                                # f32, gather + local dequant-reduce
+                                # for the quantized wire (pod-local
+                                # scale blocks)
+                                a = pod_collectives.fragment_mean(
+                                    d, m, m_loc, denom, dtype=qdtype,
+                                    axis=axis)
+                            else:
+                                a = (jnp.tensordot(m, d, axes=(0, 0))
+                                     / denom)
+                            new_pd.append(jnp.where(q > 0, a, pe))
                         if compute_cosine:
                             new_da.append(jnp.where(q > 0, d, da))
+                    if defer and any(x is not None for x in new_il):
+                        inflight[ev.fragment] = (tuple(new_il), m)
                     pending = jax.tree_util.tree_unflatten(treedef,
                                                            new_pd)
                     if residual is not None:
@@ -416,6 +534,45 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
                             treedef, new_da)
                     armed = armed.at[ev.fragment].set(1.0)
                 else:                                       # apply
+                    if defer and inflight[ev.fragment] is not None:
+                        # CONSUME: first use of the collective issued
+                        # τ inner steps ago — decode the raw payload
+                        # and mask-reduce with the mask snapshotted at
+                        # the send (a wrapped fragment crossed a round
+                        # boundary; this round's drop mask is not the
+                        # one that sent it)
+                        payload, m_snap = inflight[ev.fragment]
+                        # pin the consume AFTER the overlap window in
+                        # the schedule, not just the source: the decode
+                        # depends only on the gathered bytes, so
+                        # without this barrier the backend is free to
+                        # hoist it back next to the collective and
+                        # re-serialize the wire. Tying it to the
+                        # post-window replica params (an output of the
+                        # τ inner steps) makes "issued at the send,
+                        # consumed τ dots later" a dataflow fact the
+                        # lowered program order must honor (identity on
+                        # values; HLO-gated in hlo_analysis)
+                        payload = jax.lax.optimization_barrier(
+                            (payload, leaves(rp)[0]))[0]
+                        denom_snap = jnp.maximum(m_snap.sum(), 1e-9)
+                        if packed:
+                            pending = packed_reduce(
+                                ev.fragment, payload, m_snap,
+                                denom_snap, pending)
+                        else:
+                            pend_l = list(leaves(pending))
+                            for li, (on, q) in enumerate(
+                                    zip(act_l, mk_l)):
+                                if not on:
+                                    continue
+                                a = jnp.tensordot(
+                                    m_snap, payload[li],
+                                    axes=(0, 0)) / denom_snap
+                                pend_l[li] = jnp.where(q > 0, a,
+                                                       pend_l[li])
+                            pending = jax.tree_util.tree_unflatten(
+                                treedef, pend_l)
                     # fused-dispatch Nesterov (same math as
                     # outer_opt.update(kind="nesterov")) on the
                     # fragment's leaves only, latched on the first send
@@ -510,7 +667,9 @@ def make_stream_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
         if compute_cosine:
             cm, cs = diloco._pairwise_cosine(deltas_acc, m)
             om["cos_mean"], om["cos_std"] = cm, cs
-        return StreamState(new_base, pending, armed, residual), om
+        return StreamState(new_base, pending, armed, residual,
+                           tuple(inflight) if inflight is not None
+                           else None), om
 
     def round_body(sstate: StreamState, key, drop_mask=None,
                    active_mask=None, weights=None):
@@ -562,5 +721,9 @@ def sync_plan(params, dcfg: DiLoCoConfig) -> tuple:
                 kops.transport_bytes(int(e), dcfg.outer_grad_dtype,
                                      packed=packed) for e in regs)),
             "crosses_round": int(sched.apply_offsets[p]) > int(dcfg.H),
+            # True when the collective's raw result is first consumed
+            # at the apply (real issue/consume overlap) rather than
+            # decoded eagerly at the send
+            "deferred": deferred_consume(dcfg),
         })
     return tuple(plan)

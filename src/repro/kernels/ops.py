@@ -324,13 +324,19 @@ def wire_encode(x, dtype: str, *, mode: str = "auto"):
     x2d = _block_pad(x.reshape(-1).astype(jnp.float32), rows)
     use_kernel, interpret = _resolve(mode)
     if use_kernel:
-        codes, scales = _quant.quantize_int4(x2d, interpret=interpret)
-        local2d = _quant.dequantize_int4(codes, scales,
-                                         interpret=interpret)
+        # the fused sender pass: scale + codes + nibble-pack + local
+        # dequant in ONE kernel launch per region. A ragged tail (n not
+        # lane-pair-aligned) is handled by the zero-padded block layout:
+        # codes past n quantize to 0, so the ragged final byte's high
+        # nibble is 0 — byte-identical to ref.pack_int4's odd-tail pad
+        # (tested on the property grid).
+        packed2d, scales, local2d = _quant.quantize_pack_int4(
+            x2d, interpret=interpret)
+        code_bytes = packed2d.reshape(-1)[:-(-n // 2)]
     else:
         codes, scales = ref.quantize_int4(x2d)
         local2d = ref.dequantize_int4(codes, scales)
-    code_bytes = pack_int4(codes.reshape(-1)[:n], mode=mode)
+        code_bytes = ref.pack_int4(codes.reshape(-1)[:n])
     pad = (-code_bytes.shape[0]) % WIRE_ALIGN
     if pad:
         code_bytes = jnp.pad(code_bytes, (0, pad))
@@ -357,18 +363,57 @@ def wire_decode(wire, n_elems: int, dtype: str, *, mode: str = "auto"):
     rows = -(-n // QUANT_BLOCK)
     cb = -(-n // 2)
     pad = (-cb) % WIRE_ALIGN
-    codes = unpack_int4(
-        jax.lax.bitcast_convert_type(wire[:cb], jnp.int8), n, mode=mode)
+    use_kernel, interpret = _resolve(mode)
     scales = jax.lax.bitcast_convert_type(
         wire[cb + pad:].reshape(rows, 4), jnp.float32)
-    use_kernel, interpret = _resolve(mode)
-    c2d = _block_pad(codes, rows)
     if use_kernel:
-        vals = _quant.dequantize_int4(c2d, scales.reshape(rows, 1),
-                                      interpret=interpret)
+        # fused unpack+dequantize: ONE launch per region (padding wire
+        # bytes with zeros appends zero codes past n — sliced off)
+        half = QUANT_BLOCK // 2
+        p = jax.lax.bitcast_convert_type(wire[:cb], jnp.int8)
+        if cb != rows * half:
+            p = jnp.pad(p, (0, rows * half - cb))
+        vals = _quant.unpack_dequantize_int4(
+            p.reshape(rows, half), scales.reshape(rows, 1),
+            interpret=interpret)
     else:
-        vals = ref.dequantize_int4(c2d, scales.reshape(rows, 1))
+        codes = ref.unpack_int4(
+            jax.lax.bitcast_convert_type(wire[:cb], jnp.int8), n)
+        vals = ref.dequantize_int4(_block_pad(codes, rows),
+                                   scales.reshape(rows, 1))
     return vals.reshape(-1)[:n]
+
+
+def wire_reduce(gathered, n_elems: int, dtype: str, m, denom, *,
+                mode: str = "auto"):
+    """Consume one region's GATHERED wire: decode every replica's
+    buffer and mask-reduce to the transported mean — the deferred
+    streaming round's apply-side op (``tensordot(m, decoded) / denom``,
+    the simulated transport's reduction verbatim on the ref path).
+    gathered: (k, W) wire buffers in replica order; m: (k,) mask;
+    denom: the mask sum. int4 under a kernel mode runs the fused
+    unpack+dequantize+reduce consumer — decode and reduction in ONE
+    kernel launch instead of per-replica unpack/dequant pairs."""
+    use_kernel, interpret = _resolve(mode)
+    if dtype == "int4" and use_kernel:
+        n = int(n_elems)
+        rows = -(-n // QUANT_BLOCK)
+        cb = -(-n // 2)
+        pad = (-cb) % WIRE_ALIGN
+        half = QUANT_BLOCK // 2
+        k = gathered.shape[0]
+        p = jax.lax.bitcast_convert_type(gathered[:, :cb], jnp.int8)
+        if cb != rows * half:
+            p = jnp.pad(p, ((0, 0), (0, rows * half - cb)))
+        scales = jax.lax.bitcast_convert_type(
+            gathered[:, cb + pad:].reshape(k, rows, 4), jnp.float32)
+        red = _quant.unpack_dequantize_reduce(
+            p.reshape(k, rows, half), scales.reshape(k, rows, 1),
+            m, interpret=interpret)
+        return red.reshape(-1)[:n] / denom
+    vals = jax.vmap(
+        lambda w: wire_decode(w, n_elems, dtype, mode=mode))(gathered)
+    return jnp.tensordot(m, vals, axes=(0, 0)) / denom
 
 
 # ---------------------------------------------------------------------------

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 NEG_INF = -1e30
 
@@ -126,6 +127,13 @@ def sign_prune(x, frac: float):
 # ---------------------------------------------------------------------------
 
 INT4_LEVELS = 7.0          # symmetric int4: codes in [-7, 7]
+# scale = amax × this constant, NOT amax / 7: XLA strength-reduces a
+# divide-by-constant into a reciprocal multiply in some compilation
+# contexts (jit bodies) but not others (interpret-mode kernels), a
+# 1-ulp divergence that would break the oracle-bitwise-equal contract
+# between this reference and kernels/quantize.py. One pre-rounded f32
+# reciprocal multiplied identically everywhere is rewrite-proof.
+INV_INT4_LEVELS = float(np.float32(1.0 / INT4_LEVELS))
 
 
 def quantize_int4(x):
@@ -135,7 +143,7 @@ def quantize_int4(x):
     scales (R, 1) f32). All-zero blocks get scale 0 and codes 0."""
     xf = x.astype(jnp.float32)
     amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
-    scale = amax / INT4_LEVELS
+    scale = amax * INV_INT4_LEVELS
     q = jnp.round(xf / jnp.where(scale > 0, scale, 1.0))
     q = jnp.clip(q, -INT4_LEVELS, INT4_LEVELS).astype(jnp.int8)
     return q, scale
@@ -165,6 +173,39 @@ def unpack_int4(packed, n: int):
     p = packed.astype(jnp.int32) & 0xFF
     nib = jnp.stack([p & 0xF, (p >> 4) & 0xF], axis=-1).reshape(-1)[:n]
     return ((nib ^ 8) - 8).astype(jnp.int8)
+
+
+def quantize_pack_int4(x):
+    """Oracle for the fused quantize+nibble-pack kernel: (R, 128) f32
+    blocks -> (packed (R, 64) int8 wire bytes, scales (R, 1) f32,
+    local (R, 128) f32 dequantized sender payload) — the exact
+    composition quantize_int4 → pack_int4 → dequantize_int4, so the
+    one-pass kernel is verified bitwise against the multi-pass path."""
+    codes, scales = quantize_int4(x)
+    rows, cols = codes.shape
+    packed = pack_int4(codes.reshape(-1)).reshape(rows, cols // 2)
+    return packed, scales, dequantize_int4(codes, scales)
+
+
+def unpack_dequantize_int4(packed, scales):
+    """Oracle for the fused unpack+dequantize consumer: (R, 64) int8
+    wire bytes × (R, 1) f32 scales -> (R, 128) f32 values — the exact
+    composition unpack_int4 → dequantize_int4."""
+    rows, cols = packed.shape
+    codes = unpack_int4(packed.reshape(-1),
+                        rows * cols * 2).reshape(rows, cols * 2)
+    return dequantize_int4(codes, scales)
+
+
+def unpack_dequantize_reduce(packed, scales, m):
+    """Oracle for the fused unpack+dequantize+reduce consumer: decode
+    every replica's wire blocks and mask-combine them in one pass.
+    packed (k, R, 64) int8, scales (k, R, 1) f32, m (k,) f32 ->
+    (R, 128) f32 = Σ_k m_k · codes_k · scale_k (the caller divides by
+    the mask sum). The reduction is the elementwise masked sum over the
+    leading replica axis — the same accumulation the kernel runs."""
+    vals = jax.vmap(unpack_dequantize_int4)(packed, scales)
+    return jnp.sum(m.reshape(-1, 1, 1) * vals, axis=0)
 
 
 def fake_quant(x, dtype: str):

@@ -246,6 +246,7 @@ def build_outer_step(arch: Arch, cfg, k: int, *,
 STREAM_FRAGMENTS = 2
 STREAM_H = 4
 STREAM_ROUNDS = 2
+STREAM_TAU = 0
 
 
 def build_stream_run(arch: Arch, cfg, *, k: int, mesh, batch: int,
@@ -253,7 +254,8 @@ def build_stream_run(arch: Arch, cfg, *, k: int, mesh, batch: int,
                      H_inner: int = STREAM_H,
                      rounds: int = STREAM_ROUNDS,
                      kernel_mode: str = "auto",
-                     wire_dtype: str = "float32"):
+                     wire_dtype: str = "float32",
+                     tau: int = STREAM_TAU):
     """The sharded streaming DiLoCo round on the multi-pod mesh: the
     scanned ``make_run`` driver with ``transport="sharded"`` — inner
     steps are pod-local shard_map compute and every fragment's outer
@@ -261,16 +263,21 @@ def build_stream_run(arch: Arch, cfg, *, k: int, mesh, batch: int,
     ``wire_dtype`` selects the transport precision: quantized dtypes
     lower the PACKED wire (one coalesced codes+scales all-gather per
     fragment) so the dry-run's collective bytes are the real ones.
+    ``tau`` opens the issue→consume window: with ``tau > 0`` and a
+    quantized wire each fragment's gather is issued at its snapshot
+    offset and consumed τ inner steps later through the in-flight
+    carry slot (core/streaming.deferred_consume).
     Returns (jitted_run, abstract_state, abstract_key). The HLO is
     checked for the paper's overlap structure via
-    ``hlo_analysis.stream_interleaving``."""
+    ``hlo_analysis.stream_interleaving`` (optimized text) and
+    ``hlo_analysis.stream_overlap`` (pre-optimization text)."""
     from repro.configs.base import DiLoCoConfig, TrainConfig
     from repro.core import diloco as core_diloco
     from repro.core import streaming as core_streaming
 
     dcfg = DiLoCoConfig(k=k, H=H_inner, streaming_fragments=fragments_,
                         transport="sharded", kernel_mode=kernel_mode,
-                        outer_grad_dtype=wire_dtype)
+                        outer_grad_dtype=wire_dtype, stream_tau=tau)
     total = rounds * H_inner
     tcfg = TrainConfig(total_steps=total, warmup_steps=1,
                        batch_size=batch, seq_len=seq_len,
@@ -395,7 +402,8 @@ def dryrun_pair(arch_name: str, shape_name: str, *, multi_pod: bool,
                 fns: tuple = ("main",), mesh=None,
                 variant: dict | None = None,
                 kernel_mode: str = "auto",
-                stream_wire: str = "float32") -> list[dict]:
+                stream_wire: str = "float32",
+                stream_tau: int = STREAM_TAU) -> list[dict]:
     """Lower+compile the pair; returns one record per lowered fn.
 
     ``variant`` (perf hillclimbing; recorded in each record):
@@ -501,6 +509,19 @@ def dryrun_pair(arch_name: str, shape_name: str, *, multi_pod: bool,
                 kk: vv for kk, vv in H.stream_interleaving(
                     compiled.as_text(), chips_per_pod=cpp).items()
                 if kk != "events"}
+            # issue→consume separation of each wire collective,
+            # measured on the pre-optimization lowering where emission
+            # order survives as instruction ids (deferred wires only
+            # appear with --stream-tau > 0 and a quantized wire)
+            try:
+                rec["stream_overlap"] = {
+                    kk: vv for kk, vv in H.stream_overlap(
+                        lowered.compiler_ir("hlo").as_hlo_text(),
+                        chips_per_pod=cpp,
+                        tau=stream_tau or None).items()
+                    if kk != "rows"}
+            except Exception as e:  # pragma: no cover
+                rec["stream_overlap"] = {"error": str(e)}
         rec["roofline"]["model_flops_ratio"] = (
             mf / rec["flops"] if rec["flops"] else 0.0)
         rec["compile_s"] = round(time.time() - t0, 1)
@@ -577,10 +598,11 @@ def dryrun_pair(arch_name: str, shape_name: str, *, multi_pod: bool,
                         arch, cfg, k=k, mesh=mesh,
                         batch=max(1, tok_shape[0] // k),
                         seq_len=shape.seq_len, kernel_mode=kernel_mode,
-                        wire_dtype=stream_wire)
+                        wire_dtype=stream_wire, tau=stream_tau)
                     rec = record("diloco_stream_round", srun,
                                  (sstate, skey))
                     rec["stream_wire"] = stream_wire
+                    rec["stream_tau"] = stream_tau
                 if "gossip" in fns:
                     # barrier-free tier: one pairwise exchange, pod-
                     # permutation collective only (no all-pod reduce)
@@ -681,6 +703,13 @@ def main():
                          "round: quantized dtypes lower the packed "
                          "wire (coalesced codes+scales all-gathers), "
                          "so the analyzed cross-pod bytes are real")
+    ap.add_argument("--stream-tau", type=int, default=STREAM_TAU,
+                    help="issue→consume window of the --fns stream "
+                         "round: with tau > 0 and a quantized "
+                         "--stream-wire each fragment's gather is "
+                         "issued at its snapshot offset and consumed "
+                         "tau inner steps later (the overlap stats "
+                         "report the measured separation)")
     ap.add_argument("--out", default="")
     ap.add_argument("--manifest", default="",
                     help="write the static HLO wire profile (collective "
@@ -700,7 +729,8 @@ def main():
                                    variant=json.loads(args.variant)
                                    if args.variant else None,
                                    kernel_mode=args.kernel_mode,
-                                   stream_wire=args.stream_wire)
+                                   stream_wire=args.stream_wire,
+                                   stream_tau=args.stream_tau)
             except Exception as e:
                 recs = [{"arch": a, "shape": s,
                          "multi_pod": args.multi_pod,
@@ -717,6 +747,19 @@ def main():
                       flush=True)
                 if "error" in r:
                     print("   ", r["error"], flush=True)
+                elif "stream_overlap" in r:
+                    st = r.get("stream_interleaving", {})
+                    ov = r["stream_overlap"]
+                    print(f"    stream: "
+                          f"{st.get('pod_all_reduces', 0)} pod syncs, "
+                          f"{st.get('syncs_with_compute_after', 0)} with "
+                          f"compute after; overlap: "
+                          f"{ov.get('n_deferred', 0)} deferred wires, "
+                          f"min {ov.get('min_steps_between', 0)} steps / "
+                          f"{ov.get('min_dots_between', 0)} dots "
+                          f"issue->consume"
+                          + (f" (tau={ov['tau']} ok={ov['ok']})"
+                             if "ok" in ov else ""), flush=True)
             out.extend(recs)
     if args.out:
         with open(args.out, "w") as f:

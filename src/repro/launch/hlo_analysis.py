@@ -111,12 +111,14 @@ _CONST_RE = re.compile(r"=\s+s32\[\]\s+constant\((\d+)\)")
 
 def _split_computations(hlo_text: str) -> dict:
     """name -> body text. Computations start at column 0 with
-    `%name (...` or `ENTRY %name (...` and end at a column-0 `}`."""
+    `%name (...` / `ENTRY %name (...` (optimized text) or the bare
+    `name {` / `ENTRY name {` of pre-optimization HLO dumps
+    (``lowered.compiler_ir("hlo")``), and end at a column-0 `}`."""
     comps = {}
     name, buf = None, []
     for line in hlo_text.splitlines():
         if line and not line[0].isspace():
-            m = re.match(r"(?:ENTRY\s+)?%([\w.\-]+)\s*\(", line)
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*[({]", line)
             if m and line.rstrip().endswith("{"):
                 name, buf = m.group(1), []
                 comps[name] = buf
@@ -420,6 +422,281 @@ def stream_interleaving(hlo_text: str, *, chips_per_pod: int | None
             "events": best_events}
 
 
+# ---------------------------------------------------------------------------
+# issue/consume overlap measurement (pre-optimization HLO)
+#
+# The deferred streaming transport ISSUES each fragment's gather at its
+# send offset and CONSUMES it (decode + reduce, behind an
+# opt-barrier tied to the post-window replica params) τ inner steps
+# later. Pre-optimization HLO preserves that emission order in its
+# instruction ids (creation order), so the separation is measurable:
+# count the trip-weighted inner-step dots of the while loops whose ids
+# fall between a collective's issue and the opt-barrier that consumes
+# it. Backends erase the barrier late (OptimizationBarrierExpander), so
+# the gate runs on `lowered.compiler_ir("hlo").as_hlo_text()` — the
+# program we emit — while stream_interleaving keeps gating the
+# optimized schedule (zero collectives inside inner loops).
+# ---------------------------------------------------------------------------
+
+_PLUMBING_OPS = frozenset((
+    "tuple", "get-tuple-element", "convert", "bitcast", "bitcast-convert",
+    "reshape", "copy", "transpose", "broadcast"))
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_NAME_RE = re.compile(r"%?([A-Za-z_][\w.\-]*)")
+
+
+def _instr_id(name: str) -> int:
+    tail = name.rsplit(".", 1)[-1]
+    return int(tail) if tail.isdigit() else -1
+
+
+def _parse_instructions(body: str) -> dict:
+    """name -> {id, opcode, operands, type, line, root} for one
+    computation body. Operand lists in pre-optimization HLO are bare
+    instruction names; attrs after the closing paren are kept on
+    ``line`` for group/shape inspection."""
+    out = {}
+    for raw in body.splitlines():
+        line = _COMMENT_RE.sub("", raw).strip()
+        root = line.startswith("ROOT ")
+        if root:
+            line = line[5:]
+        if " = " not in line:
+            continue
+        lhs, rhs = line.split(" = ", 1)
+        name = lhs.strip().lstrip("%")
+        rhs = rhs.strip()
+        if rhs.startswith("("):           # tuple-typed result
+            depth, i = 0, 0
+            for i, ch in enumerate(rhs):
+                depth += (ch == "(") - (ch == ")")
+                if depth == 0:
+                    break
+            typ, rest = rhs[:i + 1], rhs[i + 1:]
+        else:
+            cut = rhs.find(" ")
+            if cut < 0:
+                continue
+            typ, rest = rhs[:cut], rhs[cut:]
+        m = re.match(r"\s*([a-z][\w\-]*)\(", rest)
+        if not m:
+            continue
+        op = m.group(1)
+        ostr = rest[m.end():rest.find(")", m.end())]
+        operands = [n for n in _NAME_RE.findall(ostr)]
+        out[name] = {"id": _instr_id(name), "opcode": op, "type": typ,
+                     "operands": operands, "line": raw, "root": root}
+    return out
+
+
+def _while_trips(comps: dict) -> dict:
+    """while body-computation name -> trip count (lax.scan conds
+    compare the counter against a scalar literal; default 1)."""
+    trips = {}
+    for body in comps.values():
+        for m in _WHILE_RE.finditer(body):
+            cond, wbody = m.group(1), m.group(2)
+            consts = [int(c) for c in _CONST_RE.findall(
+                comps.get(cond, ""))]
+            trips[wbody] = max(consts) if consts else 1
+    return trips
+
+
+def _dot_counts(comps: dict, trips: dict) -> dict:
+    """name -> trip-weighted dot/convolution count of the computation,
+    including everything it calls (nested scan bodies multiply by
+    their trip counts)."""
+    callees = {name: _callees(body) for name, body in comps.items()}
+    memo: dict = {}
+
+    def visit(name, stack):
+        if name in memo:
+            return memo[name]
+        if name in stack:
+            return 0
+        body = comps.get(name, "")
+        n = len(_DOT_RE.findall(body))
+        for c in callees.get(name, ()):
+            n += trips.get(c, 1) * visit(c, stack | {name})
+        memo[name] = n
+        return n
+
+    for name in comps:
+        visit(name, frozenset())
+    return memo
+
+
+def stream_overlap(hlo_text: str, *, chips_per_pod: int | None,
+                   tau: int | None = None) -> dict:
+    """Per-collective issue→consume separation of the streaming round,
+    measured on PRE-optimization HLO text (``lowered.compiler_ir("hlo")
+    .as_hlo_text()`` — emission order survives there as instruction
+    ids; optimized text loses the opt-barriers that pin the consume).
+
+    Picks the computation with the most pod-crossing sync collectives
+    (the scanned round body) and reports one row per such collective:
+
+    - ``issue_id``       instruction id of the gather/all-reduce
+    - ``consume_id``     id of its first non-plumbing consumer (the
+                         opt-barrier for deferred transports, the
+                         reduce itself for eager ones); None when the
+                         wire is consumed only by the ROOT carry
+    - ``wrapped``        True when the wire flows out through the
+                         carry and is consumed next round (matched to
+                         a parameter-fed opt-barrier by wire type)
+    - ``steps_between``  trip-weighted inner steps (dot-containing
+                         whiles) emitted between issue and consume —
+                         for wrapped rows, body-tail steps after the
+                         issue plus next-round head steps before the
+                         carry consume
+    - ``dots_between``   same window, counted in dot ops
+
+    Summary keys: ``min_steps_between`` / ``min_dots_between`` over
+    all rows, ``n_collectives``, ``n_barriers``, and — when ``tau`` is
+    given — ``ok`` (every row's steps_between >= tau).
+    """
+    comps = _split_computations(hlo_text)
+    trips = _while_trips(comps)
+    dotc = _dot_counts(comps, trips)
+
+    # the round body: most pod-crossing sync collectives
+    best_name, best_n = None, -1
+    for name, body in comps.items():
+        if name == "__entry__":
+            continue
+        n = sum(1 for ln in body.splitlines()
+                if _crossing_collective(ln, chips_per_pod))
+        if n > best_n:
+            best_name, best_n = name, n
+    instrs = _parse_instructions(comps.get(best_name, ""))
+
+    syncs = {n: i for n, i in instrs.items()
+             if _crossing_collective(i["line"], chips_per_pod)}
+    barriers = {n: i for n, i in instrs.items()
+                if i["opcode"] == "opt-barrier"}
+
+    # inner-step windows: dot-containing whiles in the round body,
+    # keyed by instruction id
+    whiles = []
+    for n, i in instrs.items():
+        if i["opcode"] != "while":
+            continue
+        m = _WHILE_RE.search(i["line"])
+        if not m:
+            continue
+        wbody = m.group(2)
+        dots = dotc.get(wbody, 0)
+        if dots > 0:
+            t = trips.get(wbody, 1)
+            whiles.append({"id": i["id"], "steps": t, "dots": t * dots})
+    whiles.sort(key=lambda w: w["id"])
+
+    def window(lo, hi):
+        sel = [w for w in whiles if lo < w["id"] < hi]
+        return (sum(w["steps"] for w in sel),
+                sum(w["dots"] for w in sel))
+
+    # barrier -> wire sources (collectives or carry parameters),
+    # resolved through plumbing ops
+    def sources(start_ops):
+        seen, coll, params = set(), [], []
+        stack = [o for o in start_ops]
+        while stack:
+            nm = stack.pop()
+            if nm in seen or nm not in instrs:
+                continue
+            seen.add(nm)
+            i = instrs[nm]
+            if nm in syncs:
+                coll.append(nm)
+            elif i["opcode"] == "parameter":
+                params.append(nm)
+            elif i["opcode"] in _PLUMBING_OPS:
+                stack.extend(i["operands"])
+        return coll, params
+
+    consumed_by = {}          # sync name -> barrier instr
+    carry_barriers = []       # (barrier instr, param wire type)
+    for bn, b in barriers.items():
+        coll, params = sources(b["operands"])
+        for cn in coll:
+            consumed_by[cn] = b
+        for pn in params:
+            carry_barriers.append((b, instrs[pn]["type"]))
+
+    # forward users, for eager consumes and wrapped detection
+    users: dict = {}
+    for n, i in instrs.items():
+        for o in i["operands"]:
+            users.setdefault(o, []).append(n)
+
+    def first_consumer(nm):
+        """Min-id non-plumbing user reached through plumbing (ROOT
+        plumbing is terminal: the value left via the carry)."""
+        seen, best = set(), None
+        stack = [nm]
+        while stack:
+            cur = stack.pop()
+            for un in users.get(cur, ()):
+                if un in seen or un not in instrs:
+                    continue
+                seen.add(un)
+                u = instrs[un]
+                if u["opcode"] in _PLUMBING_OPS and un not in barriers:
+                    if not u["root"]:
+                        stack.append(un)
+                elif best is None or u["id"] < best:
+                    best = u["id"]
+        return best
+
+    rows = []
+    for sn, s in sorted(syncs.items(), key=lambda kv: kv[1]["id"]):
+        row = {"collective": sn, "issue_id": s["id"],
+               "op": (_OP_RE.search(s["line"]) or [None, None, "?"])[2]}
+        b = consumed_by.get(sn)
+        cid = b["id"] if b is not None else first_consumer(sn)
+        if cid is not None and cid > s["id"]:
+            steps, dots = window(s["id"], cid)
+            row.update(consume_id=cid, wrapped=False,
+                       deferred=b is not None,
+                       steps_between=steps, dots_between=dots)
+        else:
+            # wire leaves through the carry; pair with the
+            # parameter-fed barrier of the same wire type to measure
+            # the cyclic window (body tail + next-round head)
+            tail_s, tail_d = window(s["id"], float("inf"))
+            head_s = head_d = 0
+            cb = next((b_ for b_, t in carry_barriers
+                       if t == s["type"]), None)
+            if cb is None and carry_barriers:
+                cb = carry_barriers[0][0]
+            if cb is not None:
+                head_s, head_d = window(-1, cb["id"])
+            row.update(consume_id=cb["id"] if cb is not None else None,
+                       wrapped=True, deferred=cb is not None,
+                       steps_between=tail_s + head_s,
+                       dots_between=tail_d + head_d)
+        rows.append(row)
+
+    # the overlap claim covers the WIRE collectives — the ones pinned
+    # behind an opt-barrier consume (or wrapped through the carry).
+    # Eager metric reductions (scalar loss/telemetry psums at round
+    # end) are consumed in place by design and stay out of the gate.
+    wire = [r for r in rows if r["deferred"]]
+    out = {"computation": best_name, "rows": rows,
+           "n_collectives": len(rows), "n_barriers": len(barriers),
+           "n_deferred": len(wire),
+           "min_steps_between": min(
+               (r["steps_between"] for r in wire), default=0),
+           "min_dots_between": min(
+               (r["dots_between"] for r in wire), default=0)}
+    if tau is not None:
+        out["tau"] = int(tau)
+        out["ok"] = bool(wire) and all(
+            r["steps_between"] >= tau for r in wire)
+    return out
+
+
 def memory_items(compiled) -> dict:
     """Compiled-memory analysis of an AOT-compiled function: argument /
     output / temp / generated-code sizes in bytes, plus the donation
@@ -463,7 +740,8 @@ def cost_items(compiled) -> tuple[float, float]:
 
 
 def wire_profile(hlo_text: str, *, chips_per_pod: int | None = None,
-                 interleaving: bool = True) -> dict:
+                 interleaving: bool = True, unopt_text: str | None = None,
+                 tau: int | None = None) -> dict:
     """Manifest-ready wire profile of one lowered program: the
     collective byte totals (by op, pod-crossing split) plus the
     schedule-structure interleaving stats — the static HLO record a
@@ -471,7 +749,10 @@ def wire_profile(hlo_text: str, *, chips_per_pod: int | None = None,
     (``obs.metrics.RunRecorder.attach_hlo_profile``), so the trace's
     byte annotations can be audited against what the compiled program
     REALLY gathers. ``interleaving`` False skips the schedule walk
-    (meaningless for programs with no pod-crossing collective)."""
+    (meaningless for programs with no pod-crossing collective).
+    ``unopt_text`` (pre-optimization HLO from the same lowering) adds
+    the issue/consume ``overlap`` section measured by
+    ``stream_overlap``."""
     prof = {"chips_per_pod": chips_per_pod,
             "collectives": collective_stats(
                 hlo_text, chips_per_pod=chips_per_pod).as_dict()}
@@ -484,4 +765,7 @@ def wire_profile(hlo_text: str, *, chips_per_pod: int | None = None,
                                  "compute_events",
                                  "syncs_with_compute_after",
                                  "syncs_inside_compute")}
+    if unopt_text is not None:
+        prof["overlap"] = stream_overlap(
+            unopt_text, chips_per_pod=chips_per_pod, tau=tau)
     return prof

@@ -447,12 +447,37 @@ def run(args, recorder=None):
              f"entropy floor = {sampler.entropy_floor():.4f} "
              f"(ppl {np.exp(sampler.entropy_floor()):.2f})")
     if args.trace:
+        overlap = None
+        if mesh is not None and plan \
+                and any(row.get("deferred") for row in plan):
+            # deferred sharded transport: overlay the MEASURED
+            # issue→consume offsets on the fragment lanes. A dedicated
+            # rounds_per_call=1 lowering (no compile — stream_overlap
+            # reads the pre-optimization text) keeps the per-round
+            # offsets exact regardless of the chunking above.
+            from repro.core import pod_collectives as _pc
+            from repro.launch import hlo_analysis as _hlo
+            run1 = diloco.make_run(
+                loss_fn, sampler.sample_all_shards, dcfg, tcfg,
+                rounds_per_call=1, total_steps=tcfg.total_steps,
+                batch_size=args.batch, seq_len=args.seq,
+                donate=False, mesh=mesh)
+            overlap = _hlo.stream_overlap(
+                run1.lower(state, key).compiler_ir("hlo")
+                .as_hlo_text(),
+                chips_per_pod=jax.device_count() // _pc.pods_of(mesh),
+                tau=dcfg.stream_tau)
+            rec.note(
+                f"overlap (HLO-measured): {overlap['n_deferred']} "
+                f"deferred wires, min {overlap['min_steps_between']} "
+                f"steps / {overlap['min_dots_between']} dots "
+                f"issue->consume (tau={dcfg.stream_tau})")
         tb = obs_trace.round_trace(
             transport=args.transport, k=args.k, rounds=args.rounds,
             H=args.H, scenario=scen, drops=np.asarray(drops),
             acts=np.asarray(acts), history=rec.round_records(),
             plan=plan, wire_bytes=round_wire,
-            gossip_rounds=gossip_rounds)
+            gossip_rounds=gossip_rounds, overlap=overlap)
         tb.write(args.trace, other_data={"manifest": rec.manifest})
         rec.note(f"trace: {args.trace}")
     if args.out:

@@ -191,7 +191,7 @@ def async_trace(scenario: faults.Scenario, k: int, ticks: int, *,
 def round_trace(*, transport: str, k: int, rounds: int, H: int,
                 scenario: faults.Scenario | None = None, drops=None,
                 acts=None, history=(), plan=(), wire_bytes=None,
-                gossip_rounds=()) -> TraceBuilder:
+                gossip_rounds=(), overlap=None) -> TraceBuilder:
     """Trace of a barrier-paced run. Round r spans the tick window
     [r·T, (r+1)·T) with T = ``sync_round_ticks`` (1 under no
     scenario); each active worker's inner compute covers its own speed
@@ -202,7 +202,10 @@ def round_trace(*, transport: str, k: int, rounds: int, H: int,
     boundary draws its in-flight gather through the barrier, the
     overlap the schedule exists to create. ``gossip_rounds``
     ({"round", "fragment", "edges"} rows) draws the realized pairwise
-    exchanges."""
+    exchanges. ``overlap`` (``hlo_analysis.stream_overlap`` output)
+    overlays the MEASURED issue→consume separation from the lowered
+    HLO onto each fragment lane — the scheduled gather span plus a
+    "consume (measured)" marker at the HLO-observed offset."""
     scenario = scenario or faults.Scenario.uniform(k)
     speeds = scenario.resolved_speeds(k)
     lat = scenario.resolved_latency(k)
@@ -242,7 +245,7 @@ def round_trace(*, transport: str, k: int, rounds: int, H: int,
         _preempt_spans(tb, acts, k, rounds, T)
     if plan:
         _fragment_lanes(tb, plan, k=k, rounds=rounds, H=H, T=T,
-                        smax=smax)
+                        smax=smax, overlap=overlap)
     for g in gossip_rounds:
         for i, j in g.get("edges", ()):
             lo = g["round"] * T
@@ -271,11 +274,22 @@ def _preempt_spans(tb: TraceBuilder, acts, k: int, rounds: int, T: int):
 
 
 def _fragment_lanes(tb: TraceBuilder, plan, *, k: int, rounds: int,
-                    H: int, T: int, smax: int):
+                    H: int, T: int, smax: int, overlap=None):
     tb.process(PID_FRAGMENTS, "fragments")
     for row in plan:
         tb.thread(PID_FRAGMENTS, row["fragment"],
                   f"fragment {row['fragment']}")
+    # measured issue→consume rows from the lowered HLO, matched to
+    # schedule rows by issue order: deferred wire collectives are
+    # emitted in send_step order (the wrapped fragment sends at H,
+    # last), so sorting both sides aligns fragment ↔ collective
+    measured = {}
+    if overlap:
+        wire = sorted((m for m in overlap.get("rows", ())
+                       if m.get("deferred")),
+                      key=lambda m: m["issue_id"])
+        frags = sorted(plan, key=lambda row: row["send_step"])
+        measured = {row["fragment"]: m for row, m in zip(frags, wire)}
     for r in range(rounds):
         lo = r * T
         for row in plan:
@@ -286,13 +300,29 @@ def _fragment_lanes(tb: TraceBuilder, plan, *, k: int, rounds: int,
                        else lo + T + (a - H) / H * smax)
             tb.instant("snapshot", pid=PID_FRAGMENTS, tid=p,
                        tick=send_t, args={"round": r + 1})
+            args = {"round": r + 1, "fragment": p,
+                    "delivered": True,
+                    "wire_bytes": float(row["wire_bytes"]),
+                    "elems": row.get("elems"),
+                    "crosses_round": bool(a > H)}
+            m = measured.get(p)
+            if m is not None:
+                args.update(
+                    hlo_issue_id=m["issue_id"],
+                    hlo_consume_id=m["consume_id"],
+                    measured_steps_between=m["steps_between"],
+                    measured_dots_between=m["dots_between"],
+                    wrapped=bool(m["wrapped"]))
             tb.span("gather (in flight)", pid=PID_FRAGMENTS, tid=p,
                     start=send_t, dur=apply_t - send_t, cat="wire",
+                    args=args)
+            if m is not None:
+                tb.instant(
+                    "consume (measured)", pid=PID_FRAGMENTS, tid=p,
+                    tick=send_t + m["steps_between"] / H * smax,
                     args={"round": r + 1, "fragment": p,
-                          "delivered": True,
-                          "wire_bytes": float(row["wire_bytes"]),
-                          "elems": row.get("elems"),
-                          "crosses_round": bool(a > H)})
+                          "steps_after_issue": m["steps_between"],
+                          "dots_after_issue": m["dots_between"]})
             tb.instant("merge", pid=PID_FRAGMENTS, tid=p, tick=apply_t,
                        args={"round": r + 1, "fragment": p})
 

@@ -132,6 +132,59 @@ def _assert_state_bitwise(a, b):
         np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
 
 
+def _assert_states_quant_close(sim_st, sh_st, params, kw, *, dt,
+                               rtol=5e-3, atol=5e-3):
+    """Compare a simulated vs sharded StreamState within quant error.
+
+    The deferred in-flight slot (quantized, τ>0) holds each transport's
+    own RAW representation — the packed byte wire on the packed sharded
+    transport, the stacked f32 payload elsewhere — so it is compared
+    through its DECODED per-replica values rather than leaf-by-leaf:
+    the last round's wrapped send is still in flight at the state
+    boundary, and this checks the sharded wire decodes to the simulated
+    payload (every earlier send is covered via pending/params once its
+    apply consumed it)."""
+    for la, lb in zip(jax.tree.leaves(sim_st._replace(inflight=None)),
+                      jax.tree.leaves(sh_st._replace(inflight=None))):
+        np.testing.assert_allclose(np.asarray(la, np.float32),
+                                   np.asarray(lb, np.float32),
+                                   rtol=rtol, atol=atol)
+    if sim_st.inflight is None:
+        assert sh_st.inflight is None
+        return
+    P = kw["streaming_fragments"]
+    part = fragments.partition_params(params, P)
+    regs = fragments.fragment_regions(part, params)
+    leaves = jax.tree_util.tree_leaves
+    for p, (es, eh) in enumerate(zip(sim_st.inflight,
+                                     sh_st.inflight)):
+        if es is None and eh is None:
+            continue
+        np.testing.assert_array_equal(np.asarray(es[1]),
+                                      np.asarray(eh[1]))  # mask snap
+        sim_payload = es[0]
+        if kw.get("pack_wire", True):
+            wire = np.asarray(eh[0])
+            off = 0
+            for r in regs[p]:
+                W = kops.wire_elems(r.elems, dt)
+                dec = np.stack([np.asarray(kops.wire_decode(
+                    jnp.asarray(w), r.elems, dt, mode="ref"))
+                    for w in wire[:, off:off + W]])
+                off += W
+                ref_vals = np.asarray(fragments.region_take(
+                    sim_payload[r.leaf], r, lead_axes=1))
+                np.testing.assert_allclose(dec, ref_vals,
+                                           rtol=rtol, atol=atol)
+        else:
+            for ls, lh in zip(sim_payload, eh[0]):
+                assert (ls is None) == (lh is None)
+                if ls is not None:
+                    np.testing.assert_allclose(
+                        np.asarray(ls), np.asarray(lh),
+                        rtol=rtol, atol=atol)
+
+
 # ---------------------------------------------------------------------------
 # equivalence: sharded ≡ simulated
 # ---------------------------------------------------------------------------
@@ -178,10 +231,7 @@ def test_sharded_quantized_within_quant_error(setup, dt):
               stream_alpha=0.5, outer_grad_dtype=dt, error_feedback=True)
     sim, sh = _run_pair(loss_fn, params, kw, _tcfg(R), pods=pods, R=R,
                         drops=drops, acts=acts)
-    for la, lb in zip(jax.tree.leaves(sim[0]), jax.tree.leaves(sh[0])):
-        np.testing.assert_allclose(np.asarray(la, np.float32),
-                                   np.asarray(lb, np.float32),
-                                   rtol=5e-3, atol=5e-3)
+    _assert_states_quant_close(sim[0], sh[0], params, kw, dt=dt)
     assert np.isfinite(np.asarray(sh[1]["inner_loss"])).all()
     np.testing.assert_allclose(np.asarray(sim[1]["inner_loss"]),
                                np.asarray(sh[1]["inner_loss"]),
@@ -481,10 +531,7 @@ def test_packed_wire_is_default_and_legacy_still_works(setup):
               error_feedback=True, pack_wire=False)
     sim, sh = _run_pair(loss_fn, params, kw, _tcfg(R), pods=pods, R=R,
                         drops=drops, acts=acts)
-    for la, lb in zip(jax.tree.leaves(sim[0]), jax.tree.leaves(sh[0])):
-        np.testing.assert_allclose(np.asarray(la, np.float32),
-                                   np.asarray(lb, np.float32),
-                                   rtol=5e-3, atol=5e-3)
+    _assert_states_quant_close(sim[0], sh[0], params, kw, dt="int4")
 
 
 @pytest.mark.slow
@@ -523,6 +570,81 @@ def test_packed_wire_hlo_one_gather_byte_exact(setup):
     f32_model = k * sum(kops.transport_bytes(e, "float32")
                         for regs in part.region_sizes for e in regs)
     assert f32_model / meas >= 5.0, (f32_model, meas)
+
+
+def _lower_round(loss_fn, params, dcfg, *, pods, rounds=1):
+    sampler = make_regime("non_iid", k=dcfg.k, vocab_size=VOCAB, seed=0)
+    mesh = _pod_mesh(pods)
+    run = diloco.make_run(loss_fn, sampler.sample_all_shards, dcfg,
+                          _tcfg(rounds), rounds_per_call=rounds,
+                          total_steps=rounds * H, batch_size=B,
+                          seq_len=S, donate=False, mesh=mesh)
+    state = pod_collectives.shard_stream_state(
+        streaming.init_state(params, dcfg), mesh)
+    return run.lower(state, jax.random.PRNGKey(5))
+
+
+@pytest.mark.slow
+def test_hlo_overlap_issue_consume_separation(setup):
+    """The tentpole acceptance gate: for τ>0 on the sharded quantized
+    transport, every fragment's collective issue and its opt-barrier
+    consume are separated by ≥τ inner steps' worth of dot ops in the
+    emitted program order (pre-optimization HLO, where instruction ids
+    record emission order and the barriers still exist). The wrapped
+    fragment's wire must leave through the carry and be consumed next
+    round; metric all-reduces stay eager and outside the gate."""
+    arch, loss_fn, params = setup
+    k = pods = 2
+    P_frag, tau = 2, 1
+    cpp = 8 // pods
+
+    dcfg = DiLoCoConfig(k=k, H=H, streaming_fragments=P_frag,
+                        stream_tau=tau, stream_alpha=0.5,
+                        outer_grad_dtype="int4", transport="sharded")
+    assert streaming.deferred_consume(dcfg)
+    unopt = _lower_round(loss_fn, params, dcfg, pods=pods) \
+        .compiler_ir("hlo").as_hlo_text()
+    ov = H_hlo.stream_overlap(unopt, chips_per_pod=cpp, tau=tau)
+    assert ov["ok"], ov
+    wire = [r for r in ov["rows"] if r["deferred"]]
+    assert len(wire) == P_frag, ov
+    assert all(r["op"] == "all-gather" for r in wire), ov
+    # the round-final fragment wraps: issued at offset H, consumed at
+    # offset τ of the NEXT round through the scan carry
+    assert sum(r["wrapped"] for r in wire) == 1, ov
+    assert all(r["steps_between"] >= tau for r in wire), ov
+    assert all(r["dots_between"] > 0 for r in wire), ov
+
+    # legacy (unpacked) quantized transport defers identically: one
+    # consume barrier per fragment, per-leaf gathers behind it
+    dcfg_l = DiLoCoConfig(k=k, H=H, streaming_fragments=P_frag,
+                          stream_tau=tau, stream_alpha=0.5,
+                          outer_grad_dtype="bfloat16",
+                          transport="sharded", pack_wire=False)
+    unopt_l = _lower_round(loss_fn, params, dcfg_l, pods=pods) \
+        .compiler_ir("hlo").as_hlo_text()
+    ov_l = H_hlo.stream_overlap(unopt_l, chips_per_pod=cpp, tau=tau)
+    assert ov_l["ok"], ov_l
+    assert ov_l["n_deferred"] >= P_frag, ov_l
+
+
+@pytest.mark.slow
+def test_hlo_overlap_tau0_stays_eager(setup):
+    """τ=0 has no overlap window: the deferral predicate is off, the
+    lowering carries no opt-barriers, and every collective is consumed
+    where it is issued — the PR 7 eager schedule, bit-for-bit."""
+    arch, loss_fn, params = setup
+    k = pods = 2
+    dcfg = DiLoCoConfig(k=k, H=H, streaming_fragments=2, stream_tau=0,
+                        stream_alpha=0.5, outer_grad_dtype="int4",
+                        transport="sharded")
+    assert not streaming.deferred_consume(dcfg)
+    unopt = _lower_round(loss_fn, params, dcfg, pods=pods) \
+        .compiler_ir("hlo").as_hlo_text()
+    ov = H_hlo.stream_overlap(unopt, chips_per_pod=8 // pods)
+    assert ov["n_barriers"] == 0, ov
+    assert ov["n_deferred"] == 0, ov
+    assert ov["n_collectives"] >= 2, ov
 
 
 # Hypothesis property tests for Partition × schedule × pod banding live

@@ -124,6 +124,74 @@ def test_wire_codec_decodes_to_sender_payload(n, seed, dt, scale):
         assert wire.shape[0] == kops.transport_bytes(n, dt, packed=True)
 
 
+@given(_pod_cases())
+@settings(max_examples=40, deadline=None)
+def test_issue_consume_schedule_property(case):
+    """The double-buffered overlap schedule, as pure algebra: each
+    round issues every fragment's collective exactly once and consumes
+    it exactly once, exactly τ inner steps after its issue; a consume
+    never races its own issue (non-wrapped consumes after the send,
+    wrapped consumes the PREVIOUS round's buffer before the slot is
+    re-issued); and τ=0 degenerates to the PR 2 simulated schedule —
+    every apply rides the same sync instant as its send, nothing
+    wraps."""
+    Hh, P, tau, *_ = case
+    sched = fragments.schedule(P, Hh, tau)
+
+    # flatten one round into an ordered event list with positions
+    order, step = [], 0
+    for steps, acts in sched.phases:
+        step += steps
+        for e in acts:
+            order.append((e.kind, e.fragment, e.wrapped, step))
+    sends = {f: i for i, (kind, f, _, _) in enumerate(order)
+             if kind == "send"}
+    applies = {f: (i, w) for i, (kind, f, w, _) in enumerate(order)
+               if kind == "apply"}
+    assert sorted(sends) == list(range(P))
+    assert sorted(applies) == list(range(P))
+
+    for p in range(P):
+        # consume lands exactly τ inner steps after the issue
+        assert sched.apply_offsets[p] - sched.send_offsets[p] == tau
+        i_apply, wrapped = applies[p]
+        if wrapped:
+            # τ pushed the consume past round end: it drains the
+            # previous round's buffer BEFORE this round's re-issue
+            # overwrites the slot
+            assert sched.apply_offsets[p] > Hh
+            assert i_apply < sends[p]
+        else:
+            assert sched.apply_offsets[p] <= Hh
+            assert i_apply > sends[p]
+
+    if tau == 0:
+        assert not any(w for _, w in applies.values())
+        # same sync instant, apply immediately after its own send
+        for p in range(P):
+            assert order[sends[p]][3] == order[applies[p][0]][3]
+
+
+@given(st.integers(1, 600), st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_fused_quantize_pack_ragged_matches_ref(n, seed):
+    """The fused one-pass quantize+nibble-pack kernel (interpret mode)
+    is bitwise the ref pipeline for arbitrary region lengths — odd
+    tails, sub-lane-pair, sub-block — i.e. the ragged fallback/padding
+    inside the fused dispatch is byte-identical to ``ref.pack_int4``'s
+    odd-tail pad."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    wire_r, loc_r = kops.wire_encode(x, "int4", mode="ref")
+    wire_k, loc_k = kops.wire_encode(x, "int4", mode="interpret")
+    np.testing.assert_array_equal(np.asarray(wire_r), np.asarray(wire_k))
+    np.testing.assert_array_equal(np.asarray(loc_r), np.asarray(loc_k))
+    np.testing.assert_array_equal(
+        np.asarray(kops.wire_decode(wire_r, n, "int4", mode="ref")),
+        np.asarray(kops.wire_decode(wire_r, n, "int4",
+                                    mode="interpret")))
+
+
 @given(st.integers(1, 6), st.integers(1, 8))
 @settings(max_examples=30, deadline=None)
 def test_partition_masks_tile_exactly_once(P, seed):

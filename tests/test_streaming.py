@@ -157,6 +157,40 @@ def test_schedule_orders_apply_before_send_at_equal_offset():
     assert kinds.index(("apply", 1)) < kinds.index(("send", 0))
 
 
+def test_inflight_slot_matches_deferral_predicate():
+    """The double-buffered in-flight slot exists exactly when the
+    issue/consume split is live (τ>0 AND a quantized wire dtype); the
+    eager paths keep ``inflight=None``, which is not a pytree leaf —
+    so τ=0 and f32 state trees are structurally identical to the
+    pre-overlap StreamState (donation, sharding and the cross-commit
+    bit-identity hash all see the same tree)."""
+    params = {"w": jnp.zeros((8, 4)), "b": jnp.zeros((4,))}
+    base = dict(k=2, H=4, streaming_fragments=2, stream_alpha=0.5)
+    eager = [DiLoCoConfig(**base, stream_tau=0, outer_grad_dtype="int4"),
+             DiLoCoConfig(**base, stream_tau=1)]          # f32 default
+    for cfg in eager:
+        assert not streaming.deferred_consume(cfg)
+        st = streaming.init_state(params, cfg)
+        assert st.inflight is None
+    ref_treedef = jax.tree_util.tree_structure(
+        streaming.init_state(params, eager[0]))
+    for dt in ("int4", "bfloat16"):
+        cfg = DiLoCoConfig(**base, stream_tau=1, outer_grad_dtype=dt)
+        assert streaming.deferred_consume(cfg)
+        st = streaming.init_state(params, cfg)
+        assert st.inflight is not None
+        assert len(st.inflight) == 2          # one slot per fragment
+        # deferral is marked in the human-readable sync plan too
+        assert all(row["deferred"]
+                   for row in streaming.sync_plan(params, cfg))
+    # eager tree: no extra leaves vs a None-inflight replace
+    st_q = streaming.init_state(
+        params, DiLoCoConfig(**base, stream_tau=1,
+                             outer_grad_dtype="int4"))
+    assert jax.tree_util.tree_structure(
+        st_q._replace(inflight=None)) == ref_treedef
+
+
 def test_schedule_validates_tau():
     with pytest.raises(ValueError):
         fragments.schedule(2, 4, tau=4)

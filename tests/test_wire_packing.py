@@ -149,6 +149,69 @@ def test_wire_codec_rejects_f32():
 
 
 # ---------------------------------------------------------------------------
+# fused quantize+pack: one VMEM pass, bitwise vs the ref oracles
+# ---------------------------------------------------------------------------
+
+
+def _n_pallas_calls(fn, *args):
+    """Number of Pallas kernel launches in fn's jaxpr."""
+    return str(jax.make_jaxpr(fn)(*args)).count("pallas_call[")
+
+
+@pytest.mark.parametrize("n", [1, 3, 127, 128, 129, 1000])
+def test_fused_encode_decode_bitwise_and_one_launch(n):
+    """The fused quantize+nibble-pack kernel emits wire bytes, scales
+    AND the sender's local dequant in ONE launch, bitwise-equal to the
+    ref pipeline (quantize → pack → dequantize); the fused
+    unpack+dequantize consumer is likewise one launch, bitwise-equal
+    to ref unpack → dequantize — including odd/ragged tails."""
+    rng = np.random.default_rng(n + 11)
+    x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    wire_r, loc_r = kops.wire_encode(x, "int4", mode="ref")
+    wire_k, loc_k = kops.wire_encode(x, "int4", mode="interpret")
+    np.testing.assert_array_equal(np.asarray(wire_r), np.asarray(wire_k))
+    np.testing.assert_array_equal(np.asarray(loc_r), np.asarray(loc_k))
+    np.testing.assert_array_equal(
+        np.asarray(kops.wire_decode(wire_r, n, "int4", mode="ref")),
+        np.asarray(kops.wire_decode(wire_r, n, "int4",
+                                    mode="interpret")))
+    assert _n_pallas_calls(
+        lambda v: kops.wire_encode(v, "int4", mode="interpret"), x) == 1
+    assert _n_pallas_calls(
+        lambda w: kops.wire_decode(w, n, "int4", mode="interpret"),
+        wire_r) == 1
+
+
+@pytest.mark.parametrize("n", [5, 128, 300])
+def test_wire_reduce_matches_simulated_reduction(n):
+    """``wire_reduce`` (the fused unpack+dequantize+masked-reduce
+    consumer of a gathered wire) equals the simulated transport's
+    decode-then-tensordot reduction, for both modes, in ONE launch on
+    the kernel path — including a dropped replica's zeroed mask row."""
+    k = 3
+    rng = np.random.default_rng(n)
+    xs = [jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+          for _ in range(k)]
+    gathered = jnp.stack(
+        [kops.wire_encode(x, "int4", mode="ref")[0] for x in xs])
+    m = jnp.asarray([1.0, 0.0, 1.0])
+    denom = jnp.maximum(m.sum(), 1e-9)
+    out_r = kops.wire_reduce(gathered, n, "int4", m, denom, mode="ref")
+    out_k = kops.wire_reduce(gathered, n, "int4", m, denom,
+                             mode="interpret")
+    np.testing.assert_allclose(np.asarray(out_r), np.asarray(out_k),
+                               rtol=1e-6, atol=1e-7)
+    # and it IS the simulated reduction: Σ_r m_r · decode(wire_r)/denom
+    vals = jnp.stack([kops.wire_decode(w, n, "int4", mode="ref")
+                      for w in gathered])
+    expect = jnp.tensordot(m, vals, axes=(0, 0)) / denom
+    np.testing.assert_array_equal(np.asarray(out_r), np.asarray(expect))
+    assert _n_pallas_calls(
+        lambda g: kops.wire_reduce(g, n, "int4", m, denom,
+                                   mode="interpret"), gathered) == 1
+
+
+# ---------------------------------------------------------------------------
 # fragment regions: the static index the coalesced wire flattens
 # ---------------------------------------------------------------------------
 
@@ -327,6 +390,18 @@ def test_claims_gate(tmp_path):
     # unmanifested claims are reported (for --update-manifest)
     assert cc.unmanifested(claims, {}) == \
         ["BENCH_x.json: 'a_true'", "BENCH_x.json: 'b_true'"]
+
+    # informational entries are recorded but never gated — a falsy
+    # value (e.g. a CPU-emulated bf16 latency row) does not fail, and
+    # the manifest still sees the key as present
+    info = {"BENCH_x.json": {
+        "a_true": True,
+        "cpu_latency": {"value": False, "informational": True,
+                        "backend": "cpu"}}}
+    assert cc.informational(info["BENCH_x.json"]["cpu_latency"])
+    assert not cc.informational(True)
+    assert cc.check(info, {"BENCH_x.json": ["a_true",
+                                            "cpu_latency"]}) == []
 
 
 def test_claims_gate_main(tmp_path):
