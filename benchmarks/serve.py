@@ -1,0 +1,366 @@
+"""Serving benchmark: paged continuous batching + int4 weight serving
+of a DiLoCo-trained checkpoint.
+
+The inference half of the paper's claim ("the resulting model has the
+same size and speed as a model trained in fully synchronous mode"),
+measured end to end:
+
+  1. TRAIN a checkpoint with the streaming sharded driver (one
+     replica band per pod over 8 forced CPU devices; falls back to the
+     simulated transport — recorded, not gated — when the host cannot
+     lay out the pod mesh), then write it twice: the plain f32 npz and
+     the int4 packed-weights format (``checkpoint.save_packed``).
+  2. SERVE it through the continuous-batching engine under a heavy
+     synthetic mix — Poisson arrivals over a prompt-length menu —
+     measuring tokens/s and per-request p50/p99 latency after a warmup
+     pass that pre-compiles every prompt-length prefill.
+  3. GATE the properties that make the path trustworthy:
+
+  ckpt_f32_serves_bit_identical     logits of the restored f32
+                  checkpoint equal the in-memory trained params bitwise;
+  paged_bit_identical_to_contiguous the paged KV cache reproduces the
+                  contiguous ring exactly, token for token;
+  int4_weights_logits_close         packed-weight logits within a
+                  gated tolerance of f32;
+  packed_weight_args_ge5x_smaller   XLA's compiled-memory analysis of
+                  the fused decode step: weight argument bytes shrink
+                  >= 5x when the step consumes the packed buffers and
+                  dequantizes in-graph (measured, not modeled; demoted
+                  to informational only where the backend reports no
+                  memory analysis);
+  packed_wire_ge5x_smaller          the on-disk/wire bytes ratio from
+                  the packed manifest (f32_bytes / packed_bytes >= 5);
+  continuous_tick_speedup_ge_1p5    engine ticks to drain the mix vs
+                  the serial lower bound (sum of gen lengths — what a
+                  slots=1 engine must spend);
+  all_requests_completed, p50_le_p99  sanity on the load run.
+
+Writes ``BENCH_serve.json`` at the repo root (reading guide in
+benchmarks/README.md).
+
+Run:  PYTHONPATH=src python -m benchmarks.serve [--requests 24 ...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+# standalone runs get 8 fake CPU devices so the checkpoint really comes
+# off the sharded streaming driver (same pattern as benchmarks/
+# streaming.py); under benchmarks.run the fallback row is recorded
+if "jax" not in sys.modules and \
+        "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8 "
+        + os.environ.get("XLA_FLAGS", ""))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common as C
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import DiLoCoConfig, TrainConfig
+from repro.core import diloco, pod_collectives, streaming
+from repro.launch import hlo_analysis
+from repro.launch.batching import ContinuousBatcher
+from repro.launch.mesh import make_pod_mesh
+
+ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+OUT_PATH = os.path.join(ROOT, "BENCH_serve.json")
+
+PROMPT_MENU = (8, 16, 24, 48)      # few distinct lengths bound the
+GEN_MENU = (4, 8, 16)              # number of prefill compilations
+
+
+# ---------------------------------------------------------------------------
+# checkpoint production: streaming sharded driver -> f32 + packed files
+# ---------------------------------------------------------------------------
+
+def train_checkpoint(outdir, *, k, H, rounds, batch, seq, seed):
+    arch, loss_fn, sampler = C.make_setup(k=k, seed=seed)
+    params, _ = C.pretrain(arch, loss_fn, sampler, 30, batch=batch,
+                           seq=seq, lr=3e-3, warmup=10,
+                           total=30 + rounds * H, seed=seed)
+    dcfg = DiLoCoConfig(k=k, H=H, streaming_fragments=2, stream_tau=1,
+                        transport="sharded")
+    sharded = True
+    try:
+        mesh = make_pod_mesh(k)
+    except ValueError:
+        mesh, sharded = None, False
+        dcfg = DiLoCoConfig(k=k, H=H, streaming_fragments=2,
+                            stream_tau=1)
+    tcfg = TrainConfig(inner_lr=3e-3, warmup_steps=10,
+                       total_steps=30 + rounds * H, batch_size=batch,
+                       seq_len=seq)
+    val = sampler.sample_validation(jax.random.PRNGKey(10_000), 16, seq)
+    run = diloco.make_run(loss_fn, sampler.sample_all_shards, dcfg,
+                          tcfg, rounds_per_call=rounds,
+                          total_steps=30 + rounds * H, batch_size=batch,
+                          seq_len=seq, eval_tokens=val, eval_every=1,
+                          donate=False, mesh=mesh)
+    st = streaming.init_state(params, dcfg)
+    if mesh is not None:
+        st = pod_collectives.shard_stream_state(st, mesh)
+    st, ms = run(st, jax.random.PRNGKey(seed + 2))
+    # pull the servable params off the (possibly sharded) carry
+    gp = jax.tree.map(lambda a: jnp.asarray(np.asarray(a)),
+                      st.global_params)
+    f32_path = os.path.join(outdir, "serve_ckpt.npz")
+    packed_path = os.path.join(outdir, "serve_ckpt.packed.npz")
+    ckpt.save(f32_path, {"params": gp}, metadata={"driver": "streaming"})
+    man = ckpt.save_packed(packed_path, gp, n_fragments=4)
+    return {
+        "arch": arch, "params": gp, "manifest": man,
+        "f32_path": f32_path, "packed_path": packed_path,
+        "sharded_driver": sharded,
+        "final_val_loss": float(np.asarray(ms["val_loss"])[-1]),
+    }
+
+
+# ---------------------------------------------------------------------------
+# load generation + engine driving
+# ---------------------------------------------------------------------------
+
+def make_mix(rng, n, vocab):
+    """n requests: menu prompt lengths, Poisson arrivals (exponential
+    inter-arrival, mean 1.5 ticks)."""
+    reqs = [(np.asarray(rng.integers(0, vocab, int(L)), np.int64),
+             int(rng.choice(GEN_MENU)))
+            for L in rng.choice(PROMPT_MENU, n)]
+    arrivals = np.floor(np.cumsum(rng.exponential(1.5, n))).astype(int)
+    return reqs, arrivals
+
+
+def run_load(eng, reqs, arrivals):
+    """Drive the engine under timed load; per-request wall latency."""
+    t_start = time.perf_counter()
+    submit_t, finish_t, rids = {}, {}, []
+    ticks0, i = eng.ticks, 0
+    while i < len(reqs) or eng.queue \
+            or any(r is not None for r in eng.active):
+        while i < len(reqs) and arrivals[i] <= eng.ticks - ticks0:
+            rid = eng.submit(reqs[i][0], reqs[i][1])
+            submit_t[rid] = time.perf_counter()
+            rids.append(rid)
+            i += 1
+        eng.tick()
+        for rid in rids:
+            if rid in eng.finished and rid not in finish_t:
+                finish_t[rid] = time.perf_counter()
+    total_s = time.perf_counter() - t_start
+    lat_ms = [1e3 * (finish_t[r] - submit_t[r]) for r in rids]
+    gen_tokens = sum(len(eng.finished[r]) for r in rids)
+    return {
+        "requests": len(rids),
+        "completed": sum(r in eng.finished for r in rids),
+        "gen_tokens": gen_tokens,
+        "total_s": total_s,
+        "tokens_per_s": gen_tokens / total_s,
+        "engine_ticks": eng.ticks - ticks0,
+        "serial_tick_lower_bound": sum(g for _, g in reqs),
+        "p50_ms": float(np.percentile(lat_ms, 50)),
+        "p99_ms": float(np.percentile(lat_ms, 99)),
+        "mean_ms": float(np.mean(lat_ms)),
+    }
+
+
+def warmup(eng, vocab):
+    """Pre-compile every menu prompt length + the fused decode step."""
+    rng = np.random.default_rng(0)
+    for L in PROMPT_MENU:
+        eng.submit(np.asarray(rng.integers(0, vocab, L), np.int64), 2)
+    eng.run_until_drained()
+
+
+# ---------------------------------------------------------------------------
+# compiled-memory: weight argument bytes, f32 vs packed decode step
+# ---------------------------------------------------------------------------
+
+def _tree_bytes(tree):
+    return int(sum(np.asarray(l).size * np.asarray(l).dtype.itemsize
+                   for l in jax.tree.leaves(tree)))
+
+
+def weight_arg_bytes(eng):
+    """(weight_bytes, mem_items) of the fused decode step: compiled
+    argument bytes minus the non-weight operands (cache, table, token
+    ids, position, key) — what remains is the weight argument."""
+    toks = jnp.zeros((eng.B,), jnp.int32)
+    pos = jnp.asarray(0, jnp.int32)
+    table = jnp.asarray(eng.table)
+    compiled = eng._jit_step.lower(eng._weights, eng.cache, table, toks,
+                                   pos, eng.key).compile()
+    mem = hlo_analysis.memory_items(compiled)
+    if not mem or "argument_size_in_bytes" not in mem:
+        return None, mem
+    nonweight = (_tree_bytes(eng.cache) + _tree_bytes(table)
+                 + _tree_bytes(toks) + _tree_bytes(pos)
+                 + _tree_bytes(eng.key))
+    return mem["argument_size_in_bytes"] - nonweight, mem
+
+
+# ---------------------------------------------------------------------------
+# benchmark body
+# ---------------------------------------------------------------------------
+
+def run(scale: int = 1, *, k=4, H=6, rounds=4, batch=2, seq=32,
+        slots=4, cache_len=96, requests=24, seed=0, out=OUT_PATH):
+    requests = requests * scale
+    os.makedirs(os.path.join(ROOT, "results"), exist_ok=True)
+    trained = train_checkpoint(os.path.join(ROOT, "results"), k=k, H=H,
+                               rounds=rounds, batch=batch, seq=seq,
+                               seed=seed)
+    arch, params = trained["arch"], trained["params"]
+    vocab = arch.cfg.vocab_size
+    man = trained["manifest"]
+    print(f"checkpoint: sharded_driver={trained['sharded_driver']} "
+          f"val={trained['final_val_loss']:.4f} "
+          f"packed {man['f32_bytes']}B -> {man['packed_bytes']}B "
+          f"({man['f32_bytes'] / man['packed_bytes']:.2f}x)")
+
+    # --- gate: restored f32 checkpoint serves bit-identically
+    restored = ckpt.restore(trained["f32_path"],
+                            {"params": params})["params"]
+    probe = jnp.asarray(
+        np.random.default_rng(seed).integers(0, vocab, (2, 24)),
+        jnp.int32)
+    lf, _ = arch.prefill(params, {"tokens": probe}, cache_len=32)
+    lr_, _ = arch.prefill(restored, {"tokens": probe}, cache_len=32)
+    f32_bit_identical = bool(np.array_equal(np.asarray(lf),
+                                            np.asarray(lr_)))
+
+    # --- gate: int4 packed weights stay within logits tolerance
+    packed = ckpt.load_packed(trained["packed_path"])
+    bufs = {kk: jnp.asarray(v) for kk, v in packed["buffers"].items()}
+    deq = ckpt.unpack_params(bufs, manifest=packed["manifest"],
+                             example_tree=params)
+    lq, _ = arch.prefill(deq, {"tokens": probe}, cache_len=32)
+    scale_l = float(jnp.abs(lf).max())
+    int4_err = float(jnp.abs(lf - lq).max())
+    int4_close = bool(int4_err <= 0.25 * scale_l + 0.05)
+
+    # --- gate: paged == contiguous, token for token (trained weights)
+    rng = np.random.default_rng(seed + 1)
+    small_reqs, _ = make_mix(rng, 8, vocab)
+    outs = {}
+    for paged in (False, True):
+        eng = ContinuousBatcher(arch, restored, slots=2,
+                                cache_len=cache_len, paged=paged)
+        rids = [eng.submit(p, g) for p, g in small_reqs]
+        done = eng.run_until_drained()
+        outs[paged] = [done[r] for r in rids]
+    paged_identical = bool(all(
+        np.array_equal(a, b)
+        for a, b in zip(outs[False], outs[True])))
+
+    # --- compiled-memory: weight argument bytes of the decode step
+    eng_f32 = ContinuousBatcher(arch, restored, slots=slots,
+                                cache_len=cache_len)
+    eng_pk = ContinuousBatcher(arch, restored, slots=slots,
+                               cache_len=cache_len,
+                               packed_weights=packed)
+    wb_f32, mem_f32 = weight_arg_bytes(eng_f32)
+    wb_pk, mem_pk = weight_arg_bytes(eng_pk)
+    backend = jax.default_backend()
+    if wb_f32 is not None and wb_pk is not None and wb_pk > 0:
+        mem_ratio = wb_f32 / wb_pk
+        mem_claim = bool(mem_ratio >= 5.0)
+    else:
+        # backend reports no memory analysis: record, don't gate
+        mem_ratio = None
+        mem_claim = {"value": None, "informational": True,
+                     "backend": backend}
+
+    # --- timed load: Poisson mix through the paged f32 engine
+    warmup(eng_f32, vocab)
+    reqs, arrivals = make_mix(np.random.default_rng(seed + 2),
+                              requests, vocab)
+    load = run_load(eng_f32, reqs, arrivals)
+    tick_speedup = (load["serial_tick_lower_bound"]
+                    / max(load["engine_ticks"], 1))
+    print(f"load: {load['requests']} reqs {load['gen_tokens']} tokens "
+          f"{load['tokens_per_s']:.1f} tok/s p50={load['p50_ms']:.1f}ms "
+          f"p99={load['p99_ms']:.1f}ms tick-speedup={tick_speedup:.2f}x")
+
+    # packed engine under the same mix: measured, recorded as data
+    warmup(eng_pk, vocab)
+    load_pk = run_load(eng_pk, *make_mix(
+        np.random.default_rng(seed + 2), requests, vocab))
+
+    report = {
+        "config": {"k": k, "H": H, "rounds": rounds, "slots": slots,
+                   "cache_len": cache_len, "requests": requests,
+                   "prompt_menu": list(PROMPT_MENU),
+                   "gen_menu": list(GEN_MENU), "backend": backend,
+                   "sharded_driver": trained["sharded_driver"]},
+        "checkpoint": {
+            "final_val_loss": trained["final_val_loss"],
+            "f32_bytes": man["f32_bytes"],
+            "packed_bytes": man["packed_bytes"],
+            "wire_ratio": man["f32_bytes"] / man["packed_bytes"],
+            "int4_logits_max_err": int4_err,
+            "logits_scale": scale_l,
+        },
+        "compiled_memory": {
+            "f32": mem_f32, "packed": mem_pk,
+            "weight_arg_bytes_f32": wb_f32,
+            "weight_arg_bytes_packed": wb_pk,
+            "weight_arg_ratio": mem_ratio,
+        },
+        "load_f32": load,
+        "load_packed": load_pk,
+        "tick_speedup": tick_speedup,
+        "claims": {
+            "ckpt_f32_serves_bit_identical": f32_bit_identical,
+            "paged_bit_identical_to_contiguous": paged_identical,
+            "int4_weights_logits_close": int4_close,
+            "packed_wire_ge5x_smaller": bool(
+                man["f32_bytes"] / man["packed_bytes"] >= 5.0),
+            "packed_weight_args_ge5x_smaller": mem_claim,
+            "continuous_tick_speedup_ge_1p5": bool(tick_speedup >= 1.5),
+            "all_requests_completed": bool(
+                load["completed"] == load["requests"]
+                and load_pk["completed"] == load_pk["requests"]),
+            "p50_le_p99": bool(load["p50_ms"] <= load["p99_ms"]),
+            # where the pod mesh could not be laid out the checkpoint
+            # still trains, but the sharded-driver provenance is only
+            # recorded, not claimed
+            "ckpt_from_sharded_driver": (
+                True if trained["sharded_driver"]
+                else {"value": False, "informational": True,
+                      "backend": backend}),
+        },
+    }
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1)
+    print("wrote", out)
+    C.save("serve", report)
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--H", type=int, default=6)
+    ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=96)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=OUT_PATH)
+    a = ap.parse_args(argv)
+    return run(1, k=a.k, H=a.H, rounds=a.rounds, batch=a.batch,
+               seq=a.seq, slots=a.slots, cache_len=a.cache_len,
+               requests=a.requests, seed=a.seed, out=a.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -11,7 +11,27 @@ is prefilled at absolute positions [t−L, t) — RoPE and sliding-window
 masks depend only on RELATIVE positions, so each request's logits are
 identical to running it in isolation (tested). The per-slot cache
 position tracks (`pos` rows, -1 = empty) guarantee a fresh request
-never attends to its slot's previous occupant.
+never attends to its slot's previous occupant. The clock only warms up
+(jumps forward to fit a long prompt) while NO slot is active: jumping
+it mid-run would open a position gap in every incumbent's ring, so
+too-long prompts are deferred until the advancing clock reaches them.
+
+Two cache layouts behind the same scheduler:
+
+  contiguous (paged=False)  the seed layout: every slot owns a full
+      (C,)-long ring row; admission host-edits the row via a
+      ``dynamic_update_slice`` tree-map.
+  paged (paged=True, default)  fixed-size pages in ONE shared pool per
+      layer group + a per-slot page table (``models/model.py``
+      ``init_paged_cache``): short requests only occupy the pages their
+      positions touch, and admission is a page-table edit plus a jitted
+      prefill that scatters K/V straight into the pool. Outputs are
+      bit-identical to the contiguous layout (the gathered dense view
+      reconstructs the exact ring; tested across families).
+
+The per-tick step (decode + sample) is ONE jitted call with a donated
+cache carry; the host syncs once per tick on the (B,) sampled tokens
+instead of per-slot ``int()`` pulls.
 
 Works for rotary/window/SSM families (position-translation-invariant);
 absolute-position models (whisper's learned embeddings) are rejected.
@@ -19,6 +39,7 @@ absolute-position models (whisper's learned embeddings) are rejected.
 from __future__ import annotations
 
 import collections
+import functools
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
@@ -36,6 +57,13 @@ class Request:
     max_new: int
     out: list = field(default_factory=list)
     done: bool = False
+    submit_tick: int = -1
+    finish_tick: int = -1
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    return str(getattr(last, "key", getattr(last, "name", last)))
 
 
 class ContinuousBatcher:
@@ -44,10 +72,21 @@ class ContinuousBatcher:
     engine = ContinuousBatcher(arch, params, slots=4, cache_len=256)
     engine.submit(prompt_tokens, max_new=32) -> rid
     engine.run_until_drained() -> {rid: np.ndarray(generated)}
+
+    ``paged=True`` (default) uses the paged KV cache; ``page_size``
+    must divide the effective ring length, ``n_pages`` defaults to full
+    provisioning (slots * pages_per_slot — admission never waits).
+    ``packed_weights`` = ``checkpoint.load_packed(...)`` result serves
+    int4-packed weights: the jitted steps take the uint8 buffers as
+    their weight argument and dequantize in-graph (requires paged mode;
+    ``params`` then only supplies structure/shapes — ShapeDtypeStructs
+    are enough).
     """
 
     def __init__(self, arch, params, *, slots: int, cache_len: int,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 paged: bool = True, page_size: int = 16,
+                 n_pages: int | None = None, packed_weights=None):
         self.arch = arch
         self.cfg = arch.cfg
         if self.cfg.pos_emb == "learned":
@@ -55,7 +94,6 @@ class ContinuousBatcher:
                 "continuous batching requires translation-invariant "
                 "positions (rope/none); learned absolute embeddings "
                 "break the shared-clock alignment")
-        self.params = params
         self.B = slots
         self.C = cache_len
         self.temperature = temperature
@@ -66,18 +104,71 @@ class ContinuousBatcher:
         self.last_tok = np.zeros(slots, np.int64)
         self._next_rid = 0
         self.clock = 0
-        self.cache = M.init_cache(self.cfg, slots, cache_len,
-                                  jnp.float32, window=self.cfg.window)
-        self._jit_decode = jax.jit(
-            lambda p, c, t, pos: arch.decode(p, c, t, pos))
+        self.ticks = 0
+        self.paged = paged
+        # effective attention-ring length (windowed configs cap it)
+        self.C_eff = min(cache_len, self.cfg.window) \
+            if self.cfg.window else cache_len
+
+        if packed_weights is not None and not paged:
+            raise ValueError("packed int4 weight serving requires the "
+                             "paged engine (jitted prefill)")
+        if packed_weights is not None:
+            from repro.checkpoint import checkpoint as ckpt
+            man = packed_weights["manifest"]
+            shapes = jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct(
+                    np.shape(l), getattr(l, "dtype", jnp.float32)),
+                params)
+            self._weights = {k: jnp.asarray(v) for k, v
+                             in packed_weights["buffers"].items()}
+            self._make_params = functools.partial(
+                ckpt.unpack_params, manifest=man, example_tree=shapes)
+        else:
+            self._weights = params
+            self._make_params = lambda w: w
+
+        if paged:
+            self.page_size = page_size
+            if self.C_eff % page_size:
+                raise ValueError(
+                    f"cache_len (effective {self.C_eff}) must be a "
+                    f"multiple of page_size={page_size}")
+            self.pages_per_slot = self.C_eff // page_size
+            self.n_pages = n_pages or slots * self.pages_per_slot
+            self.cache = M.init_paged_cache(
+                self.cfg, slots, cache_len, jnp.float32,
+                page_size=page_size, n_pages=self.n_pages,
+                window=self.cfg.window)
+            self.table = np.full((slots, self.pages_per_slot), -1,
+                                 np.int32)
+            self.free_pages: collections.deque[int] = collections.deque(
+                range(self.n_pages))
+            self.slot_pages: list[list[int]] = [[] for _ in range(slots)]
+            self._jit_prefill_cache: dict[int, Callable] = {}
+        else:
+            self.cache = M.init_cache(self.cfg, slots, cache_len,
+                                      jnp.float32, window=self.cfg.window)
+        self._jit_step = self._make_step()
         self.finished: dict[int, np.ndarray] = {}
+        self.latencies: dict[int, int] = {}      # rid -> ticks-to-finish
 
     # ---- public API ----
     def submit(self, prompt, max_new: int) -> int:
         rid = self._next_rid
         self._next_rid += 1
+        if self.paged:
+            # worst-case alignment: an unaligned start straddles one
+            # extra page. Deferring such a request would deadlock, so
+            # reject it up front.
+            need = self._pages_for_span(self.page_size - 1,
+                                        len(prompt) + max_new)
+            if len(need) > self.n_pages:
+                raise ValueError(
+                    f"request spans {len(need)} pages but the pool has "
+                    f"{self.n_pages}; raise n_pages or cache_len")
         self.queue.append(Request(rid, np.asarray(prompt, np.int64),
-                                  max_new))
+                                  max_new, submit_tick=self.ticks))
         return rid
 
     def run_until_drained(self, max_ticks: int = 100_000):
@@ -87,7 +178,37 @@ class ContinuousBatcher:
             self.tick()
         return dict(self.finished)
 
-    # ---- engine ----
+    # ---- sampling ----
+    def _sample_host(self, logits_last):
+        """First-token sampling at admission (host side, tiny)."""
+        if self.temperature > 0:
+            self.key, sub = jax.random.split(self.key)
+            return int(jax.random.categorical(
+                sub, logits_last / self.temperature, -1)[0])
+        return int(jnp.argmax(logits_last[0]))
+
+    # ---- fused decode+sample tick step ----
+    def _make_step(self):
+        temp = self.temperature
+        cfg = self.cfg
+        make_params = self._make_params
+
+        def step(weights, cache, table, toks, pos, key):
+            params = make_params(weights)
+            logits, cache = M.decode_step(
+                params, cfg, cache, toks[:, None], pos,
+                window=cfg.window, page_table=table)
+            if temp > 0:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(sub, logits[:, -1] / temp,
+                                             -1)
+            else:
+                nxt = jnp.argmax(logits[:, -1], -1)
+            return nxt.astype(jnp.int32), cache, key
+
+        return jax.jit(step, donate_argnums=(1,))
+
+    # ---- contiguous admission (seed layout, host-side row edit) ----
     # cache leaves are (layer_groups, batch, ...): batch is axis 1
     def _row(self, tree, i):
         return jax.tree.map(lambda a: a[:, i:i + 1], tree)
@@ -99,12 +220,10 @@ class ContinuousBatcher:
             tree, row)
 
     def _blank_row(self):
-        one = M.init_cache(self.cfg, 1, self.C, jnp.float32,
-                           window=self.cfg.window)
-        return one
+        return M.init_cache(self.cfg, 1, self.C, jnp.float32,
+                            window=self.cfg.window)
 
-    def _admit(self, slot: int, req: Request):
-        """Prefill ``req`` into ``slot`` at clock-aligned positions."""
+    def _admit_contiguous(self, slot: int, req: Request):
         L = len(req.prompt)
         start = self.clock - L          # prompt occupies [t-L, t)
         assert start >= 0, "advance the clock before admitting"
@@ -112,41 +231,175 @@ class ContinuousBatcher:
         row_cache = self._row(row, slot)
         toks = jnp.asarray(req.prompt, jnp.int32)[None]
         logits, row_cache, _ = M.forward(
-            self.params, self.cfg, toks, cache=row_cache,
-            cache_pos=jnp.asarray(start, jnp.int32),
+            self._make_params(self._weights), self.cfg, toks,
+            cache=row_cache, cache_pos=jnp.asarray(start, jnp.int32),
             window=self.cfg.window or None)
         self.cache = self._set_row(row, row_cache, slot)
-        self.active[slot] = req
-        self.remaining[slot] = req.max_new
-        self.last_tok[slot] = int(jnp.argmax(logits[0, -1]))
-        req.out.append(int(self.last_tok[slot]))
-        self.remaining[slot] -= 1
+        return logits[:, -1]
+
+    # ---- paged admission (page-table edit + jitted pool prefill) ----
+    def _pages_for_span(self, start: int, span: int) -> list[int]:
+        """Logical ring pages touched by positions [start, start+span)."""
+        C, ps = self.C_eff, self.page_size
+        if span >= C:
+            return list(range(self.pages_per_slot))
+        pages, seen = [], set()
+        for p in range(start, start + span):
+            lp = (p % C) // ps
+            if lp not in seen:
+                seen.add(lp)
+                pages.append(lp)
+        return pages
+
+    def _free_slot_pages(self, slot: int):
+        for pg in self.slot_pages[slot]:
+            self.free_pages.append(pg)
+        self.slot_pages[slot] = []
+        self.table[slot] = -1
+
+    def _make_prefill(self, L: int):
+        """Jitted prefill for prompt length L (cached per L): clears the
+        position tracks of the slot's freshly-mapped pages, runs the
+        forward over a blank per-slot row view with the pool leaves
+        shared, and merges per-slot rows back — all in one compiled
+        call with a donated cache."""
+        cfg = self.cfg
+        make_params = self._make_params
+        paged_names = M.PAGED_LEAF_NAMES
+
+        def prefill(weights, cache, toks, slot, start, tbl_row, reset):
+            params = make_params(weights)
+
+            def clear(path, a):
+                if _leaf_name(path) == "posp":
+                    # (n_groups, n_pages, psize): wipe reused pages
+                    return a.at[:, reset].set(-1, mode="drop")
+                return a
+
+            cache = jax.tree_util.tree_map_with_path(clear, cache)
+
+            def row_view(path, a):
+                name = _leaf_name(path)
+                if name in paged_names:
+                    return a               # shared pool, passed whole
+                blank_shape = a.shape[:1] + (1,) + a.shape[2:]
+                if name == "pos":          # per-slot ring tracks
+                    return jnp.full(blank_shape, -1, a.dtype)
+                return jnp.zeros(blank_shape, a.dtype)
+
+            row = jax.tree_util.tree_map_with_path(row_view, cache)
+            logits, row, _ = M.forward(
+                params, cfg, toks, cache=row, cache_pos=start,
+                window=cfg.window or None, page_table=tbl_row)
+
+            def merge(path, full, r):
+                if _leaf_name(path) in paged_names:
+                    return r               # pool was updated in place
+                return jax.lax.dynamic_update_slice(
+                    full, r.astype(full.dtype),
+                    (0, slot) + (0,) * (full.ndim - 2))
+
+            cache = jax.tree_util.tree_map_with_path(merge, cache, row)
+            return logits[:, -1], cache
+
+        return jax.jit(prefill, donate_argnums=(1,))
+
+    def _admit_paged(self, slot: int, req: Request):
+        """Map pages + jitted prefill. Returns the (1, V) last-position
+        logits, or None if the pool lacks free pages right now."""
+        L = len(req.prompt)
+        start = self.clock - L
+        assert start >= 0, "advance the clock before admitting"
+        lps = self._pages_for_span(start, L + req.max_new)
+        if len(lps) > len(self.free_pages):
+            return None
+        new_pages = [self.free_pages.popleft() for _ in lps]
+        self.slot_pages[slot] = list(new_pages)
+        self.table[slot] = -1
+        self.table[slot, lps] = new_pages
+        # fixed-size reset vector (out-of-range sentinel pads) so one
+        # compiled prefill serves any admission of this prompt length
+        reset = np.full(self.pages_per_slot, self.n_pages, np.int32)
+        reset[:len(new_pages)] = new_pages
+        fn = self._jit_prefill_cache.get(L)
+        if fn is None:
+            fn = self._jit_prefill_cache[L] = self._make_prefill(L)
+        logits_last, self.cache = fn(
+            self._weights, self.cache,
+            jnp.asarray(req.prompt, jnp.int32)[None],
+            jnp.asarray(slot, jnp.int32),
+            jnp.asarray(start, jnp.int32),
+            jnp.asarray(self.table[slot:slot + 1]),
+            jnp.asarray(reset))
+        return logits_last
+
+    # ---- slot lifecycle ----
+    def _finish(self, slot: int):
+        req = self.active[slot]
+        req.done = True
+        req.finish_tick = self.ticks
+        self.finished[req.rid] = np.asarray(req.out, np.int64)
+        self.latencies[req.rid] = max(req.finish_tick - req.submit_tick,
+                                      1)
+        self.active[slot] = None
+        if self.paged:
+            self._free_slot_pages(slot)
 
     def tick(self):
-        # 1. admit pending requests into free slots
+        # 1. admit pending requests into free slots. The clock may only
+        #    warm up while NOTHING is active (bug fix: a mid-run jump
+        #    leaves a position gap in every incumbent's ring — wrong
+        #    relative distances from that tick on). Too-long prompts are
+        #    deferred; the clock advances one per tick, so they admit as
+        #    soon as it catches up. First-fit among admissible keeps
+        #    short requests flowing past a deferred long one.
         for i in range(self.B):
-            if self.active[i] is None and self.queue:
-                req = self.queue[0]
-                if self.clock < len(req.prompt):
-                    self.clock = len(req.prompt)   # warm up the clock
-                self.queue.popleft()
-                self._admit(i, req)
+            if self.active[i] is not None or not self.queue:
+                continue
+            any_active = any(r is not None for r in self.active)
+            pick = None
+            for qi, req in enumerate(self.queue):
+                if any_active and len(req.prompt) > self.clock:
+                    continue               # would need a clock jump
+                pick = qi
+                break
+            if pick is None:
+                break
+            req = self.queue[pick]
+            if len(req.prompt) > self.clock:
+                self.clock = len(req.prompt)   # warm-up: pool is idle
+            if self.paged:
+                logits_last = self._admit_paged(i, req)
+                if logits_last is None:    # pool full: retry next tick
+                    break
+                del self.queue[pick]
+            else:
+                del self.queue[pick]
+                logits_last = self._admit_contiguous(i, req)
+            self.active[i] = req
+            self.remaining[i] = req.max_new
+            first = self._sample_host(logits_last)
+            self.last_tok[i] = first
+            req.out.append(first)
+            self.remaining[i] -= 1
+            # bug fix: a max_new=1 request is DONE after its prefill
+            # token — finish before the batched decode appends another
+            if self.remaining[i] <= 0:
+                self._finish(i)
         if all(r is None for r in self.active):
+            self.ticks += 1
             return
-        # 2. one batched decode step for every slot (empty slots decode
-        #    garbage into their own rows — masked by their pos tracks
-        #    and discarded)
-        toks = jnp.asarray(self.last_tok, jnp.int32)[:, None]
-        logits, self.cache = self._jit_decode(
-            self.params, self.cache, toks,
-            jnp.asarray(self.clock, jnp.int32))
+        # 2. one fused decode+sample step for every slot (empty slots
+        #    decode garbage — masked by their pos tracks / dropped by
+        #    their unmapped page tables — and are discarded below)
+        toks = jnp.asarray(self.last_tok, jnp.int32)
+        table = jnp.asarray(self.table) if self.paged else None
+        nxt_dev, self.cache, self.key = self._jit_step(
+            self._weights, self.cache, table, toks,
+            jnp.asarray(self.clock, jnp.int32), self.key)
         self.clock += 1
-        if self.temperature > 0:
-            self.key, sub = jax.random.split(self.key)
-            nxt = np.asarray(jax.random.categorical(
-                sub, logits[:, -1] / self.temperature, -1))
-        else:
-            nxt = np.asarray(jnp.argmax(logits[:, -1], -1))
+        self.ticks += 1
+        nxt = np.asarray(nxt_dev)          # the ONE host sync per tick
         # 3. bookkeeping per slot
         for i in range(self.B):
             req = self.active[i]
@@ -156,9 +409,7 @@ class ContinuousBatcher:
             req.out.append(int(nxt[i]))
             self.remaining[i] -= 1
             if self.remaining[i] <= 0:
-                req.done = True
-                self.finished[req.rid] = np.asarray(req.out, np.int64)
-                self.active[i] = None
+                self._finish(i)
 
     @property
     def utilization(self) -> float:

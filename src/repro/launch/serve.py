@@ -37,7 +37,15 @@ def greedy_decode(arch, params, prompts, *, gen: int, extra=None,
         lambda p, c, t, pos: arch.decode(p, c, t, pos))
 
     key = jax.random.PRNGKey(seed)
-    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    # the FIRST generated token comes from the prefill logits and must
+    # obey the same sampling policy as the rest (it used to always be
+    # argmax, silently ignoring temperature at position 0)
+    if temperature > 0:
+        key, sub = jax.random.split(key)
+        tok = jax.random.categorical(
+            sub, logits[:, -1] / temperature, -1).astype(jnp.int32)[:, None]
+    else:
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
     out = [tok]
     for i in range(gen - 1):
         logits, cache = jit_decode(params, cache, tok,
@@ -58,7 +66,13 @@ def run(args):
     cfg = arch.cfg
     key = jax.random.PRNGKey(args.seed)
     params, _ = arch.init(key, cfg)
-    if args.checkpoint:
+    packed = None
+    if args.packed_checkpoint:
+        packed = ckpt.load_packed(args.packed_checkpoint)
+        print("loaded packed weights", args.packed_checkpoint,
+              f"({packed['manifest']['packed_bytes']} bytes, "
+              f"{packed['manifest']['dtype']})")
+    elif args.checkpoint:
         params = ckpt.restore(args.checkpoint, {"params": params})["params"]
         print("restored", args.checkpoint)
 
@@ -74,9 +88,30 @@ def run(args):
             jax.random.fold_in(key, 2), (B, cfg.n_frames, cfg.d_model))
 
     t0 = time.time()
-    toks = greedy_decode(arch, params, prompts, gen=args.gen, extra=extra,
-                         temperature=args.temperature, seed=args.seed)
-    toks.block_until_ready()
+    if args.continuous:
+        from repro.launch.batching import ContinuousBatcher
+        ps = args.page_size
+        clen = S + args.gen
+        if not args.contiguous_cache:   # paged ring must tile exactly
+            clen = -(-clen // ps) * ps
+        eng = ContinuousBatcher(
+            arch, params, slots=B, cache_len=clen,
+            temperature=args.temperature, seed=args.seed,
+            paged=not args.contiguous_cache, page_size=args.page_size,
+            packed_weights=packed)
+        rids = [eng.submit(np.asarray(prompts[i]), args.gen)
+                for i in range(B)]
+        done = eng.run_until_drained()
+        toks = jnp.asarray(np.stack([done[r] for r in rids]))
+    else:
+        if packed is not None:
+            params = ckpt.unpack_params(
+                {k: jnp.asarray(v) for k, v in packed["buffers"].items()},
+                manifest=packed["manifest"], example_tree=params)
+        toks = greedy_decode(arch, params, prompts, gen=args.gen,
+                             extra=extra, temperature=args.temperature,
+                             seed=args.seed)
+        toks.block_until_ready()
     dt = time.time() - t0
     total = B * args.gen
     print(f"arch={args.arch} batch={B} prompt={S} gen={args.gen} "
@@ -96,6 +131,16 @@ def make_parser():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--packed-checkpoint", default="",
+                    help="int4 packed-weights checkpoint "
+                         "(checkpoint.save_packed)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve through the continuous-batching engine "
+                         "instead of one static batch")
+    ap.add_argument("--contiguous-cache", action="store_true",
+                    help="with --continuous: seed per-slot ring rows "
+                         "instead of the paged pool")
+    ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     return ap
 

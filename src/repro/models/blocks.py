@@ -64,7 +64,7 @@ def init_block(key, cfg, kind: str):
 
 def apply_block(p, x, cfg, kind: str, *, positions=None, cache=None,
                 cache_pos=None, kv_x=None, cross_kv=None, groups=1,
-                window=None):
+                window=None, page_table=None):
     """One residual block. ``window`` overrides cfg.window when not None."""
     win = cfg.window if window is None else window
     aux = jnp.zeros((), jnp.float32)
@@ -77,7 +77,7 @@ def apply_block(p, x, cfg, kind: str, *, positions=None, cache=None,
         a, c = L.apply_attention(p["attn"], h, cfg, positions=positions,
                                  cache=cache.get("attn") if cache else None,
                                  cache_pos=cache_pos, window=win,
-                                 causal=causal)
+                                 causal=causal, page_table=page_table)
         if c is not None:
             new_cache["attn"] = c
         if cfg.parallel_block:
@@ -122,7 +122,7 @@ def apply_block(p, x, cfg, kind: str, *, positions=None, cache=None,
         a, c = L.apply_attention(p["attn"], h, cfg, positions=positions,
                                  cache=cache.get("attn") if cache else None,
                                  cache_pos=cache_pos, window=win,
-                                 causal=True)
+                                 causal=True, page_table=page_table)
         if c is not None:
             new_cache["attn"] = c
         x = x + a
@@ -196,6 +196,27 @@ def init_block_cache(cfg, kind: str, batch: int, cache_len: int, dtype):
     if kind == "slstm":
         return {"state": XL.init_slstm_state(cfg, batch)}
     return {}
+
+
+def init_paged_block_cache(cfg, kind: str, batch: int, cache_len: int,
+                           dtype, *, n_pages: int, page_size: int):
+    """Paged variant of ``init_block_cache``: the standard attention
+    K/V rings live in ONE shared page pool (engine-held page table
+    maps each slot's logical ring pages to pool pages); every other
+    leaf — SSM/xLSTM state, MLA latent rings, cross K/V — keeps its
+    per-slot row, unchanged (those carry no per-token ring or are tiny
+    per-slot states, so paging buys nothing)."""
+    if kind in ("attn_mlp", "enc_attn_mlp"):
+        return {"attn": L.init_paged_attn_cache(cfg, n_pages, page_size,
+                                                dtype)}
+    if kind == "self_cross_mlp":
+        c = {"attn": L.init_paged_attn_cache(cfg, n_pages, page_size,
+                                             dtype)}
+        G, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        c["xk"] = jnp.zeros((batch, cfg.n_frames, G, hd), dtype)
+        c["xv"] = jnp.zeros((batch, cfg.n_frames, G, hd), dtype)
+        return c
+    return init_block_cache(cfg, kind, batch, cache_len, dtype)
 
 
 def stacked_init(key, cfg, kind: str, count: int):

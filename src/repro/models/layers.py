@@ -260,12 +260,66 @@ def project_cross_kv(p, cfg, kv_x):
     return k, v
 
 
+def paged_kv_update(cache, page_table, k, v, cache_pos):
+    """Write new tokens into a paged K/V pool and gather the dense ring
+    view.
+
+    cache: {"kp": (n_pages, psize, G, hd), "vp": ..., "posp":
+    (n_pages, psize)} — a pool of fixed-size pages shared by all slots.
+    page_table: (B, pages_per_slot) int32, the physical page backing
+    each logical page of each slot's ring (-1 = unmapped: writes are
+    dropped, reads come back empty). The logical ring has length
+    C = pages_per_slot * psize; token at absolute position p lives at
+    logical page (p % C) // psize, offset (p % C) % psize — exactly the
+    contiguous ring layout, so the gathered dense view is value-equal
+    to a contiguous cache and attention over it is bit-identical.
+
+    Returns (new_cache, k_dense (B,C,G,hd), v_dense, kv_pos (B,C)).
+    """
+    kp, vp, posp = cache["kp"], cache["vp"], cache["posp"]
+    n_pages, psize = kp.shape[0], kp.shape[1]
+    B_, pages_per_slot = page_table.shape
+    C = pages_per_slot * psize
+    S_new = k.shape[1]
+    if S_new > C:               # static shapes: python-level branch
+        k = k[:, -C:]
+        v = v[:, -C:]
+        cache_pos_eff = cache_pos + (S_new - C)
+        S_eff = C
+    else:
+        cache_pos_eff = cache_pos
+        S_eff = S_new
+    offs = jnp.arange(S_eff, dtype=jnp.int32)
+    ring = (cache_pos_eff + offs) % C                   # (S_eff,)
+    # unmapped table entries become an out-of-range sentinel: scatters
+    # drop them (mode="drop"), gathers read back fill values — so a
+    # slot with no page mapped never corrupts the shared pool (the
+    # batched decode "writes" for empty slots too, like the contiguous
+    # engine, but here those writes vanish instead of landing in a row)
+    phys = jnp.where(page_table >= 0, page_table, n_pages)
+    page_i = phys[:, ring // psize]                      # (B, S_eff)
+    off_b = jnp.broadcast_to((ring % psize)[None], (B_, S_eff))
+    upd = jnp.broadcast_to((cache_pos_eff + offs)[None], (B_, S_eff))
+    kp = kp.at[page_i, off_b].set(k, mode="drop")
+    vp = vp.at[page_i, off_b].set(v, mode="drop")
+    posp = posp.at[page_i, off_b].set(upd, mode="drop")
+    kd = jnp.take(kp, phys, axis=0, mode="fill",
+                  fill_value=0).reshape((B_, C) + kp.shape[2:])
+    vd = jnp.take(vp, phys, axis=0, mode="fill",
+                  fill_value=0).reshape((B_, C) + vp.shape[2:])
+    kv_pos = jnp.take(posp, phys, axis=0, mode="fill",
+                      fill_value=-1).reshape(B_, C)
+    return {"kp": kp, "vp": vp, "posp": posp}, kd, vd, kv_pos
+
+
 def apply_attention(p, x, cfg, *, positions, cache=None, cache_pos=None,
                     window=0, causal=True, kv_x=None, kv_positions=None,
-                    cross_kv=None):
+                    cross_kv=None, page_table=None):
     """Self- or cross-attention with optional decode cache.
 
     cache: dict {"k": (B, C, G, hd), "v": ..., } ring buffer of size C;
+    a paged cache ({"kp", "vp", "posp"} page pool, see paged_kv_update)
+    is used instead when present — ``page_table`` is required then.
     cache_pos: int32 scalar — absolute position of the incoming token(s).
     kv_x: if given, cross-attention keys/values come from kv_x.
     cross_kv: (k, v) precomputed cross K/V (see project_cross_kv).
@@ -298,7 +352,20 @@ def apply_attention(p, x, cfg, *, positions, cache=None, cache_pos=None,
         q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_pct)
 
     new_cache = None
-    if cache is not None and kv_x is None:
+    if cache is not None and kv_x is None and "kp" in cache:
+        # paged ring: same layout/maths as the contiguous branch below,
+        # but the storage is a page pool indexed through the engine's
+        # per-slot page table
+        if page_table is None:
+            raise ValueError("paged attention cache needs a page_table")
+        new_cache, ck, cv, kv_pos = paged_kv_update(
+            cache, page_table, k, v, cache_pos)
+        kv_pos1 = kv_pos if q.shape[1] <= 8 else kv_pos[0]
+        kv_valid = kv_pos1 >= 0
+        out = attention(q, ck, cv, causal=causal, window=window,
+                        q_offset=cache_pos, kv_positions=kv_pos1,
+                        kv_valid=kv_valid, chunk=cfg.attn_chunk)
+    elif cache is not None and kv_x is None:
         # Ring buffer of size C: token at absolute position p lives in slot
         # p % C. A "pos" track records each slot's absolute position
         # (-1 = empty) so masking stays exact after wrap-around. Writes
@@ -372,6 +439,19 @@ def init_attn_cache(cfg, batch: int, cache_len: int, dtype):
         "k": jnp.zeros((batch, cache_len, G, hd), dtype),
         "v": jnp.zeros((batch, cache_len, G, hd), dtype),
         "pos": jnp.full((batch, cache_len), -1, jnp.int32),
+    }
+
+
+def init_paged_attn_cache(cfg, n_pages: int, page_size: int, dtype):
+    """Shared page pool replacing the per-slot (B, C) ring rows: slots
+    map logical ring pages to pool pages through the engine-held page
+    table, so short requests only occupy the pages they touch."""
+    hd = cfg.resolved_head_dim
+    G = cfg.n_kv_heads
+    return {
+        "kp": jnp.zeros((n_pages, page_size, G, hd), dtype),
+        "vp": jnp.zeros((n_pages, page_size, G, hd), dtype),
+        "posp": jnp.full((n_pages, page_size), -1, jnp.int32),
     }
 
 

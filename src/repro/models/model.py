@@ -120,9 +120,11 @@ def _run_encoder(params, cfg, frames):
 
 
 def forward(params, cfg, tokens, *, extra=None, cache=None, cache_pos=None,
-            groups: int = 1, window=None):
+            groups: int = 1, window=None, page_table=None):
     """Core forward. tokens: (B, S). cache/cache_pos => decode/prefill.
 
+    ``page_table``: (B, pages_per_slot) int32 for paged caches (see
+    ``init_paged_cache``) — shared by every layer group.
     Returns (logits, new_cache, aux). new_cache is None when cache is None.
     """
     plan = make_plan(cfg)
@@ -184,7 +186,7 @@ def forward(params, cfg, tokens, *, extra=None, cache=None, cache_pos=None,
             x, c, a = BLK.apply_block(
                 p, x, cfg, k, positions=positions, cache=lcs[i],
                 cache_pos=cache_pos, kv_x=cross_src, groups=groups,
-                window=window)
+                window=window, page_table=page_table)
             new_cs.append(c)
             aux = aux + a
         return (x, aux), tuple(new_cs)
@@ -232,6 +234,39 @@ def init_cache(cfg, batch: int, cache_len: int, dtype, *,
     return out
 
 
+# cache-leaf names that live in the shared page pool (no batch axis
+# after the group axis) — everything else is a per-slot row
+PAGED_LEAF_NAMES = ("kp", "vp", "posp")
+
+
+def init_paged_cache(cfg, batch: int, cache_len: int, dtype, *,
+                     page_size: int, n_pages: int, window: int = 0):
+    """Paged decode cache: standard-attention K/V rings become ONE
+    shared pool of ``n_pages`` fixed-size pages per layer group; the
+    engine maps each slot's logical ring (length eff = min(cache_len,
+    window or cache_len), eff % page_size == 0) onto pool pages through
+    a (batch, eff // page_size) page table passed to ``forward``.
+    Non-attention leaves (SSM states, MLA rings, cross K/V) keep their
+    per-slot rows exactly as ``init_cache`` lays them out."""
+    plan = make_plan(cfg)
+    eff = min(cache_len, window) if window else cache_len
+    if eff % page_size:
+        raise ValueError(
+            f"effective cache length {eff} must be a multiple of "
+            f"page_size {page_size} (the paged ring must tile exactly "
+            "to stay bit-identical to the contiguous ring)")
+    out = {}
+    for i, kind in enumerate(plan.pattern):
+        k = plan.shared_kind if kind == "SHARED" else kind
+        c1 = BLK.init_paged_block_cache(cfg, k, batch, eff, dtype,
+                                        n_pages=n_pages,
+                                        page_size=page_size)
+        out[f"cache{i}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a, (plan.n_groups,) + a.shape).copy(), c1)
+    return out
+
+
 def prefill(params, cfg, tokens, *, extra=None, window: int = 0,
             groups: int = 1, cache_len: int = 0):
     """Run the full prompt, building the decode cache. Returns
@@ -247,10 +282,11 @@ def prefill(params, cfg, tokens, *, extra=None, window: int = 0,
 
 
 def decode_step(params, cfg, cache, tokens, pos, *, window: int = 0,
-                groups: int = 1):
+                groups: int = 1, page_table=None):
     """One decode step. tokens: (B, 1); pos: scalar int32 absolute
     position. Returns (logits, new_cache)."""
     logits, cache, _ = forward(params, cfg, tokens, cache=cache,
                                cache_pos=pos, groups=groups,
-                               window=window or None)
+                               window=window or None,
+                               page_table=page_table)
     return logits, cache

@@ -62,10 +62,11 @@ class Arch:
                          groups=groups, cache_len=cache_len)
 
     def decode(self, params, cache, tokens, pos, *, cfg=None,
-               groups: int = 1):
+               groups: int = 1, page_table=None):
         cfg = cfg or self.cfg
         return M.decode_step(params, cfg, cache, tokens, pos,
-                             window=cfg.window, groups=groups)
+                             window=cfg.window, groups=groups,
+                             page_table=page_table)
 
     # ---- specs for the dry-run ----
     def input_specs(self, shape: ShapeConfig, *, batch_override: int = 0,

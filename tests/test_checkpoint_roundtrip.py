@@ -132,6 +132,39 @@ def test_adamw_mixed_policy_roundtrip(tmp_path):
     _assert_trees_equal(step(work, st), step(w2, st2))
 
 
+def test_packed_weights_roundtrip(tmp_path):
+    # int4 packed serving checkpoint: manifest structure checks, the
+    # streamed host-side restore, and the traceable in-graph rebuild
+    # must agree bitwise with each other (same codec) and stay within
+    # quantization error of the source
+    key = jax.random.PRNGKey(0)
+    params = {"a": jax.random.normal(key, (64, 33)),
+              "nest": {"b": jax.random.normal(jax.random.fold_in(key, 1),
+                                              (257,)),
+                       "c": jnp.arange(6.0).reshape(2, 3)}}
+    path = str(tmp_path / "w.packed.npz")
+    man = ckpt.save_packed(path, params, n_fragments=3)
+    assert man["format"] == ckpt.PACKED_FORMAT
+    assert man["f32_bytes"] == 4 * sum(np.asarray(l).size
+                                       for l in jax.tree.leaves(params))
+    assert man["packed_bytes"] < man["f32_bytes"] / 5
+
+    back = ckpt.restore_packed(path, params)
+    packed = ckpt.load_packed(path)
+    graph = jax.jit(lambda bufs: ckpt.unpack_params(
+        bufs, manifest=packed["manifest"], example_tree=params))(
+        {k: jnp.asarray(v) for k, v in packed["buffers"].items()})
+    _assert_trees_equal(back, graph)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+        # symmetric int4 with per-128 block scales: |err| <= scale step
+        step = np.abs(np.asarray(a)).max() / 7.0
+        assert np.abs(np.asarray(a) - np.asarray(b)).max() <= step + 1e-6
+
+    # structure mismatches are rejected up front
+    with pytest.raises(KeyError):
+        ckpt.restore_packed(path, {"a": params["a"]})
+
+
 def test_restore_rejects_shape_and_key_mismatch(tmp_path):
     state = {"w": jnp.ones((4,)), "b": jnp.zeros((2,))}
     path = str(tmp_path / "s.npz")
