@@ -70,15 +70,55 @@ def _path_str(p) -> str:
     return str(p)
 
 
+def _fsync_dir(dirname: str) -> None:
+    """fsync the directory entry so the rename itself is durable (a
+    crash after os.replace but before the metadata hits disk could
+    otherwise resurrect the old file — or neither)."""
+    try:
+        fd = os.open(dirname, os.O_RDONLY)
+    except OSError:
+        return                      # platform without dir-open; best effort
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def _atomic_savez(path: str, flat: dict) -> None:
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
-                               suffix=".tmp")
+    """Durable atomic write: temp file in the TARGET directory (same
+    filesystem, so the rename is atomic), flush + fsync before the
+    rename, fsync the directory after. A SIGKILL at any instant leaves
+    either the complete old file or the complete new one — never a
+    truncated npz."""
+    dirname = os.path.dirname(os.path.abspath(path))
+    os.makedirs(dirname, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=dirname, suffix=".tmp")
     os.close(fd)
     try:
         with open(tmp, "wb") as f:
             np.savez(f, **flat)
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, path)
+        _fsync_dir(dirname)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def atomic_write_json(path: str, payload, **dump_kw) -> None:
+    """Durable atomic json sidecar write (same tmp+fsync+rename
+    discipline as the npz payload)."""
+    dirname = os.path.dirname(os.path.abspath(path))
+    os.makedirs(dirname, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=dirname, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, **dump_kw)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+        _fsync_dir(dirname)
     finally:
         if os.path.exists(tmp):
             os.unlink(tmp)
@@ -88,8 +128,8 @@ def save(path: str, tree, metadata: dict | None = None) -> None:
     flat = _encode_extension_dtypes(_flatten(tree))
     _atomic_savez(path, flat)
     if metadata is not None:
-        with open(path + ".meta.json", "w") as f:
-            json.dump(metadata, f, indent=2, default=str)
+        atomic_write_json(path + ".meta.json", metadata, indent=2,
+                          default=str)
 
 
 def restore(path: str, example_tree):
@@ -234,8 +274,8 @@ def save_packed(path: str, params, *, n_fragments: int = 4,
     arrays[_MANIFEST_KEY] = np.asarray(json.dumps(manifest))
     _atomic_savez(path, arrays)
     if metadata is not None:
-        with open(path + ".meta.json", "w") as f:
-            json.dump(metadata, f, indent=2, default=str)
+        atomic_write_json(path + ".meta.json", metadata, indent=2,
+                          default=str)
     return manifest
 
 

@@ -203,6 +203,21 @@ class DiLoCoConfig:
     # only. Ignored by transport="simulated" (no wire) and by the f32
     # dtype (which rides the psum all-reduce either way).
     pack_wire: bool = True
+    # --- outer-gradient anomaly guard (resilience/guard.py) ---
+    # guard_outer=True adds per-replica sanity checks to the classic
+    # outer reduce: a replica whose outer delta contains any non-finite
+    # value is excluded from the average (exactly as if its weight were
+    # zero — its params still re-dispatch from the new global, which is
+    # the recovery). On all-finite rounds the guarded reduce is
+    # bit-identical to the unguarded one (multiplying the mask by 1.0
+    # and where-ing finite values through are exact identities — gated
+    # by BENCH_resilience.json).
+    guard_outer: bool = False
+    # > 0: additionally clip each replica's outer-delta norm to
+    # guard_clip × the median replica norm before the reduce (the
+    # norm-outlier escalation tier; 0 keeps norms untouched so clean
+    # runs stay bit-identical).
+    guard_clip: float = 0.0
     # --- replica-state precision policy (see optim/precision.py) ---
     # param_dtype:  storage dtype of the per-replica working params AND
     #               AdamW moments ("bfloat16" halves the params+moments

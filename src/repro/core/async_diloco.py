@@ -327,7 +327,8 @@ class AsyncEngine:
                            if v in live}
 
     def run(self, state: AsyncState, *, ticks: int,
-            max_events: int | None = None, recorder=None):
+            max_events: int | None = None, recorder=None,
+            on_crash=None):
         """Process the scenario timeline for ``ticks`` wall-clock ticks
         from ``state.events_done`` (so a restored state resumes exactly
         where it left off), optionally stopping after ``max_events``
@@ -338,6 +339,13 @@ class AsyncEngine:
         event record as it happens via ``async_event`` — purely
         host-side enrichment/printing; the computation is identical
         with or without it.
+
+        ``on_crash(state)`` is invoked when a ``faults.Crash`` event is
+        reached (the crash-grade injection path: the launcher SIGKILLs
+        its own process there). The crash consumes no rng/uid, so a
+        resume under the crash-free scenario replays the surviving
+        events bit-identically. If ``on_crash`` returns, the engine
+        simply continues (test mode).
         """
         cfg = self.cfg
         self._bind(state)
@@ -363,6 +371,12 @@ class AsyncEngine:
                 self._prune(state)
                 emit({"event": "leave", "tick": ev.tick,
                       "worker": ev.worker})
+            elif isinstance(ev, faults.Crash):
+                emit({"event": "crash", "tick": ev.tick})
+                state.events_done += 1
+                if on_crash is not None:
+                    on_crash(state)
+                continue
             elif isinstance(ev, faults.Join):
                 w = state.workers[ev.worker]
                 # moments died with the preemption: fresh opt, fresh

@@ -38,6 +38,7 @@ from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import DiLoCoConfig, TrainConfig
 from repro.optim import adamw, precision
@@ -166,13 +167,16 @@ def inner_phase(inner_step, replica_params, inner_state, batches,
 
 def outer_step(state: DiLoCoState, dcfg: DiLoCoConfig, *,
                drop_mask=None, active_mask=None, weights=None,
-               compute_cosine: bool = False):
+               compute_cosine: bool = False, bomb_mask=None):
     """Average outer gradients and update the global copy.
 
     drop_mask (k,) float: 1 = outer grad communicated, 0 = dropped
     (replica keeps its own params for the next phase — Fig 8 semantics).
     active_mask (k,) float: 0 = replica not part of the pool this round.
     weights (k,) float: shard-size weights (uniform if None).
+    bomb_mask (k,) float: fault injection — 1 poisons the replica's
+    outer delta to NaN before the reduce (``faults.Scenario.nan_masks``
+    rows; a corrupted-gradient stand-in the guard must catch).
     Returns (new_state, metrics).
     """
     k = dcfg.k
@@ -181,7 +185,6 @@ def outer_step(state: DiLoCoState, dcfg: DiLoCoConfig, *,
     active_mask = ones if active_mask is None else active_mask
     weights = ones if weights is None else weights
     m = drop_mask * active_mask * weights                     # (k,)
-    denom = jnp.maximum(m.sum(), 1e-9)
 
     kernel_mode = getattr(dcfg, "kernel_mode", "ref")
     masters = state.inner_state.master       # None unless mixed policy
@@ -192,10 +195,53 @@ def outer_step(state: DiLoCoState, dcfg: DiLoCoConfig, *,
     rep_src = masters if masters is not None else state.replica_params
     deltas = jax.tree.map(lambda g, r: g[None] - r,
                           state.global_params, rep_src)
+    if bomb_mask is not None:
+        deltas = jax.tree.map(
+            lambda d: jnp.where(
+                bomb_mask.reshape((k,) + (1,) * (d.ndim - 1)) > 0,
+                jnp.asarray(jnp.nan, d.dtype), d), deltas)
     if dcfg.prune_frac > 0:
         deltas = jax.vmap(
             lambda d: sign_prune(d, dcfg.prune_frac, mode=kernel_mode)
         )(deltas)
+
+    guard_metrics = {}
+    if getattr(dcfg, "guard_outer", False):
+        # per-replica sanity: a delta with ANY non-finite value is
+        # excluded from the reduce (weight 0 — identical to the
+        # drop-its-weight path, tested) and its values zeroed so
+        # NaN·0 cannot leak through the contraction. On finite rounds
+        # every op here is an exact identity, keeping the guarded
+        # clean path bit-identical to the unguarded one.
+        fin = jnp.stack([jnp.all(jnp.isfinite(
+            d.astype(jnp.float32).reshape(k, -1)), axis=1)
+            for d in jax.tree.leaves(deltas)]).all(axis=0)     # (k,)
+        ok = fin.astype(jnp.float32)
+        deltas = jax.tree.map(
+            lambda d: jnp.where(jnp.isfinite(d.astype(jnp.float32)),
+                                d, jnp.zeros((), d.dtype)), deltas)
+        m = m * ok
+        guard_metrics["guard_rejected"] = (1.0 - ok).sum()
+        if getattr(dcfg, "guard_clip", 0.0) > 0:
+            # norm-outlier clipping: scale any replica whose delta
+            # norm exceeds guard_clip × the median (of surviving
+            # replicas) down to that ceiling, before the reduce
+            norms = jnp.sqrt(sum(
+                jnp.sum(jnp.square(d.astype(jnp.float32)
+                                   .reshape(k, -1)), axis=1)
+                for d in jax.tree.leaves(deltas)))             # (k,)
+            med = jnp.nanmedian(jnp.where(ok > 0, norms, jnp.nan))
+            med = jnp.where(jnp.isfinite(med), med, 0.0)
+            ceil = dcfg.guard_clip * med
+            scale = jnp.where(norms > ceil,
+                              ceil / jnp.maximum(norms, 1e-30), 1.0)
+            deltas = jax.tree.map(
+                lambda d: d * scale.reshape(
+                    (k,) + (1,) * (d.ndim - 1)).astype(d.dtype),
+                deltas)
+            guard_metrics["guard_clipped"] = (scale < 1.0).sum()\
+                .astype(jnp.float32)
+    denom = jnp.maximum(m.sum(), 1e-9)
 
     # weighted average over communicating replicas. On the pod-sharded
     # path this contraction is THE cross-pod all-reduce.
@@ -230,6 +276,7 @@ def outer_step(state: DiLoCoState, dcfg: DiLoCoConfig, *,
     metrics = {
         "outer_gnorm": _tree_norm(avg),
         "drop_frac": 1.0 - drop_mask.mean(),
+        **guard_metrics,
     }
     if compute_cosine:
         cos_mean, cos_std = _pairwise_cosine(deltas, m)
@@ -275,7 +322,7 @@ def _pairwise_cosine(deltas, mask):
 def _make_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
                      tcfg: TrainConfig, *, total_steps=None,
                      compute_cosine=False, batch_size=None, seq_len=None,
-                     mesh=None):
+                     mesh=None, nan_bombs=None):
     """Un-jitted round: the computation shared by ``make_round`` (one
     jit dispatch per round) and ``make_run`` (R rounds scanned inside
     one jit).
@@ -294,6 +341,13 @@ def _make_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
             f"tcfg=({tcfg.param_dtype}, {tcfg.master_dtype}); the state "
             "layout (dcfg) must match the inner step (tcfg)")
     transport = getattr(dcfg, "transport", "simulated")
+    if nan_bombs is not None and (transport != "simulated"
+                                  or getattr(dcfg,
+                                             "streaming_fragments", 0)):
+        raise ValueError(
+            "nan_bombs poison the classic outer reduce "
+            "(transport='simulated', streaming_fragments=0); other "
+            "transports would silently ignore the injection")
     if transport == "gossip":
         # gossip reuses streaming_fragments as its partial-averaging
         # schedule, so it must be routed before the streaming check
@@ -323,6 +377,8 @@ def _make_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
         lambda p, b: loss_fn(p, b), tcfg, total_steps)
     B = batch_size or tcfg.batch_size
     S = seq_len or tcfg.seq_len
+    bombs_const = (None if nan_bombs is None
+                   else np.asarray(nan_bombs, np.float32))
 
     def round_body(state: DiLoCoState, key, drop_mask=None,
                    active_mask=None, weights=None):
@@ -337,9 +393,18 @@ def _make_round_body(loss_fn, sample_fn, dcfg: DiLoCoConfig,
         state = state._replace(
             replica_params=rp, inner_state=is_,
             inner_steps_done=state.inner_steps_done + H)
+        bomb = None
+        if bombs_const is not None:
+            # indexed by the state's own round counter (not the scan
+            # index) so a resumed run picks up the schedule in place
+            bomb = jnp.take(jnp.asarray(bombs_const),
+                            jnp.minimum(state.outer_t,
+                                        bombs_const.shape[0] - 1),
+                            axis=0)
         state, om = outer_step(state, dcfg, drop_mask=drop_mask,
                                active_mask=active_mask, weights=weights,
-                               compute_cosine=compute_cosine)
+                               compute_cosine=compute_cosine,
+                               bomb_mask=bomb)
         om["inner_loss"] = ms["loss"].mean()
         om["inner_loss_last"] = ms["loss"][:, -1].mean()
         return state, om
@@ -352,7 +417,7 @@ def make_round(loss_fn, sample_fn, dcfg: DiLoCoConfig, tcfg: TrainConfig,
                compute_cosine: bool = False,
                batch_size: int | None = None,
                seq_len: int | None = None,
-               mesh=None):
+               mesh=None, nan_bombs=None):
     """Build the jitted DiLoCo round.
 
     sample_fn(key, batch, seq_len) -> (k, B, S) int32 tokens, one batch
@@ -360,12 +425,14 @@ def make_round(loss_fn, sample_fn, dcfg: DiLoCoConfig, tcfg: TrainConfig,
     -> (state, metrics). Data for all H steps is sampled *inside* the
     round via fold_in so the jitted function stays closed over the
     sampler constants only. ``mesh`` is required (and only used) by the
-    sharded streaming transport.
+    sharded streaming transport. ``nan_bombs`` ((rounds, k) float mask,
+    classic transport only) injects NaN outer gradients on the masked
+    (round, worker) cells — rows indexed by the state's own ``outer_t``.
     """
     round_body = _make_round_body(
         loss_fn, sample_fn, dcfg, tcfg, total_steps=total_steps,
         compute_cosine=compute_cosine, batch_size=batch_size,
-        seq_len=seq_len, mesh=mesh)
+        seq_len=seq_len, mesh=mesh, nan_bombs=nan_bombs)
     return jax.jit(round_body)
 
 
@@ -390,7 +457,7 @@ def make_run(loss_fn, sample_fn, dcfg: DiLoCoConfig, tcfg: TrainConfig,
              batch_size: int | None = None,
              seq_len: int | None = None,
              eval_tokens=None, eval_every: int = 1,
-             donate: bool = True, mesh=None):
+             donate: bool = True, mesh=None, nan_bombs=None):
     """Build the scanned multi-round driver: R = ``rounds_per_call``
     full DiLoCo rounds execute inside ONE jitted call via ``lax.scan``,
     so the host dispatches once per R rounds instead of once per round
@@ -430,7 +497,7 @@ def make_run(loss_fn, sample_fn, dcfg: DiLoCoConfig, tcfg: TrainConfig,
     round_body = _make_round_body(
         loss_fn, sample_fn, dcfg, tcfg, total_steps=total_steps,
         compute_cosine=compute_cosine, batch_size=batch_size,
-        seq_len=seq_len, mesh=mesh)
+        seq_len=seq_len, mesh=mesh, nan_bombs=nan_bombs)
     R = int(rounds_per_call)
     ev_toks = None if eval_tokens is None else jnp.asarray(eval_tokens)
 

@@ -77,6 +77,17 @@ class Lost(NamedTuple):
     finish_tick: int = -1    # when its compute finished (first send)
 
 
+class Crash(NamedTuple):
+    """The PROCESS dies at ``tick`` — not a worker fault but a
+    crash-grade one: whatever is not durably checkpointed is gone.
+    Sorted after every other event at its tick (the crash takes the
+    tick's work down with it, having observed it), consumes no rng
+    draws and no uid, so a timeline with a Crash is the crash-free
+    timeline with one event spliced in: a run resumed from a snapshot
+    taken before the crash replays the identical suffix."""
+    tick: int
+
+
 @dataclass(frozen=True)
 class Scenario:
     """One scripted failure scenario, deterministic given its fields.
@@ -96,6 +107,14 @@ class Scenario:
                     from the global copy at rejoin_tick. rejoin_tick
                     <= 0 means it never returns (elastic shrink).
     seed            rng seed for drops and jitter.
+    crash_tick      < 0 disables; >= 0 splices a ``Crash`` event into
+                    the timeline at that tick (the driver SIGKILLs
+                    itself — the resilience benchmark's kill switch).
+    nan_bombs       ((worker, tick), ...) — worker's outer gradient is
+                    poisoned to NaN for the phase covering that tick
+                    (round transports: round tick // sync_round_ticks
+                    via ``nan_masks``). A hardware-corruption stand-in
+                    the anomaly guard must reject.
     """
     speeds: tuple = ()
     latency: tuple = ()
@@ -105,6 +124,45 @@ class Scenario:
     retry_backoff: int = 1
     preemptions: tuple = ()
     seed: int = 0
+    crash_tick: int = -1
+    nan_bombs: tuple = ()
+
+    def __post_init__(self):
+        """k-independent input validation — loud errors instead of
+        silent mis-simulation (k-dependent checks — worker ranges —
+        live in the resolved_* / _preempt_of / nan_masks views)."""
+        if not 0.0 <= float(self.drop_prob) <= 1.0:
+            raise ValueError(
+                f"drop_prob must be in [0, 1], got {self.drop_prob}")
+        if float(self.latency_jitter) < 0:
+            raise ValueError(f"latency_jitter must be >= 0, got "
+                             f"{self.latency_jitter}")
+        if int(self.max_retries) < 0:
+            raise ValueError(f"max_retries must be >= 0, got "
+                             f"{self.max_retries}")
+        if int(self.retry_backoff) < 1:
+            raise ValueError(f"retry_backoff must be >= 1 tick, got "
+                             f"{self.retry_backoff}")
+        for pre in self.preemptions:
+            if len(pre) != 3:
+                raise ValueError(
+                    f"preemptions entries are (worker, leave, rejoin) "
+                    f"triples, got {pre!r}")
+            w, leave, rejoin = (int(x) for x in pre)
+            if leave < 0:
+                raise ValueError(
+                    f"worker {w} leave tick must be >= 0, got {leave}")
+            # rejoin <= 0 is the "never returns" sentinel, so only its
+            # ordering vs leave is checked (in _preempt_of, per k)
+        for bomb in self.nan_bombs:
+            if len(bomb) != 2:
+                raise ValueError(
+                    f"nan_bombs entries are (worker, tick) pairs, "
+                    f"got {bomb!r}")
+            w, t = (int(x) for x in bomb)
+            if t < 0:
+                raise ValueError(
+                    f"nan bomb for worker {w} has negative tick {t}")
 
     # ---- named constructors for the canonical scenarios ----
 
@@ -191,6 +249,36 @@ class Scenario:
         the bill the barrier-free transports avoid."""
         return (max(self.resolved_speeds(k))
                 + max(self.resolved_latency(k)))
+
+    def _bombs_of(self, k: int) -> tuple:
+        """Validated ((worker, tick), ...); rejects unknown workers."""
+        out = []
+        for w, t in self.nan_bombs:
+            w, t = int(w), int(t)
+            if not 0 <= w < k:
+                raise ValueError(
+                    f"nan bomb worker {w} out of range for k={k}")
+            out.append((w, t))
+        return tuple(out)
+
+    def crash_round(self, k: int) -> int:
+        """The barrier-paced round a ``crash_tick`` falls in (< 0 when
+        no crash is scripted): round r spans ticks [r*T, (r+1)*T)."""
+        if self.crash_tick < 0:
+            return -1
+        return int(self.crash_tick) // self.sync_round_ticks(k)
+
+    def nan_masks(self, k: int, rounds: int):
+        """(rounds, k) float mask, 1 where a scripted NaN bomb poisons
+        the worker's outer gradient that round (tick -> round via the
+        barrier pacing, like ``round_masks``)."""
+        T = self.sync_round_ticks(k)
+        bombs = np.zeros((rounds, k), np.float32)
+        for w, t in self._bombs_of(k):
+            r = t // T
+            if r < rounds:
+                bombs[r, w] = 1.0
+        return bombs
 
     def round_masks(self, k: int, rounds: int):
         """(drops, actives) — two (rounds, k) float arrays in the
@@ -336,8 +424,15 @@ class Scenario:
                     break              # still retrying at the horizon
                 events.append(Lost(gave_up, i, uid - 1, t, finish))
                 t = gave_up            # continue from own params
-        order = {Join: 0, Arrival: 1, Lost: 2, Leave: 3}
-        events.sort(key=lambda e: (e.tick, order[type(e)], e.worker))
+        if 0 <= int(self.crash_tick) < ticks:
+            # the process dies AFTER the tick's worker events (the
+            # crash observes them; sort key below puts it last) — and
+            # consumes no rng/uid, so the crash-free timeline is this
+            # one minus the Crash: a resume replays the exact suffix
+            events.append(Crash(int(self.crash_tick)))
+        order = {Join: 0, Arrival: 1, Lost: 2, Leave: 3, Crash: 4}
+        events.sort(key=lambda e: (e.tick, order[type(e)],
+                                   getattr(e, "worker", -1)))
         return tuple(events)
 
 

@@ -18,13 +18,17 @@ Example:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
+import os
+import signal
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import resilience
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs.base import DiLoCoConfig, TrainConfig
 from repro.core import diloco, faults, schedules
@@ -63,7 +67,9 @@ def scenario_of(args) -> faults.Scenario | None:
     """
     used = (args.speeds or args.link_latency
             or args.latency_jitter > 0 or args.max_retries > 0
-            or args.preempt or args.transport == "async")
+            or args.preempt or args.transport == "async"
+            or args.crash_at_tick >= 0 or args.crash_at_round >= 0
+            or args.nan_bomb)
     if not used:
         return None
     k = args.k
@@ -76,7 +82,7 @@ def scenario_of(args) -> faults.Scenario | None:
         w, leave = int(parts[0]), int(parts[1])
         rejoin = int(parts[2]) if len(parts) == 3 else 0
         preempts.append((w, leave, rejoin))
-    return faults.Scenario(
+    scen = faults.Scenario(
         speeds=_int_list(args.speeds, k, "--speeds")
         if args.speeds else (1,) * k,
         latency=_int_list(args.link_latency, k, "--link-latency")
@@ -87,6 +93,24 @@ def scenario_of(args) -> faults.Scenario | None:
         retry_backoff=args.retry_backoff,
         preemptions=tuple(preempts),
         seed=args.seed)
+    # crash / NaN-bomb injections ride the scenario too. Round-domain
+    # flags convert through the barrier pacing T (one round = T ticks),
+    # so Scenario.crash_round / nan_masks project them right back.
+    T = scen.sync_round_ticks(k)
+    crash_tick = args.crash_at_tick
+    if args.crash_at_round >= 0:
+        crash_tick = args.crash_at_round * T
+    bombs = []
+    for spec in args.nan_bomb:
+        parts = spec.split(":")
+        if len(parts) != 2:
+            raise SystemExit(
+                f"--nan-bomb wants WORKER:ROUND, got {spec!r}")
+        bombs.append((int(parts[0]), int(parts[1]) * T))
+    if crash_tick >= 0 or bombs:
+        scen = dataclasses.replace(scen, crash_tick=crash_tick,
+                                   nan_bombs=tuple(bombs))
+    return scen
 
 
 def build(args):
@@ -132,8 +156,42 @@ def build(args):
         raise SystemExit("--pods requires --transport sharded")
     if args.restore and args.transport != "async":
         raise SystemExit("--restore resumes a full async engine state; "
-                         "round transports restart from --checkpoint "
-                         "params instead")
+                         "round transports resume from --checkpoint-dir "
+                         "snapshots (--resume auto) instead")
+    # ---- resilience flag validation ----
+    if not args.checkpoint_dir:
+        need_dir = [flag for flag, on in (
+            ("--resume", bool(args.resume)),
+            ("--checkpoint-every", args.checkpoint_every > 0)) if on]
+        if need_dir:
+            raise SystemExit(f"{', '.join(need_dir)} require(s) "
+                             "--checkpoint-dir")
+    if args.legacy_loop and (args.checkpoint_dir or args.guard
+                             or args.crash_at_round >= 0
+                             or args.nan_bomb):
+        raise SystemExit("--checkpoint-dir/--guard/--crash-at-round/"
+                         "--nan-bomb need the scanned driver's chunk "
+                         "boundaries; drop --legacy-loop")
+    if args.crash_at_tick >= 0 and args.crash_at_round >= 0:
+        raise SystemExit("--crash-at-tick and --crash-at-round are "
+                         "exclusive (tick = async domain, round = "
+                         "barrier domain)")
+    if args.crash_at_tick >= 0 and args.transport != "async":
+        raise SystemExit("--crash-at-tick addresses the async event "
+                         "timeline; round transports use "
+                         "--crash-at-round")
+    if args.nan_bomb and (args.transport != "simulated"
+                          or args.stream_fragments):
+        raise SystemExit("--nan-bomb injects into the classic outer "
+                         "reduce (--transport simulated, no "
+                         "--stream-fragments)")
+    if args.guard_clip > 0 and not args.guard_outer:
+        raise SystemExit("--guard-clip scales deltas inside the "
+                         "in-graph guard; add --guard-outer")
+    if args.resume and args.resume != "auto" \
+            and not args.resume.isdigit():
+        raise SystemExit(f"--resume wants 'auto' or a snapshot step, "
+                         f"got {args.resume!r}")
     dcfg = DiLoCoConfig(k=args.k, H=args.H, outer_opt=args.outer_opt,
                         outer_lr=args.outer_lr,
                         outer_momentum=args.outer_momentum,
@@ -152,7 +210,9 @@ def build(args):
                         master_dtype=args.master_dtype,
                         staleness_lambda=args.staleness_lambda,
                         gossip_pairing=args.gossip_pairing,
-                        gossip_mix=args.gossip_mix)
+                        gossip_mix=args.gossip_mix,
+                        guard_outer=args.guard_outer,
+                        guard_clip=args.guard_clip)
     total = args.pretrain_steps + args.rounds * args.H
     tcfg = TrainConfig(inner_lr=args.inner_lr, warmup_steps=args.warmup,
                        total_steps=total, batch_size=args.batch,
@@ -184,7 +244,24 @@ def _run_async_phase(args, dcfg, tcfg, loss_fn, sampler, params,
         loss_fn, samplers, dcfg, tcfg, scenario=scenario,
         total_steps=tcfg.total_steps, eval_fn=ev, eval_tokens=val,
         seed=args.seed)
-    if args.restore:
+    mgr = (resilience.CheckpointManager(args.checkpoint_dir,
+                                        retain=args.retain)
+           if args.checkpoint_dir else None)
+    resumed_from = -1
+    if args.resume and mgr is not None:
+        step = (mgr.latest_good() if args.resume == "auto"
+                else int(args.resume))
+        if step is None:
+            rec.note("resume: no verified snapshot, starting fresh")
+            state = eng.init_state(params)
+        else:
+            state = async_diloco.state_from_tree(
+                mgr.load_tree(step), params)
+            resumed_from = step
+            rec.note(f"resumed async snapshot {step}: "
+                     f"version={state.version} "
+                     f"events_done={state.events_done}")
+    elif args.restore:
         state = async_diloco.state_from_tree(
             ckpt.restore_tree(args.restore), params)
         rec.note(f"restored async state: version={state.version} "
@@ -198,8 +275,30 @@ def _run_async_phase(args, dcfg, tcfg, loss_fn, sampler, params,
                            "wire_dtype": dcfg.outer_grad_dtype}])
     rec.note(f"async transport: lambda={dcfg.staleness_lambda} "
              f"k={args.k} {ticks} tick(s), {eng.wire_bytes()} B/apply")
+    on_crash = None
+    if scenario.crash_tick >= 0:
+        def on_crash(_state):
+            rec.note(f"crash: SIGKILL at tick {scenario.crash_tick}")
+            os.kill(os.getpid(), signal.SIGKILL)
     t0 = time.time()
-    state, hist = eng.run(state, ticks=ticks, recorder=rec)
+    if mgr is not None and args.checkpoint_every > 0:
+        # sliced event loop: a durable snapshot every N events — the
+        # engine's events_done cursor is the resume point
+        hist = []
+        while True:
+            state, h = eng.run(state, ticks=ticks,
+                               max_events=args.checkpoint_every,
+                               recorder=rec, on_crash=on_crash)
+            hist.extend(h)
+            mgr.save(state.events_done,
+                     async_diloco.state_to_tree(state),
+                     metadata={"transport": "async", "k": args.k,
+                               "events_done": state.events_done})
+            if len(h) < args.checkpoint_every:
+                break
+    else:
+        state, hist = eng.run(state, ticks=ticks, recorder=rec,
+                              on_crash=on_crash)
     n_arr = sum(1 for r in hist if r["event"] == "arrival")
     rec.note(f"done in {time.time() - t0:.1f}s; {n_arr} applications "
              f"over {ticks} ticks; entropy floor = "
@@ -221,6 +320,17 @@ def _run_async_phase(args, dcfg, tcfg, loss_fn, sampler, params,
                             "H": args.H, "ticks": ticks,
                             "events_done": state.events_done})
         rec.note(f"checkpoint: {args.checkpoint}")
+    if args.state_hash_out:
+        vals = [r["val_loss"] for r in hist if "val_loss" in r]
+        ckpt.atomic_write_json(args.state_hash_out, {
+            "state_sha256": resilience.tree_sha256(
+                async_diloco.state_to_tree(state)),
+            "final_val_loss": vals[-1] if vals else None,
+            "resumed_from_step": resumed_from,
+            "events_done": int(state.events_done),
+            "ingest_calls": rec.ingest_calls,
+            "rollbacks": 0}, indent=2)
+        rec.note(f"state hash: {args.state_hash_out}")
     return rec.records
 
 
@@ -241,8 +351,24 @@ def run(args, recorder=None):
         transport=args.transport, log_format=args.log_format)
     rec.manifest.setdefault("config", dict(vars(args)))
 
+    # ---- resilience: durable snapshots + resume picker ----
+    mgr = (resilience.CheckpointManager(args.checkpoint_dir,
+                                        retain=args.retain)
+           if args.checkpoint_dir else None)
+    resume_step = None
+    if args.resume and mgr is not None and args.transport != "async":
+        resume_step = (mgr.latest_good() if args.resume == "auto"
+                       else int(args.resume))
+        if resume_step is None:
+            rec.note("resume: no verified snapshot, starting fresh")
+        elif not mgr.verify(resume_step):
+            raise SystemExit(f"--resume {resume_step}: snapshot fails "
+                             "integrity verification")
+
     # ---- pretraining phase (paper: 24k steps before DiLoCo) ----
-    if args.pretrain_steps:
+    # A resumed run skips it: the snapshot's state/key already carry
+    # the pretrain phase's full effect (params and rng consumption).
+    if args.pretrain_steps and resume_step is None:
         step = diloco.make_single_worker_step(loss_fn, tcfg,
                                               total_steps=tcfg.total_steps)
         from repro.optim import adamw, precision
@@ -312,7 +438,6 @@ def run(args, recorder=None):
                     "XLA_FLAGS=--xla_force_host_platform_device_"
                     "count=N (a multiple of k) before jax starts")
             mesh = make_pod_mesh(pods)
-            state = pod_collectives.shard_stream_state(state, mesh)
             rec.note(f"sharded transport: "
                      f"{pod_collectives.pods_of(mesh)} "
                      f"pods × {args.k // pod_collectives.pods_of(mesh)} "
@@ -324,6 +449,30 @@ def run(args, recorder=None):
                                "apply_step": args.H,
                                "wire_bytes": float(round_wire),
                                "wire_dtype": dcfg.outer_grad_dtype}])
+    # ---- resume + (re-)placement ----
+    # Snapshots live at HOST placement: the example captured here (its
+    # arrays outlive donation — only shapes/dtypes are read) restores
+    # a snapshot saved under ANY pod count; shard_stream_state then
+    # re-places it onto THIS run's mesh — the elastic-resize path.
+    snapshot_example = resilience.wrap(state, key, 0)
+    rounds_done = 0
+    if resume_step is not None:
+        state, key, rounds_done = resilience.unwrap(
+            mgr.load(resume_step, snapshot_example))
+        rec.note(f"resumed snapshot {resume_step}: "
+                 f"{rounds_done} round(s) done")
+    if mesh is not None:
+        from repro.core import pod_collectives
+        state = pod_collectives.shard_stream_state(state, mesh)
+
+    def load_snapshot(step):
+        """Restore snapshot ``step`` and re-place it for this run
+        (the guard's rollback path)."""
+        st, kk, rd = resilience.unwrap(mgr.load(step, snapshot_example))
+        if mesh is not None:
+            st = pod_collectives.shard_stream_state(st, mesh)
+        return st, kk, rd
+
     rng = np.random.default_rng(args.seed)
     drops = schedules.drop_masks(rng, args.drop_prob, args.k, args.rounds)
     sched = schedules.compute_schedule(args.compute_schedule, args.k,
@@ -341,6 +490,20 @@ def run(args, recorder=None):
                  f"{scen.sync_round_ticks(args.k)} "
                  "tick(s) (slowest worker + slowest link)")
     weights = jnp.asarray(shard_weights(sampler, args.weighted))
+    # crash / NaN-bomb injections projected onto the round domain
+    nan_masks = None
+    if scen is not None and scen.nan_bombs:
+        nan_masks = scen.nan_masks(args.k, args.rounds)
+        rec.note(f"nan bombs armed: {int(nan_masks.sum())} "
+                 "(worker, round) cell(s)")
+    crash_round = scen.crash_round(args.k) if scen is not None else -1
+    guard = None
+    if args.guard:
+        guard = resilience.AnomalyGuard(
+            resilience.GuardConfig(window=args.guard_window,
+                                   spike=args.guard_spike,
+                                   max_rollbacks=args.guard_rollbacks),
+            recorder=rec)
     gossip_rounds = []
 
     def emit_round(t, m, i=None, evaled=True, round_key=None):
@@ -405,21 +568,39 @@ def run(args, recorder=None):
     else:
         # Scanned driver: chunks of `rounds_per_call` rounds run inside
         # one jit each (donated carry, in-graph eval every round); the
-        # host only touches metrics at chunk boundaries.
+        # host only touches metrics at chunk boundaries. All the
+        # resilience hooks (snapshots, crash, guard) live at those same
+        # boundaries — they add zero host syncs per chunk.
         rpc = max(1, min(args.rounds_per_call or args.rounds,
                          args.rounds))
+        ckpt_every = args.checkpoint_every if mgr is not None else 0
         runs = {}
-        t = 0
-        while t < args.rounds:
-            n = min(rpc, args.rounds - t)
-            if n not in runs:
-                runs[n] = diloco.make_run(
-                    loss_fn, sampler.sample_all_shards, dcfg, tcfg,
+        guarded = False       # flips after a guard rollback: the
+        #                       replay escalates to the in-graph guard
+
+        def get_run(n):
+            kk = (n, guarded)
+            if kk not in runs:
+                d = (dataclasses.replace(dcfg, guard_outer=True)
+                     if guarded else dcfg)
+                runs[kk] = diloco.make_run(
+                    loss_fn, sampler.sample_all_shards, d, tcfg,
                     rounds_per_call=n, total_steps=tcfg.total_steps,
                     compute_cosine=args.cosine_stats,
                     batch_size=args.batch, seq_len=args.seq,
                     eval_tokens=val, eval_every=args.eval_every,
-                    mesh=mesh)
+                    mesh=mesh, nan_bombs=nan_masks)
+            return runs[kk]
+
+        t = rounds_done
+        while t < args.rounds:
+            n = min(rpc, args.rounds - t)
+            if ckpt_every:
+                # land chunk boundaries on the snapshot cadence
+                n = min(n, ckpt_every - t % ckpt_every)
+            if 0 <= crash_round and t <= crash_round:
+                # ... and on the scripted kill point
+                n = min(n, crash_round + 1 - t)
             subs = None
             if frag_wire is not None:
                 # host replica of the in-graph split_chain: the round
@@ -431,9 +612,10 @@ def run(args, recorder=None):
             # round_offset keeps the in-graph eval cadence globally
             # aligned across chunk boundaries (traced: chunks of equal
             # size share one compiled function)
-            state, ms = runs[n](state, key, jnp.asarray(drops[t:t + n]),
-                                jnp.asarray(acts[t:t + n]), weights,
-                                round_offset=t)
+            state, ms = get_run(n)(state, key,
+                                   jnp.asarray(drops[t:t + n]),
+                                   jnp.asarray(acts[t:t + n]), weights,
+                                   round_offset=t)
             key = ms.pop("next_key")
             ms = rec.ingest_chunk(ms)
             for i in range(n):
@@ -442,6 +624,38 @@ def run(args, recorder=None):
                 emit_round(t + i, ms, i, evaled=evaled,
                            round_key=None if subs is None else subs[i])
             t += n
+            # (1) scripted kill: BEFORE this boundary's snapshot, so
+            # the resume has to replay the crashed round from the last
+            # durable state
+            if 0 <= crash_round < t:
+                rec.note(f"crash: SIGKILL at round boundary {t}")
+                os.kill(os.getpid(), signal.SIGKILL)
+            # (2) anomaly guard: judge the chunk from metrics already
+            # materialized; on anomaly, roll back to the last good
+            # snapshot and replay with the in-graph guard armed
+            if guard is not None:
+                losses = [float(ms["val_loss"][i])
+                          if ((t - n + i + 1) % args.eval_every == 0
+                              or i == n - 1)
+                          else float(ms["inner_loss"][i])
+                          for i in range(n)]
+                bad = guard.observe_chunk(t - n, losses)
+                if bad and mgr is not None and guard.can_rollback():
+                    back = mgr.latest_good()
+                    if back is not None and back < t:
+                        state, key, t = load_snapshot(back)
+                        guard.rolled_back(to_round=back,
+                                          skip_round=bad[0]["round"])
+                        guarded = True
+                        continue
+            # (3) durable snapshot at the cadence (host placement is
+            # restored by the example on load, so a snapshot taken on
+            # a pods=p mesh resumes under pods=p')
+            if ckpt_every and (t % ckpt_every == 0 or t == args.rounds):
+                mgr.save(t, resilience.wrap(state, key, t),
+                         metadata={"transport": args.transport,
+                                   "k": args.k, "H": args.H,
+                                   "rounds_done": t})
 
     rec.note(f"done in {time.time() - t0:.1f}s; "
              f"entropy floor = {sampler.entropy_floor():.4f} "
@@ -490,6 +704,23 @@ def run(args, recorder=None):
                   metadata={"rounds": args.rounds, "k": args.k,
                             "H": args.H})
         rec.note(f"checkpoint: {args.checkpoint}")
+    if args.state_hash_out:
+        rrecs = rec.round_records()
+        vals = [r["val_loss"] for r in rrecs
+                if r.get("val_loss") is not None]
+        ckpt.atomic_write_json(args.state_hash_out, {
+            "state_sha256": resilience.tree_sha256(state),
+            "leaf_sha256": resilience.leaf_hashes(state),
+            "final_val_loss": vals[-1] if vals else None,
+            "final_inner_loss": (rrecs[-1]["inner_loss"]
+                                 if rrecs else None),
+            "resumed_from_step": (-1 if resume_step is None
+                                  else int(resume_step)),
+            "rounds_done": args.rounds,
+            "ingest_calls": rec.ingest_calls,
+            "rollbacks": 0 if guard is None else guard.rollbacks_used},
+            indent=2)
+        rec.note(f"state hash: {args.state_hash_out}")
     return rec.records
 
 
@@ -645,6 +876,62 @@ def make_parser():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="")
     ap.add_argument("--checkpoint", default="")
+    # ---- resilience (src/repro/resilience/) ----
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="durable snapshot directory (atomic npz + "
+                         "sha256 manifest per snapshot, retention, "
+                         "resume picker) — all five transports")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="snapshot cadence: every N rounds (round "
+                         "transports) / every N events (async); "
+                         "0 = only what --checkpoint writes")
+    ap.add_argument("--resume", default="",
+                    help="'auto' resumes from the newest snapshot in "
+                         "--checkpoint-dir that passes integrity "
+                         "verification (falling back past corrupt "
+                         "ones); a number resumes that exact step")
+    ap.add_argument("--retain", type=int, default=3,
+                    help="snapshots kept in --checkpoint-dir (oldest "
+                         "deleted first)")
+    ap.add_argument("--crash-at-round", type=int, default=-1,
+                    help="fault injection: SIGKILL this process at the "
+                         "chunk boundary right after the given round "
+                         "completes, BEFORE that boundary's snapshot "
+                         "(round transports)")
+    ap.add_argument("--crash-at-tick", type=int, default=-1,
+                    help="fault injection: splice a Crash event into "
+                         "the async timeline at this tick (the engine "
+                         "SIGKILLs the process when it reaches it)")
+    ap.add_argument("--nan-bomb", action="append", default=[],
+                    metavar="W:ROUND",
+                    help="fault injection: poison worker W's outer "
+                         "gradient to NaN in the given round "
+                         "(repeatable; classic simulated transport)")
+    ap.add_argument("--guard", action="store_true",
+                    help="host-side anomaly guard: rolling loss spike "
+                         "detection at chunk boundaries, with "
+                         "rollback-to-last-snapshot + in-graph-guard "
+                         "escalation when --checkpoint-dir is set")
+    ap.add_argument("--guard-window", type=int, default=8,
+                    help="guard rolling-statistics window (rounds)")
+    ap.add_argument("--guard-spike", type=float, default=4.0,
+                    help="guard spike threshold in rolling std devs")
+    ap.add_argument("--guard-rollbacks", type=int, default=2,
+                    help="guard escalation budget: rollbacks allowed "
+                         "per run")
+    ap.add_argument("--guard-outer", action="store_true",
+                    help="in-graph guard: exclude replicas with "
+                         "non-finite outer deltas from the outer "
+                         "reduce (bit-identical on clean rounds)")
+    ap.add_argument("--guard-clip", type=float, default=0.0,
+                    help="with --guard-outer: clip each replica's "
+                         "outer-delta norm to this multiple of the "
+                         "median replica norm (0 = off)")
+    ap.add_argument("--state-hash-out", default="",
+                    help="write a JSON with the final state's sha256, "
+                         "final losses and resume provenance — the "
+                         "bit-identity gate the resilience benchmarks "
+                         "compare across processes")
     return ap
 
 

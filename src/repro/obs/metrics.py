@@ -175,6 +175,18 @@ class RunRecorder:
             rec.update({k: float(v) for k, v in extras.items()})
         return self._emit(rec, _round_text(rec, rounds))
 
+    def guard_event(self, *, action: str, round: int,
+                    **fields) -> dict:
+        """One anomaly-guard verdict (``resilience.guard``): a spike /
+        non-finite detection, a rollback, or a skipped round. Pure
+        host-side bookkeeping — emitting it touches no device value."""
+        rec = {"kind": "event", "phase": "guard",
+               "transport": self.transport, "event": action,
+               "round": int(round), **fields}
+        detail = " ".join(f"{k}={v}" for k, v in fields.items())
+        return self._emit(
+            rec, f"[guard] {action} round={int(round)} {detail}".rstrip())
+
     def async_event(self, rec: dict) -> dict:
         """Ingest one ``AsyncEngine`` event record (already keyed by
         ``event``/``tick``/``worker``), stamping the unified kind /

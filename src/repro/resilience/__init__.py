@@ -1,0 +1,25 @@
+"""Crash-grade recovery: durable checkpoints, anomaly guard, harness.
+
+The subsystem has three legs (ISSUE 10):
+
+- ``manager``     — CheckpointManager: atomic npz snapshots with a
+                    per-leaf sha256 manifest, retention, and a resume
+                    picker that skips truncated/corrupt files.
+- ``state_codec`` — wraps any transport's carry (DiLoCoState /
+                    StreamState / GossipState / the async engine's
+                    tree) together with the host RNG key and the round
+                    cursor into one checkpointable pytree, and hashes
+                    trees for bit-identity gates.
+- ``guard``       — host-side rolling loss statistics with a spike
+                    detector and the rollback-and-skip escalation
+                    verdicts (the in-graph NaN/Inf rejection lives in
+                    ``core.diloco.outer_step`` under
+                    ``dcfg.guard_outer``).
+- ``harness``     — subprocess driver for crash/corrupt experiments
+                    (SIGKILL a live run, corrupt its newest snapshot,
+                    relaunch with ``--resume auto``).
+"""
+from . import guard, harness, manager, state_codec  # noqa: F401
+from .guard import AnomalyGuard, GuardConfig  # noqa: F401
+from .manager import CheckpointManager  # noqa: F401
+from .state_codec import leaf_hashes, tree_sha256, unwrap, wrap  # noqa: F401

@@ -1,0 +1,92 @@
+"""Wrap a transport carry + RNG + round cursor into one checkpoint tree.
+
+Every round-shaped transport (sync / streaming / sharded / gossip)
+carries its whole training state in one pytree (``DiLoCoState``,
+``StreamState``, ``GossipState``) and advances the host RNG by exactly
+one ``jax.random.split`` per scanned chunk (``metrics["next_key"]``).
+A resume therefore needs precisely three things: the state tree, the
+host key as it stood at the cut, and how many rounds were already done
+(the data-pipeline position is a pure function of the key chain and
+the round index — sampling is fully keyed in-graph, nothing else is
+stateful). ``wrap``/``unwrap`` bundle those into a dict pytree that
+rides the existing ``checkpoint.py`` codecs unchanged; the async
+engine keeps its own richer ``state_to_tree`` layout and only the
+rng/cursor envelope here.
+
+``tree_sha256`` is the bit-identity gate: a deterministic digest over
+every leaf's dtype, shape and raw bytes, path-sorted — two runs whose
+trees hash equal are bit-identical, across processes and commits.
+"""
+from __future__ import annotations
+
+import hashlib
+
+import jax
+import numpy as np
+
+_FORMAT = 1
+
+
+def wrap(state, key, rounds_done: int) -> dict:
+    """Bundle (state tree, host rng key, rounds-done cursor) into the
+    checkpointable envelope. ``state`` may be any pytree (NamedTuple
+    states included — ``checkpoint.reshape_like`` restores the exact
+    structure from an example)."""
+    return {
+        "state": state,
+        "rng": {"key": key},
+        # int32: the restore path casts to the example's dtype, and
+        # int64 would warn (and truncate) under jax's default x64-off
+        "cursor": {"rounds_done": np.int32(rounds_done),
+                   "format": np.int32(_FORMAT)},
+    }
+
+
+def unwrap(tree: dict):
+    """Inverse of ``wrap``: returns (state, key, rounds_done)."""
+    fmt = int(np.asarray(tree["cursor"]["format"]))
+    if fmt != _FORMAT:
+        raise ValueError(
+            f"checkpoint envelope format {fmt} != supported {_FORMAT}")
+    return (tree["state"], tree["rng"]["key"],
+            int(np.asarray(tree["cursor"]["rounds_done"])))
+
+
+def _leaf_bytes(x) -> tuple:
+    a = np.asarray(x)
+    # bfloat16 & friends have no portable buffer protocol — hash the
+    # uint16 bit view, exactly what checkpoint.py writes to disk.
+    if a.dtype.kind == "V" or a.dtype.name not in np.sctypeDict:
+        a = a.view(np.uint16) if a.dtype.itemsize == 2 else a.view(np.uint8)
+    return a.dtype.str, a.shape, np.ascontiguousarray(a).tobytes()
+
+
+def leaf_hashes(tree) -> dict:
+    """Per-leaf sha256 digests keyed by tree path — the debugging view
+    of ``tree_sha256`` (which leaf made two runs' digests disagree?)."""
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        dstr, shape, raw = _leaf_bytes(leaf)
+        h = hashlib.sha256()
+        h.update(dstr.encode())
+        h.update(repr(shape).encode())
+        h.update(raw)
+        out[jax.tree_util.keystr(path)] = h.hexdigest()
+    return out
+
+
+def tree_sha256(tree) -> str:
+    """Deterministic digest of a pytree: every leaf's path, dtype,
+    shape and raw bytes folded into one sha256, sorted by path so the
+    digest is independent of dict insertion order."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    items = sorted(
+        (jax.tree_util.keystr(path), _leaf_bytes(leaf))
+        for path, leaf in leaves)
+    h = hashlib.sha256()
+    for path, (dstr, shape, raw) in items:
+        h.update(path.encode())
+        h.update(dstr.encode())
+        h.update(repr(shape).encode())
+        h.update(raw)
+    return h.hexdigest()

@@ -1,0 +1,175 @@
+"""Scenario input validation (every __post_init__ rejection, loudly)
+and the crash-grade extensions: Crash timeline splice semantics,
+crash_round pacing, and the nan-bomb round masks."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import faults
+from repro.core.faults import Crash, Scenario
+
+
+# ---------------------------------------------------------------------------
+# __post_init__ rejections, one by one
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad", [-0.1, 1.5])
+def test_drop_prob_out_of_range(bad):
+    with pytest.raises(ValueError, match="drop_prob"):
+        Scenario(drop_prob=bad)
+
+
+def test_negative_latency_jitter():
+    with pytest.raises(ValueError, match="latency_jitter"):
+        Scenario(latency_jitter=-0.5)
+
+
+def test_negative_max_retries():
+    with pytest.raises(ValueError, match="max_retries"):
+        Scenario(max_retries=-1)
+
+
+def test_zero_retry_backoff():
+    # 0 would make a retry instantaneous (and the retry loop pointless)
+    with pytest.raises(ValueError, match="retry_backoff"):
+        Scenario(retry_backoff=0)
+
+
+def test_preemption_entry_arity():
+    with pytest.raises(ValueError, match="triples"):
+        Scenario(preemptions=((1, 2),))
+
+
+def test_preemption_negative_leave():
+    with pytest.raises(ValueError, match="leave tick"):
+        Scenario(preemptions=((0, -1, 5),))
+
+
+def test_preemption_never_returns_sentinel_is_legal():
+    # rejoin <= 0 = elastic shrink; must construct fine
+    s = Scenario(preemptions=((0, 3, 0),))
+    assert s._preempt_of(2) == {0: [(3, 0)]}
+
+
+def test_nan_bomb_entry_arity():
+    with pytest.raises(ValueError, match="pairs"):
+        Scenario(nan_bombs=((1,),))
+
+
+def test_nan_bomb_negative_tick():
+    with pytest.raises(ValueError, match="negative tick"):
+        Scenario(nan_bombs=((0, -3),))
+
+
+def test_valid_scenario_constructs():
+    s = Scenario(drop_prob=0.5, max_retries=2, retry_backoff=2,
+                 latency_jitter=0.3, preemptions=((1, 2, 5),),
+                 crash_tick=7, nan_bombs=((0, 3),))
+    assert s.crash_tick == 7 and s.nan_bombs == ((0, 3),)
+
+
+# k-dependent range checks stay in the per-k views
+def test_bomb_worker_out_of_range():
+    s = Scenario(nan_bombs=((4, 1),))
+    with pytest.raises(ValueError, match="out of range"):
+        s._bombs_of(4)
+    assert s._bombs_of(5) == ((4, 1),)
+
+
+def test_preemption_worker_out_of_range():
+    s = Scenario(preemptions=((3, 1, 4),))
+    with pytest.raises(ValueError, match="out of range"):
+        s._preempt_of(2)
+
+
+def test_preemption_overlapping_spans_rejected():
+    # same worker away twice with the second leave inside the first
+    # span — silent mis-simulation without the check
+    s = Scenario(preemptions=((0, 2, 8), (0, 5, 10)))
+    with pytest.raises(ValueError, match="overlap"):
+        s._preempt_of(2)
+
+
+def test_preemption_rejoin_before_leave_rejected():
+    with pytest.raises(ValueError, match="after"):
+        Scenario(preemptions=((0, 5, 3),))._preempt_of(2)
+
+
+# ---------------------------------------------------------------------------
+# crash_round / nan_masks: tick -> barrier-round projection
+# ---------------------------------------------------------------------------
+
+def test_crash_round_pacing():
+    assert Scenario().crash_round(4) == -1          # no crash scripted
+    assert Scenario(crash_tick=5).crash_round(4) == 5   # T = 1
+    # stragglers stretch the barrier: T = max(speeds) + max(latency)
+    s = Scenario(speeds=(1, 1, 1, 3), latency=(0, 0, 0, 1),
+                 crash_tick=9)
+    assert s.sync_round_ticks(4) == 4
+    assert s.crash_round(4) == 2
+
+
+def test_nan_masks_layout_and_horizon():
+    s = Scenario(speeds=(2, 2, 2, 2),               # T = 2
+                 nan_bombs=((1, 4), (3, 5), (0, 99)))
+    m = s.nan_masks(4, rounds=3)
+    assert m.shape == (3, 4) and m.dtype == np.float32
+    want = np.zeros((3, 4), np.float32)
+    want[2, 1] = 1.0                                # tick 4 -> round 2
+    want[2, 3] = 1.0                                # tick 5 -> round 2
+    np.testing.assert_array_equal(m, want)          # tick 99: beyond R
+
+
+# ---------------------------------------------------------------------------
+# Crash in the timeline: a pure splice
+# ---------------------------------------------------------------------------
+
+def faulty_scenario(**kw) -> Scenario:
+    return Scenario(speeds=(1, 2, 1, 1), latency=(0, 1, 0, 0),
+                    drop_prob=0.2, max_retries=1, seed=3,
+                    preemptions=((2, 3, 6),), **kw)
+
+
+def test_crash_is_spliced_not_simulated():
+    """The whole resume story rests on this: adding a Crash changes
+    NOTHING else about the timeline (no rng draws, no uid), so a run
+    restored from a pre-crash snapshot replays the identical suffix."""
+    k, ticks = 4, 10
+    clean = faulty_scenario().timeline(k, ticks)
+    crashed = faulty_scenario(crash_tick=5).timeline(k, ticks)
+    crashes = [e for e in crashed if isinstance(e, Crash)]
+    assert crashes == [Crash(5)]
+    assert tuple(e for e in crashed if not isinstance(e, Crash)) == clean
+
+
+def test_crash_sorts_after_its_ticks_work():
+    # the crash observes (takes down) the tick's completed work: every
+    # other event at the crash tick precedes it
+    ev = faulty_scenario(crash_tick=4).timeline(4, 10)
+    idx = next(i for i, e in enumerate(ev) if isinstance(e, Crash))
+    assert all(e.tick >= 4 for e in ev[idx:])
+    assert all(not (e.tick == 4 and i > idx)
+               for i, e in enumerate(ev) if not isinstance(e, Crash))
+
+
+def test_crash_outside_horizon_never_fires():
+    for tick in (-1, 10, 11):
+        ev = faulty_scenario(crash_tick=tick).timeline(4, 10)
+        assert not any(isinstance(e, Crash) for e in ev)
+
+
+def test_crash_round_boundary_matches_timeline_crash():
+    # the round-transport kill switch and the async timeline splice
+    # agree on where the crash lands
+    s = Scenario.uniform(4, crash_tick=6)
+    assert s.crash_round(4) == 6 // s.sync_round_ticks(4)
+    assert any(isinstance(e, Crash) and e.tick == 6
+               for e in s.timeline(4, 12))
+
+
+def test_crash_event_has_no_worker_field():
+    # sort key uses getattr(e, "worker", -1); Crash carries only the
+    # tick, by construction
+    assert Crash._fields == ("tick",)
+    assert faults.Lost._fields[:3] == ("tick", "worker", "uid")

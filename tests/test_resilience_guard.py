@@ -1,0 +1,289 @@
+"""Anomaly guard, both tiers: the in-graph NaN/Inf rejection and
+norm-outlier clip in ``diloco.outer_step`` (``dcfg.guard_outer`` /
+``guard_clip``), and the host-side ``resilience.AnomalyGuard`` rolling
+statistics + rollback bookkeeping the launcher escalates through.
+
+The load-bearing claims: a guarded CLEAN round is bit-identical to an
+unguarded one (the guard must be free when nothing is wrong), and a
+rejected replica is numerically identical to a zero-weight replica
+(the guard composes with the Fig 8 drop semantics it reuses)."""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import DiLoCoConfig, TrainConfig
+from repro.core import diloco
+from repro.resilience import AnomalyGuard, GuardConfig
+
+
+def quad_loss(p, batch):
+    t = batch["tokens"].astype(jnp.float32).mean() / 7.0
+    return (jnp.sum((p["w"] - t) ** 2)
+            + 0.1 * jnp.sum(jnp.square(p["b"]))), {}
+
+
+def tiny_params():
+    return {"w": jnp.arange(8.0) / 8.0, "b": jnp.ones((3,))}
+
+
+def sample_all(k):
+    def fn(key, B, S):
+        return jax.random.randint(key, (k, B, S), 0, 7, jnp.int32)
+    return fn
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert x.dtype == y.dtype
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def make_cfgs(k=4, **dkw):
+    dcfg = DiLoCoConfig(k=k, H=2, outer_lr=0.3, **dkw)
+    tcfg = TrainConfig(inner_lr=0.05, warmup_steps=2, total_steps=64,
+                       batch_size=2, seq_len=4)
+    return dcfg, tcfg
+
+
+def drifted_state(dcfg, tcfg, rounds=2):
+    """A state whose replicas have genuinely drifted from the global
+    copy (so outer deltas are nonzero and the guard has work to judge)."""
+    rnd = diloco.make_round(quad_loss, sample_all(dcfg.k), dcfg, tcfg,
+                            total_steps=64)
+    state = diloco.init_state(tiny_params(), dcfg)
+    key = jax.random.PRNGKey(0)
+    for t in range(rounds):
+        state, _ = rnd(state, jax.random.fold_in(key, t))
+    # desynchronize the replicas from the global so deltas are nonzero
+    noise = jax.random.normal(jax.random.PRNGKey(5), (dcfg.k,)) * 0.01
+    return state._replace(replica_params=jax.tree.map(
+        lambda r: r + noise.reshape((dcfg.k,) + (1,) * (r.ndim - 1))
+        .astype(r.dtype), state.replica_params))
+
+
+# ---------------------------------------------------------------------------
+# in-graph guard: outer_step under dcfg.guard_outer
+# ---------------------------------------------------------------------------
+
+def outer(state, dcfg, **kw):
+    return jax.jit(lambda s: diloco.outer_step(s, dcfg, **kw))(state)
+
+
+def test_guard_is_bit_identical_on_clean_rounds():
+    dcfg, tcfg = make_cfgs()
+    state = drifted_state(dcfg, tcfg)
+    guarded = dataclasses.replace(dcfg, guard_outer=True)
+    s0, m0 = outer(state, dcfg)
+    s1, m1 = outer(state, guarded)
+    _assert_trees_equal(s0, s1)
+    assert float(m1["guard_rejected"]) == 0.0
+    assert float(m0["outer_gnorm"]) == float(m1["outer_gnorm"])
+
+
+def test_guard_with_clip_is_bit_identical_when_norms_agree():
+    # replicas perturbed by comparable noise: no norm exceeds
+    # guard_clip x median, so the scale is exactly 1.0 everywhere and
+    # the multiply is an identity — clip enabled must cost nothing
+    dcfg, tcfg = make_cfgs()
+    state = drifted_state(dcfg, tcfg)
+    clipped = dataclasses.replace(dcfg, guard_outer=True,
+                                  guard_clip=100.0)
+    s0, _ = outer(state, dcfg)
+    s1, m1 = outer(state, clipped)
+    _assert_trees_equal(s0, s1)
+    assert float(m1["guard_clipped"]) == 0.0
+
+
+def test_rejected_replica_equals_zero_weight_replica():
+    """Bombing replica 0 with NaN under the guard must produce the
+    same GLOBAL update as dropping replica 0's communication — the
+    rejection literally is a zeroed weight. Re-dispatch differs by
+    design: the dropped replica keeps its own params (Fig 8), the
+    bombed one adopts the new global (its local state is poison)."""
+    dcfg, tcfg = make_cfgs()
+    state = drifted_state(dcfg, tcfg)
+    k = dcfg.k
+    guarded = dataclasses.replace(dcfg, guard_outer=True)
+    bomb = jnp.zeros((k,)).at[0].set(1.0)
+    drop = jnp.ones((k,)).at[0].set(0.0)
+
+    s_bomb, m_bomb = outer(state, guarded, bomb_mask=bomb)
+    s_drop, m_drop = outer(state, dcfg, drop_mask=drop)
+
+    assert float(m_bomb["guard_rejected"]) == 1.0
+    _assert_trees_equal(s_bomb.global_params, s_drop.global_params)
+    _assert_trees_equal(s_bomb.outer_state, s_drop.outer_state)
+    assert float(m_bomb["outer_gnorm"]) == float(m_drop["outer_gnorm"])
+    # bombed replica re-dispatches from the new global...
+    for g, r in zip(jax.tree.leaves(s_bomb.global_params),
+                    jax.tree.leaves(s_bomb.replica_params)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(r[0]))
+    # ...while the dropped replica kept its own pre-round params
+    kept = jax.tree.leaves(state.replica_params)[0][0]
+    got = jax.tree.leaves(s_drop.replica_params)[0][0]
+    np.testing.assert_array_equal(np.asarray(kept), np.asarray(got))
+
+
+def test_unguarded_bomb_poisons_everything():
+    # the negative control: without the guard the NaN reaches the
+    # reduce and the global copy is gone
+    dcfg, tcfg = make_cfgs()
+    state = drifted_state(dcfg, tcfg)
+    bomb = jnp.zeros((dcfg.k,)).at[1].set(1.0)
+    s, _ = outer(state, dcfg, bomb_mask=bomb)
+    assert not np.isfinite(
+        np.asarray(jax.tree.leaves(s.global_params)[0])).all()
+
+
+def test_all_replicas_bombed_keeps_global_finite():
+    # denom floors at 1e-9; an all-rejected round must degenerate to
+    # (approximately) no update, never to NaN
+    dcfg, tcfg = make_cfgs()
+    state = drifted_state(dcfg, tcfg)
+    guarded = dataclasses.replace(dcfg, guard_outer=True)
+    s, m = outer(state, guarded, bomb_mask=jnp.ones((dcfg.k,)))
+    assert float(m["guard_rejected"]) == dcfg.k
+    for leaf in jax.tree.leaves(s.global_params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_guard_clip_tames_norm_outlier():
+    dcfg, tcfg = make_cfgs()
+    state = drifted_state(dcfg, tcfg)
+    # blow up replica 2's delta by a factor the clip must catch
+    boost = jnp.ones((dcfg.k,)).at[2].set(1000.0)
+    state = state._replace(replica_params=jax.tree.map(
+        lambda r, g: g[None] + (r - g[None]) * boost.reshape(
+            (dcfg.k,) + (1,) * (r.ndim - 1)).astype(r.dtype),
+        state.replica_params, state.global_params))
+    clipped = dataclasses.replace(dcfg, guard_outer=True, guard_clip=4.0)
+    s_clip, m_clip = outer(state, clipped)
+    s_raw, m_raw = outer(state, dataclasses.replace(dcfg,
+                                                    guard_outer=True))
+    assert float(m_clip["guard_clipped"]) == 1.0
+    assert float(m_clip["guard_rejected"]) == 0.0
+    # the outlier dominated the unclipped average; clipping shrinks it
+    assert float(m_clip["outer_gnorm"]) < float(m_raw["outer_gnorm"])
+    for leaf in jax.tree.leaves(s_clip.global_params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_scanned_run_with_nan_bombs_and_guard_stays_finite():
+    """End-to-end through make_run: a mid-run NaN bomb row with the
+    guard on yields finite losses every round and a finite state; the
+    bombed round reports the rejection in its stacked metrics."""
+    k, R = 4, 4
+    dcfg, tcfg = make_cfgs(k, guard_outer=True)
+    bombs = np.zeros((R, k), np.float32)
+    bombs[2, 1] = 1.0
+    val = jax.random.randint(jax.random.PRNGKey(9), (4, 4), 0, 7,
+                             jnp.int32)
+    run = diloco.make_run(quad_loss, sample_all(k), dcfg, tcfg,
+                          rounds_per_call=R, total_steps=64,
+                          batch_size=2, seq_len=4, eval_tokens=val,
+                          nan_bombs=bombs, donate=False)
+    state = diloco.init_state(tiny_params(), dcfg)
+    state, ms = run(state, jax.random.PRNGKey(0), None, None, None)
+    rej = np.asarray(ms["guard_rejected"])
+    assert rej.shape == (R,)
+    np.testing.assert_array_equal(rej, [0, 0, 1, 0])
+    assert np.isfinite(np.asarray(ms["val_loss"])[-1])
+    for leaf in jax.tree.leaves(state.global_params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_nan_bombs_rejected_off_classic_simulated_transport():
+    k = 4
+    bombs = np.zeros((2, k), np.float32)
+    dcfg, tcfg = make_cfgs(k, streaming_fragments=2)
+    with pytest.raises(ValueError, match="nan_bombs"):
+        diloco.make_run(quad_loss, sample_all(k), dcfg, tcfg,
+                        rounds_per_call=2, total_steps=64,
+                        batch_size=2, seq_len=4, nan_bombs=bombs)
+
+
+# ---------------------------------------------------------------------------
+# host-side guard: rolling stats, verdicts, escalation bookkeeping
+# ---------------------------------------------------------------------------
+
+class StubRecorder:
+    def __init__(self):
+        self.events = []
+
+    def guard_event(self, *, action, round, **fields):
+        self.events.append({"action": action, "round": round, **fields})
+
+
+def test_guard_config_validation():
+    with pytest.raises(ValueError, match="window"):
+        GuardConfig(window=0)
+    with pytest.raises(ValueError, match="spike"):
+        GuardConfig(spike=0.0)
+    with pytest.raises(ValueError, match="min_history"):
+        GuardConfig(min_history=0)
+    with pytest.raises(ValueError, match="max_rollbacks"):
+        GuardConfig(max_rollbacks=-1)
+
+
+def test_non_finite_loss_trips_immediately():
+    g = AnomalyGuard(GuardConfig())
+    v = g.observe(0, float("nan"))
+    assert v == {**v, "ok": False, "reason": "non_finite"}
+    assert g.observe(1, float("inf"))["reason"] == "non_finite"
+    # the window never saw the anomalies
+    assert math.isnan(g.stats()[0])
+
+
+def test_spike_needs_history_and_spares_the_baseline():
+    cfg = GuardConfig(window=8, spike=4.0, min_history=4)
+    g = AnomalyGuard(cfg)
+    # too little history: even a huge loss passes (cold start)
+    assert g.observe(0, 100.0)["ok"]
+    for r in range(1, 4):
+        assert g.observe(r, 100.0 + 0.1 * r)["ok"]
+    mean, std = g.stats()
+    v = g.observe(4, mean + 4.0 * max(std, cfg.min_std) + 1.0)
+    assert v == {**v, "ok": False, "reason": "spike"}
+    # the spike was NOT folded into the window: stats unchanged,
+    # so a normal follow-up round passes
+    assert g.stats() == (mean, std)
+    assert g.observe(5, mean)["ok"]
+
+
+def test_flat_window_cannot_hair_trigger():
+    # identical losses give std == 0; min_std floors the band so a
+    # microscopic wobble is not an anomaly
+    g = AnomalyGuard(GuardConfig(min_history=2, min_std=1e-3))
+    for r in range(4):
+        g.observe(r, 2.0)
+    assert g.observe(4, 2.0 + 1e-4)["ok"]
+
+
+def test_observe_chunk_returns_only_bad_verdicts():
+    g = AnomalyGuard(GuardConfig(min_history=2))
+    bad = g.observe_chunk(0, [3.0, 3.1, float("nan"), 3.2])
+    assert [v["round"] for v in bad] == [2]
+    assert bad[0]["reason"] == "non_finite"
+    assert [v["round"] for v in g.verdicts] == [0, 1, 2, 3]
+
+
+def test_rollback_budget_and_recorder_events():
+    rec = StubRecorder()
+    g = AnomalyGuard(GuardConfig(max_rollbacks=2), recorder=rec)
+    g.observe(5, float("nan"))
+    assert g.can_rollback()
+    g.rolled_back(to_round=4, skip_round=5)
+    g.rolled_back(to_round=4, skip_round=5)
+    assert not g.can_rollback()
+    assert g.rollbacks_used == 2 and g.skipped_rounds == {5}
+    actions = [e["action"] for e in rec.events]
+    assert actions == ["anomaly", "rollback", "rollback"]
+    assert rec.events[0]["reason"] == "non_finite"
+    assert rec.events[1] == {**rec.events[1], "round": 5,
+                             "restored_to": 4, "rollbacks_used": 1}
